@@ -1,0 +1,78 @@
+"""Shared benchmark utilities.
+
+Every benchmark mirrors one paper table/figure on the synthesized
+analogues of the paper's datasets (data/pointclouds.py).  Sizes are
+scaled for a single-CPU container via ``--scale``; relative comparisons
+(the paper's claims) are preserved.  Results land in results/bench/*.json
+and are rendered into EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Callable, Dict
+
+import numpy as np
+
+from repro.data import pointclouds
+
+RESULTS_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "results", "bench")
+
+DATASETS = ("susy", "chist", "songs", "fma")
+# The paper's per-dataset K in Tables III–VI.
+PAPER_K = {"susy": 1, "chist": 10, "songs": 1, "fma": 10}
+
+
+def parser(name: str) -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(name)
+    ap.add_argument("--scale", type=float, default=0.25,
+                    help="fraction of the (already laptop-scaled) dataset")
+    ap.add_argument("--datasets", nargs="*", default=list(DATASETS))
+    ap.add_argument("--trials", type=int, default=1)
+    ap.add_argument("--out", default=RESULTS_DIR)
+    return ap
+
+
+def load_dataset(name: str, scale: float) -> np.ndarray:
+    spec = pointclouds.SPECS[name]
+    n = max(int(spec.n_points * scale), 512)
+    return pointclouds.load(name, n_override=n)
+
+
+def timed_trials(fn: Callable[[], object], trials: int = 1,
+                 warmup: bool = True):
+    """Paper methodology: average over trials.  A warmup run (not
+    counted) absorbs jit compilation so the measured trials time the
+    query work, matching the paper's exclusion of one-time setup; every
+    trial blocks on device results."""
+    import jax
+    times = []
+    result = None
+    if warmup:
+        result = jax.block_until_ready(fn())
+    for _ in range(max(trials, 1)):
+        t0 = time.perf_counter()
+        result = jax.block_until_ready(fn())
+        times.append(time.perf_counter() - t0)
+    return float(np.mean(times)), result
+
+
+def save(name: str, record: Dict, out_dir: str = RESULTS_DIR) -> str:
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1, default=float)
+    print(f"[bench] wrote {path}")
+    return path
+
+
+def print_table(title: str, header, rows):
+    print(f"\n== {title} ==")
+    widths = [max(len(str(h)), *(len(str(r[i])) for r in rows))
+              for i, h in enumerate(header)]
+    print("  ".join(str(h).ljust(w) for h, w in zip(header, widths)))
+    for r in rows:
+        print("  ".join(str(c).ljust(w) for c, w in zip(r, widths)))

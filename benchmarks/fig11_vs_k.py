@@ -1,0 +1,53 @@
+"""Paper Fig. 11 — HYBRIDKNN-JOIN vs REFIMPL vs GPU-JOINLINEAR across K.
+
+The paper's headline: the hybrid beats the CPU-only reference on every
+dataset, 1.03×–2.56× depending on data properties and K, and the brute
+join is far slower than both.  ρ per (dataset, K) comes from the Fig.10
+procedure (ρ^Model measured at ρ=0.5)."""
+from __future__ import annotations
+
+from repro.core import HybridConfig, HybridKNNJoin, refimpl_knn, \
+    self_join_brute
+
+from benchmarks.common import load_dataset, parser, print_table, save, timed_trials
+
+K_SWEEP = (1, 5, 10, 25)
+
+
+def run(args):
+    rec = {}
+    rows = []
+    for ds in args.datasets:
+        pts = load_dataset(ds, args.scale)
+        for k in K_SWEEP:
+            base = HybridConfig(k=k, m=min(6, pts.shape[1]), rho=0.5)
+            _, probe = timed_trials(
+                lambda: HybridKNNJoin(base).join(pts), 1)
+            rho = probe.stats.rho_model                 # Fig 10 procedure
+            cfg = HybridConfig(k=k, m=min(6, pts.shape[1]), rho=rho)
+            _, hyb = timed_trials(
+                lambda: HybridKNNJoin(cfg).join(pts), args.trials)
+            t_hybrid = hyb.stats.response_time
+            refimpl_knn(pts, k=k, n_ranks=1)          # warm jit caches
+            ref, rank_times = refimpl_knn(pts, k=k, n_ranks=1)
+            t_ref = ref.stats.t_sparse
+            t_brute, _ = timed_trials(
+                lambda: self_join_brute(pts, k=k, kernel_mode="ref"),
+                args.trials)
+            speedup = t_ref / max(t_hybrid, 1e-12)
+            rows.append([ds, k, f"{rho:.2f}", f"{t_hybrid:.3f}s",
+                         f"{t_ref:.3f}s", f"{t_brute:.3f}s",
+                         f"{speedup:.2f}x"])
+            rec[f"{ds}/k{k}"] = {
+                "rho": rho, "t_hybrid_s": t_hybrid, "t_refimpl_s": t_ref,
+                "t_brute_s": t_brute, "speedup_vs_refimpl": speedup,
+            }
+    print_table("Fig 11 analogue: hybrid vs refimpl vs brute",
+                ["dataset", "K", "ρ", "hybrid", "refimpl", "brute",
+                 "speedup"], rows)
+    save("fig11_vs_k", rec, args.out)
+    return rec
+
+
+if __name__ == "__main__":
+    run(parser("fig11").parse_args())

@@ -1,0 +1,38 @@
+"""Paper Fig. 6 — REFIMPL scalability (speedup vs rank count).
+
+The paper's 16-rank MPI reference reaches 10–12.3× on 16 cores with
+round-robin query partitioning.  On this single-CPU container we measure
+the *load-balance* component faithfully: each simulated rank's share is
+timed, speedup = Σ t_rank / max t_rank (perfect balance ⇒ linear)."""
+from __future__ import annotations
+
+from repro.core import refimpl_knn
+
+from benchmarks.common import load_dataset, parser, print_table, save
+
+RANKS = (1, 2, 4, 8, 16)
+
+
+def run(args):
+    rec = {}
+    rows = []
+    datasets = [d for d in args.datasets if d in ("susy", "fma")]
+    for ds in datasets:                      # paper plots lowest/highest dim
+        pts = load_dataset(ds, args.scale)
+        row = [ds]
+        for p in RANKS:
+            refimpl_knn(pts, k=5, n_ranks=p)          # warm the jit caches
+            res, rank_times = refimpl_knn(pts, k=5, n_ranks=p)
+            speedup = sum(rank_times) / max(max(rank_times), 1e-12)
+            row.append(f"{speedup:.2f}x")
+            rec[f"{ds}/p{p}"] = {"rank_times": rank_times,
+                                 "speedup": speedup}
+        rows.append(row)
+    print_table("Fig 6 analogue: REFIMPL load-balance speedup vs |p|",
+                ["dataset"] + [f"p={p}" for p in RANKS], rows)
+    save("fig6_refimpl_scaling", rec, args.out)
+    return rec
+
+
+if __name__ == "__main__":
+    run(parser("fig6").parse_args())

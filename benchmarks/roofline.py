@@ -1,0 +1,83 @@
+"""§Roofline aggregation: results/dryrun/*.json -> the per-cell table.
+
+Per (arch × shape × mesh): the three roofline terms in seconds, the
+dominant bottleneck, MODEL_FLOPS/analytic ratio, and bytes-per-device —
+rendered as markdown for EXPERIMENTS.md."""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "results", "dryrun")
+
+
+def load_records(dryrun_dir: str = DRYRUN_DIR):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_row(r) -> list:
+    rl = r.get("roofline", {})
+    ma = r.get("memory_analysis", {})
+    bound = rl.get("dominant", "-")
+    hbm_gib = (ma.get("argument_size_in_bytes", 0) +
+               ma.get("temp_size_in_bytes", 0) +
+               ma.get("output_size_in_bytes", 0)) / 2**30
+    return [
+        r["arch"], r["shape"], r["mesh"],
+        "OK" if r["ok"] else "FAIL",
+        f"{rl.get('t_compute_s', 0):.2e}",
+        f"{rl.get('t_memory_s', 0):.2e}",
+        f"{rl.get('t_collective_s', 0):.2e}",
+        bound,
+        f"{r.get('model_flops_ratio', 0):.2f}",
+        f"{hbm_gib:.1f}",
+    ]
+
+
+HEADER = ["arch", "shape", "mesh", "status", "t_compute", "t_memory",
+          "t_collective", "bound", "model/hlo", "GiB/dev"]
+
+
+def to_markdown(recs) -> str:
+    lines = ["| " + " | ".join(HEADER) + " |",
+             "|" + "---|" * len(HEADER)]
+    for r in recs:
+        lines.append("| " + " | ".join(str(c) for c in fmt_row(r)) + " |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=DRYRUN_DIR)
+    ap.add_argument("--markdown", default=None,
+                    help="write the markdown table here")
+    args = ap.parse_args()
+    recs = load_records(args.dir)
+    if not recs:
+        print("[roofline] no dry-run records found — run "
+              "`python -m repro.launch.dryrun --all` first")
+        return
+    md = to_markdown(recs)
+    print(md)
+    n_fail = sum(not r["ok"] for r in recs)
+    print(f"\n[roofline] {len(recs)} cells, {n_fail} failures")
+    by_bound = {}
+    for r in recs:
+        if r["ok"]:
+            b = r["roofline"]["dominant"]
+            by_bound[b] = by_bound.get(b, 0) + 1
+    print(f"[roofline] bottleneck census: {by_bound}")
+    if args.markdown:
+        with open(args.markdown, "w") as f:
+            f.write(md + "\n")
+
+
+if __name__ == "__main__":
+    main()

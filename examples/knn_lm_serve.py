@@ -1,0 +1,51 @@
+"""kNN-LM serving: the paper's join inside the LM serving path.
+
+Builds a datastore of (hidden, next-token) pairs from a small corpus,
+then serves batched requests where every decode step interpolates the
+LM distribution with the kNN distribution over retrieved continuations
+(λ·p_kNN + (1−λ)·p_LM).  Shows the memorization effect: with retrieval
+ON, prompts copied from the corpus continue with the memorized text.
+
+    PYTHONPATH=src python examples/knn_lm_serve.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import RetrievalConfig, get_smoke_config
+from repro.launch.serve import generate
+from repro.models import build_datastore, init_params
+
+
+def main():
+    cfg = dataclasses.replace(
+        get_smoke_config("olmo_1b"),
+        retrieval=RetrievalConfig(enabled=True, k=8, lam=0.9,
+                                  temperature=1.0))
+    params, _ = init_params(jax.random.PRNGKey(0), cfg)
+
+    rng = np.random.default_rng(0)
+    corpus = jnp.asarray(rng.integers(0, cfg.vocab_size, (6, 64)), jnp.int32)
+    ds = build_datastore(params, cfg, [corpus])
+    print(f"[knn-lm] datastore: {ds.size} (hidden, next-token) pairs, "
+          f"keys {ds.keys.shape}")
+
+    prompts = corpus[:4, :24]             # prefixes straight from the corpus
+    want = np.asarray(corpus[:4, 24:32])  # their memorized continuations
+
+    out_ret = np.asarray(generate(params, cfg, prompts, 8, ds=ds))
+    out_base = np.asarray(generate(params, cfg, prompts, 8, ds=None))
+
+    acc_ret = float((out_ret == want).mean())
+    acc_base = float((out_base == want).mean())
+    print(f"[knn-lm] continuation accuracy on memorized prompts:")
+    print(f"    retrieval ON  (λ={cfg.retrieval.lam}): {acc_ret:5.1%}")
+    print(f"    retrieval OFF                : {acc_base:5.1%}")
+    assert acc_ret > acc_base, "retrieval should help on memorized text"
+    print("[knn-lm] retrieval head improves memorized continuations ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Checkpoint substrate: async atomic saves, elastic restore."""
+from repro.checkpoint.manager import CheckpointManager, FORMAT_VERSION
+
+__all__ = ["CheckpointManager", "FORMAT_VERSION"]

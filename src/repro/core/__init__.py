@@ -1,0 +1,20 @@
+"""The paper's primary contribution: the hybrid KNN self-join.
+
+Public API:
+  HybridConfig, HybridKNNJoin, KNNResult   — paper Algorithm 1
+  refimpl_knn                              — REFIMPL baseline (§VI-C)
+  self_join_brute                          — GPU-JOINLINEAR baseline (§VI-D)
+  ring_self_join, hybrid_join_spmd         — distributed joins (§VII future work)
+"""
+from repro.core.hybrid import HybridConfig, HybridKNNJoin, JoinStats, KNNResult
+from repro.core.refimpl import refimpl_knn
+from repro.core.brute import brute_knn, self_join_brute
+from repro.core.distributed import hybrid_join_spmd, ring_self_join
+from repro.core import epsilon, grid, splitter
+
+__all__ = [
+    "HybridConfig", "HybridKNNJoin", "JoinStats", "KNNResult",
+    "refimpl_knn", "brute_knn", "self_join_brute",
+    "ring_self_join", "hybrid_join_spmd",
+    "epsilon", "grid", "splitter",
+]

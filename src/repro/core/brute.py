@@ -1,0 +1,71 @@
+"""Brute-force KNN (paper's GPU-JOINLINEAR baseline, §VI-D) and the exact
+fallback used by the sparse engine's certification misses.
+
+Streams the corpus in fixed chunks through the fused distance+top-K kernel,
+merging a running (Q, K) buffer — O(Q·K) memory, so "result set exceeds
+device memory" can never happen (contrast with the paper's failure-restart
+discussion §IV-B)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.knn_topk import ops as topk_ops
+from repro.utils import round_up
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "corpus_chunk", "kernel_mode")
+)
+def brute_knn(
+    corpus: jnp.ndarray,       # (N, n) — full database (reordered space ok)
+    queries: jnp.ndarray,      # (Q, n) — query points
+    query_ids: jnp.ndarray,    # (Q,) i32 — ids for self-exclusion (−1 = padding row)
+    *,
+    k: int,
+    corpus_chunk: int = 4096,
+    kernel_mode: str = "auto",
+):
+    """Exact K nearest neighbors of each query over the whole corpus.
+
+    Returns (dists (Q, k) squared-L2 ascending, ids (Q, k), −1-padded).
+    Padding query rows (query_ids < 0) produce garbage rows the caller masks.
+    """
+    n_corpus, dim = corpus.shape
+    n_q = queries.shape[0]
+    chunk = min(corpus_chunk, round_up(n_corpus, 8))
+    n_chunks = -(-n_corpus // chunk)
+    padded = n_chunks * chunk
+    corpus_p = jnp.zeros((padded, dim), corpus.dtype).at[:n_corpus].set(corpus)
+    corpus_ids = jnp.full((padded,), -1, jnp.int32).at[:n_corpus].set(
+        jnp.arange(n_corpus, dtype=jnp.int32)
+    )
+
+    run_d = jnp.full((n_q, k), jnp.inf, jnp.float32)
+    run_i = jnp.full((n_q, k), -1, jnp.int32)
+
+    def body(c, carry):
+        rd, ri = carry
+        sl = c * chunk
+        cpts = jax.lax.dynamic_slice_in_dim(corpus_p, sl, chunk, axis=0)
+        cids = jax.lax.dynamic_slice_in_dim(corpus_ids, sl, chunk, axis=0)
+        nd, ni = topk_ops.knn_topk(
+            queries, cpts, query_ids, cids, k=k, mode=kernel_mode
+        )
+        return topk_ops.merge_running_topk(rd, ri, nd, ni, k=k)
+
+    run_d, run_i = jax.lax.fori_loop(0, n_chunks, body, (run_d, run_i))
+    return run_d, run_i
+
+
+def self_join_brute(points: jnp.ndarray, *, k: int, corpus_chunk: int = 4096,
+                    kernel_mode: str = "auto"):
+    """GPU-JOINLINEAR: O(|D|²) self-join lower bound (one thread per query
+    point in the paper; one streamed corpus pass per query tile here)."""
+    ids = jnp.arange(points.shape[0], dtype=jnp.int32)
+    return brute_knn(
+        points, points, ids, k=k, corpus_chunk=corpus_chunk,
+        kernel_mode=kernel_mode,
+    )

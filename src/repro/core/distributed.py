@@ -1,0 +1,337 @@
+"""Distributed-memory KNN join — the paper's stated future work (§VII),
+delivered as shard_map programs that lower under the production meshes.
+
+Two strategies (DESIGN.md §2.4):
+
+  * ``ring_self_join`` — corpus sharded over the mesh; per-step each device
+    joins its query shard against the resident corpus shard (fused
+    streaming top-K), merges into a running buffer, and ``ppermute``s the
+    corpus shard one hop around the ring.  After P steps every query has
+    its exact global KNN.  Comm per device = |D|·n·4 bytes total, strictly
+    neighbor-to-neighbor (ICI-friendly); the merge of step i overlaps the
+    transfer for step i+1 (async dispatch).
+
+  * ``hybrid_join_spmd`` — the paper's hybrid split as a *static-shape*
+    SPMD step (dry-run / serving form): corpus replicated, queries sharded;
+    each device sorts its local queries by home-cell density (values are
+    data-dependent, shapes are not), routes the densest ``1−ρ`` fraction
+    through the dense engine and the rest through the sparse pyramid, then
+    resolves dense-engine failures through a fixed-capacity sparse lane.
+    Residual uncertified queries are flagged for the driver to re-issue
+    (at most one extra round — monitoring counters are returned).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import brute as brute_lib
+from repro.core import dense_join as dense_lib
+from repro.core import grid as grid_lib
+from repro.core import sparse_knn as sparse_lib
+from repro.core import splitter as split_lib
+from repro.kernels.knn_topk import ops as topk_ops
+
+
+# --------------------------------------------------------------------------
+# Ring-systolic exact join
+# --------------------------------------------------------------------------
+
+def ring_self_join(
+    mesh: Mesh,
+    axis_names: Sequence[str],
+    *,
+    k: int,
+    kernel_mode: str = "auto",
+    corpus_chunk: int = 4096,
+):
+    """Build the jitted ring join for ``mesh``; returns fn(points) ->
+    (dists (|D|, k) squared-L2, ids (|D|, k)).
+
+    ``points`` is logically global; in/out shardings split rows over
+    ``axis_names`` (all other mesh axes replicate).  Within each hop the
+    resident corpus shard streams through the fused top-K in
+    ``corpus_chunk`` slices, bounding the distance working set at
+    O(q_loc × corpus_chunk) (the Pallas kernel additionally tiles that
+    into VMEM on real hardware).
+    """
+    axes = tuple(axis_names)
+    n_shards = int(np.prod([mesh.shape[a] for a in axes]))
+    ring = [(i, (i + 1) % n_shards) for i in range(n_shards)]
+
+    def local(qpts, qids, cpts, cids):
+        # qpts (q_loc, n); cpts (c_loc, n) — resident shard, rotates.
+        # pcast: the running buffers are device-varying from step 1 on.
+        run_d = jax.lax.pcast(
+            jnp.full((qpts.shape[0], k), jnp.inf, jnp.float32), axes, to="varying"
+        )
+        run_i = jax.lax.pcast(
+            jnp.full((qpts.shape[0], k), -1, jnp.int32), axes, to="varying"
+        )
+        c_loc = cpts.shape[0]
+        chunk = min(corpus_chunk, c_loc)
+        n_chunks = -(-c_loc // chunk)
+
+        def hop(_, carry):
+            rd, ri, cp, ci = carry
+
+            def inner(j, acc):
+                rd, ri = acc
+                cj = jax.lax.dynamic_slice_in_dim(cp, j * chunk, chunk, 0)
+                ij = jax.lax.dynamic_slice_in_dim(ci, j * chunk, chunk, 0)
+                nd, ni = topk_ops.knn_topk(
+                    qpts, cj, qids, ij, k=k, mode=kernel_mode)
+                return topk_ops.merge_running_topk(rd, ri, nd, ni, k=k)
+
+            rd, ri = jax.lax.fori_loop(0, n_chunks, inner, (rd, ri))
+            # Rotate the corpus shard one hop; XLA overlaps this transfer
+            # with the next hop's compute (no data dependence until use).
+            cp = jax.lax.ppermute(cp, axes, ring)
+            ci = jax.lax.ppermute(ci, axes, ring)
+            return rd, ri, cp, ci
+
+        rd, ri, _, _ = jax.lax.fori_loop(
+            0, n_shards, hop, (run_d, run_i, cpts, cids)
+        )
+        return rd, ri
+
+    spec = P(axes)
+    shard_fn = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(spec, spec, spec, spec),
+        out_specs=(spec, spec),
+    )
+
+    @jax.jit
+    def join(points: jnp.ndarray):
+        ids = jnp.arange(points.shape[0], dtype=jnp.int32)
+        return shard_fn(points, ids, points, ids)
+
+    return join
+
+
+def ring_self_join_bf16(
+    mesh: Mesh,
+    axis_names: Sequence[str],
+    *,
+    k: int,
+    corpus_chunk: int = 4096,
+):
+    """Ring join with bf16 corpus shards on the wire (§Perf lever).
+
+    The rotating corpus shard is the only inter-device traffic; casting
+    it to bf16 halves the collective term.  Distances are accumulated in
+    f32 from bf16 coordinates (the knn_topk oracle upcasts), so ordering
+    error is bounded by bf16 key precision — the same trade the kNN-LM
+    datastore makes, and exactness-critical callers keep the f32 ring.
+
+    The loop carry is *bitcast to int16* so XLA cannot hoist the f32
+    upconversion above the ppermute (it otherwise folds the convert into
+    the carry and silently puts f32 back on the wire — observed, §Perf).
+    """
+    axes = tuple(axis_names)
+    n_shards = int(np.prod([mesh.shape[a] for a in axes]))
+    ring = [(i, (i + 1) % n_shards) for i in range(n_shards)]
+
+    def local(qpts, qids, cpts, cids):
+        run_d = jax.lax.pcast(
+            jnp.full((qpts.shape[0], k), jnp.inf, jnp.float32), axes,
+            to="varying")
+        run_i = jax.lax.pcast(
+            jnp.full((qpts.shape[0], k), -1, jnp.int32), axes, to="varying")
+        wire = jax.lax.bitcast_convert_type(
+            cpts.astype(jnp.bfloat16), jnp.int16)     # opaque wire format
+        c_loc = cpts.shape[0]
+        chunk = min(corpus_chunk, c_loc)
+        n_chunks = -(-c_loc // chunk)
+
+        def hop(_, carry):
+            rd, ri, cw, ci = carry
+            cp = jax.lax.bitcast_convert_type(cw, jnp.bfloat16) \
+                .astype(jnp.float32)
+
+            def inner(j, acc):
+                rd, ri = acc
+                cj = jax.lax.dynamic_slice_in_dim(cp, j * chunk, chunk, 0)
+                ij = jax.lax.dynamic_slice_in_dim(ci, j * chunk, chunk, 0)
+                nd, ni = topk_ops.knn_topk(qpts, cj, qids, ij, k=k,
+                                           mode="ref")
+                return topk_ops.merge_running_topk(rd, ri, nd, ni, k=k)
+
+            rd, ri = jax.lax.fori_loop(0, n_chunks, inner, (rd, ri))
+            cw = jax.lax.ppermute(cw, axes, ring)     # int16 on the wire
+            ci = jax.lax.ppermute(ci, axes, ring)
+            return rd, ri, cw, ci
+
+        rd, ri, _, _ = jax.lax.fori_loop(
+            0, n_shards, hop, (run_d, run_i, wire, cids))
+        return rd, ri
+
+    spec = P(axes)
+    shard_fn = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(spec, spec, spec, spec),
+        out_specs=(spec, spec))
+
+    @jax.jit
+    def join(points: jnp.ndarray):
+        ids = jnp.arange(points.shape[0], dtype=jnp.int32)
+        return shard_fn(points, ids, points, ids)
+
+    return join
+
+
+# --------------------------------------------------------------------------
+# Static-shape SPMD hybrid join (dry-run / serving form of the paper)
+# --------------------------------------------------------------------------
+
+class SPMDJoinResult(NamedTuple):
+    dists: jnp.ndarray        # (Q, k) squared L2
+    ids: jnp.ndarray          # (Q, k)
+    source: jnp.ndarray       # (Q,) 0=dense, 1=sparse, 2=fail-lane, 3=unresolved
+    n_unresolved: jnp.ndarray  # () i32 — driver re-issues these queries
+
+
+def hybrid_join_spmd(
+    mesh: Mesh,
+    query_axes: Sequence[str],
+    *,
+    k: int,
+    m: int = 6,
+    rho: float = 0.5,
+    dense_budget: int = 1024,
+    sparse_budget: int = 512,
+    query_block: int = 128,
+    n_levels: int = 3,
+    fail_lane_factor: float = 0.25,
+    brute_lane_factor: float = 0.25,
+    brute_chunk: int = 2048,
+):
+    """Build fn(points, epsilon) -> SPMDJoinResult for the production mesh.
+
+    The corpus (== query set; self-join) is replicated; query *processing*
+    is sharded over ``query_axes``.  The β/γ/ρ density split becomes a
+    rank-threshold on home-cell population per local shard: static shapes,
+    faithful routing semantics.
+    """
+    axes = tuple(query_axes)
+
+    def local(points, qids, epsilon):
+        # points replicated (|D|, n); qids (q_loc,) this device's queries.
+        points_r = points  # reordering is done by the caller (host, once)
+        index = grid_lib.build_grid(points_r, epsilon, m)
+        pyramid = sparse_lib.build_pyramid(points_r, epsilon, m, n_levels=n_levels)
+
+        q_loc = qids.shape[0]
+        n_dense = int((1.0 - rho) * q_loc) // query_block * query_block
+        n_dense = max(n_dense, 0)
+        n_sparse = q_loc - n_dense
+
+        # Density sort of the local queries (values dynamic, shapes static).
+        home = index.cell_counts[index.point_cell_pos[qids]]
+        order = jnp.argsort(-home, stable=True)
+        sorted_ids = qids[order]
+        dense_ids = sorted_ids[:n_dense]
+        sparse_ids = sorted_ids[n_dense:]
+
+        out_d = jnp.full((q_loc, k), jnp.inf, jnp.float32)
+        out_i = jnp.full((q_loc, k), -1, jnp.int32)
+        out_s = jnp.full((q_loc,), 3, jnp.int32)
+
+        if n_dense:
+            dres = dense_lib.dense_join(
+                index, points_r, dense_ids, epsilon,
+                k=k, budget=dense_budget, query_block=query_block,
+            )
+            rows = order[:n_dense]
+            ok = ~dres.failed
+            out_d = out_d.at[rows].set(jnp.where(ok[:, None], dres.dists, jnp.inf))
+            out_i = out_i.at[rows].set(jnp.where(ok[:, None], dres.ids, -1))
+            out_s = out_s.at[rows].set(jnp.where(ok, 0, 3))
+        else:
+            dres = None
+
+        sres = sparse_lib.sparse_knn(
+            pyramid, points_r, sparse_ids,
+            k=k, budget=sparse_budget, query_block=query_block,
+        )
+        rows = order[n_dense:]
+        out_d = out_d.at[rows].set(jnp.where(sres.certified[:, None], sres.dists, jnp.inf))
+        out_i = out_i.at[rows].set(jnp.where(sres.certified[:, None], sres.ids, -1))
+        out_s = out_s.at[rows].set(jnp.where(sres.certified, 1, 3))
+
+        # Fixed-capacity fail lane: dense failures re-tried on the pyramid.
+        if n_dense:
+            lane = max(query_block,
+                       int(fail_lane_factor * n_dense) // query_block * query_block)
+            failed = dres.failed
+            frank = jnp.cumsum(failed.astype(jnp.int32)) - 1
+            src_rows = order[:n_dense]
+            # Compact failed queries into the lane; the (lane+1)-th slot is
+            # an out-of-bounds drop target for non-failed entries.
+            slot = jnp.where(failed & (frank < lane), frank, lane)
+            lane_ids = jnp.full((lane,), -1, jnp.int32).at[slot].set(
+                dense_ids, mode="drop"
+            )
+            lane_rows = jnp.full((lane,), -1, jnp.int32).at[slot].set(
+                src_rows, mode="drop"
+            )
+            fres = sparse_lib.sparse_knn(
+                pyramid, points_r, lane_ids,
+                k=k, budget=sparse_budget, query_block=query_block,
+            )
+            good = fres.certified & (lane_ids >= 0)
+            safe_rows = jnp.where(good, lane_rows, q_loc)  # q_loc = drop slot
+            out_d = out_d.at[safe_rows].set(fres.dists, mode="drop")
+            out_i = out_i.at[safe_rows].set(fres.ids, mode="drop")
+            out_s = out_s.at[safe_rows].set(2, mode="drop")
+
+        # Brute lane: fixed-capacity exact backstop for whatever the grid
+        # engines could not certify (overflow/uncovered queries).
+        if brute_lane_factor > 0.0:
+            blane = max(query_block,
+                        int(brute_lane_factor * q_loc) // query_block * query_block)
+            pending = out_s == 3
+            prank = jnp.cumsum(pending.astype(jnp.int32)) - 1
+            slot = jnp.where(pending & (prank < blane), prank, blane)
+            rows_all = jnp.arange(q_loc, dtype=jnp.int32)
+            blane_ids = jnp.full((blane,), -1, jnp.int32).at[slot].set(
+                qids, mode="drop"
+            )
+            blane_rows = jnp.full((blane,), -1, jnp.int32).at[slot].set(
+                rows_all, mode="drop"
+            )
+            bq = points_r[jnp.clip(blane_ids, 0, points_r.shape[0] - 1)]
+            bd, bi = brute_lib.brute_knn(
+                points_r, bq, blane_ids, k=k, corpus_chunk=brute_chunk,
+            )
+            good = blane_ids >= 0
+            safe_rows = jnp.where(good, blane_rows, q_loc)
+            out_d = out_d.at[safe_rows].set(bd, mode="drop")
+            out_i = out_i.at[safe_rows].set(bi, mode="drop")
+            out_s = out_s.at[safe_rows].set(2, mode="drop")
+
+        unresolved = jax.lax.psum(
+            jnp.sum(out_s == 3).astype(jnp.int32), axes
+        )
+        return SPMDJoinResult(out_d, out_i, out_s, unresolved)
+
+    spec_q = P(axes)
+    shard_fn = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(), spec_q, P()),
+        out_specs=SPMDJoinResult(spec_q, spec_q, spec_q, P()),
+        check_vma=False,
+    )
+
+    @jax.jit
+    def join(points: jnp.ndarray, epsilon: jnp.ndarray):
+        qids = jnp.arange(points.shape[0], dtype=jnp.int32)
+        return shard_fn(points, qids, jnp.asarray(epsilon, jnp.float32))
+
+    return join

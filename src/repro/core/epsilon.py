@@ -1,0 +1,110 @@
+"""Empirical selection of the range-query distance ε (paper §V-C).
+
+Two sampling passes (the paper uses two GPU kernels; here they are two
+jitted programs whose hot loop is the ``bin_hist`` Pallas kernel on TPU and
+its jnp oracle elsewhere):
+
+  1. ``mean_pair_distance`` — sample point pairs, average distance → ε^mean.
+  2. ``distance_histogram`` — for a sample of query points, histogram the
+     distances to *all* points into ``n_bins`` bins of width ε^mean/n_bins
+     (distances > ε^mean discarded), then average per query and accumulate
+     → cumulative neighbor counts B^c_d.
+
+ε^β is the midpoint of the first bin whose cumulative count reaches
+``K + (100K − K)·β`` (β=0 ⇒ ε^default), and the final grid/query radius is
+ε = 2·ε^β so the ε^β-ball is circumscribed by one cell (paper Fig. 3).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bin_hist import ops as hist_ops
+
+
+class EpsilonSelection(NamedTuple):
+    epsilon: jnp.ndarray        # () f32 — final grid/query radius (= 2 ε^β)
+    epsilon_beta: jnp.ndarray   # () f32 — ε^β
+    epsilon_default: jnp.ndarray  # () f32 — ε^default (β = 0)
+    epsilon_mean: jnp.ndarray   # () f32 — mean pairwise distance (bin cutoff)
+    cumulative: jnp.ndarray     # (n_bins,) f32 — B^c_d, avg cumulative neighbors
+    bin_width: jnp.ndarray      # () f32
+
+
+@functools.partial(jax.jit, static_argnames=("n_samples",))
+def mean_pair_distance(points: jnp.ndarray, key: jax.Array, n_samples: int = 4096):
+    """ε^mean: mean Euclidean distance over sampled point pairs."""
+    npts = points.shape[0]
+    ka, kb = jax.random.split(key)
+    ia = jax.random.randint(ka, (n_samples,), 0, npts)
+    ib = jax.random.randint(kb, (n_samples,), 0, npts)
+    d = jnp.sqrt(jnp.sum((points[ia] - points[ib]) ** 2, axis=-1) + 1e-30)
+    keep = ia != ib
+    return jnp.sum(d * keep) / jnp.maximum(jnp.sum(keep), 1)
+
+
+@functools.partial(jax.jit, static_argnames=("n_query_sample", "n_bins"))
+def distance_histogram(
+    points: jnp.ndarray,
+    key: jax.Array,
+    epsilon_mean: jnp.ndarray,
+    n_query_sample: int = 256,
+    n_bins: int = 256,
+):
+    """Average cumulative neighbor count per distance bin (B^c_d).
+
+    Sampled queries are compared against the full database (the paper's
+    second kernel); distances ≥ ε^mean are discarded; self-pairs excluded.
+    """
+    npts = points.shape[0]
+    qidx = jax.random.randint(key, (n_query_sample,), 0, npts)
+    queries = points[qidx]
+    bin_width = epsilon_mean / n_bins
+    counts = hist_ops.distance_bin_histogram(
+        queries, points, bin_width, n_bins, self_indices=qidx
+    )  # (n_bins,) total counts over all sampled queries
+    per_query = counts.astype(jnp.float32) / n_query_sample
+    return jnp.cumsum(per_query), bin_width
+
+
+def _bin_for_target(cumulative: jnp.ndarray, bin_width: jnp.ndarray, target):
+    """Midpoint distance of the first bin where cumulative ≥ target
+    (B^c_{d-1} < target ≤ B^c_d); clamps to the last bin if unreachable."""
+    d = jnp.searchsorted(cumulative, jnp.asarray(target, cumulative.dtype))
+    d = jnp.clip(d, 0, cumulative.shape[0] - 1)
+    start = d.astype(bin_width.dtype) * bin_width
+    end = start + bin_width
+    return 0.5 * (start + end)
+
+
+def select_epsilon(
+    points: jnp.ndarray,
+    key: jax.Array,
+    k: int,
+    beta: float = 0.0,
+    n_query_sample: int = 256,
+    n_bins: int = 256,
+    n_pair_sample: int = 4096,
+) -> EpsilonSelection:
+    """Full paper §V-C2 procedure.  Pure function of the data sample."""
+    k1, k2 = jax.random.split(key)
+    eps_mean = mean_pair_distance(points, k1, n_samples=n_pair_sample)
+    cumulative, bin_width = distance_histogram(
+        points, k2, eps_mean, n_query_sample=n_query_sample, n_bins=n_bins
+    )
+    target_default = float(k)
+    # K + (100K − K)·β cumulative neighbors (paper's β parameterization).
+    target_beta = k + (100.0 * k - k) * beta
+    eps_default = _bin_for_target(cumulative, bin_width, target_default)
+    eps_beta = _bin_for_target(cumulative, bin_width, target_beta)
+    return EpsilonSelection(
+        epsilon=2.0 * eps_beta,
+        epsilon_beta=eps_beta,
+        epsilon_default=eps_default,
+        epsilon_mean=eps_mean,
+        cumulative=cumulative,
+        bin_width=bin_width,
+    )

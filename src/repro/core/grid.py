@@ -1,0 +1,232 @@
+"""Non-hierarchical ε-grid index (paper §IV-A) — TPU-native, fully jittable.
+
+The paper's GPU index stores non-empty cells only:
+  * ``B``: sorted array of non-empty linearized cell ids,
+  * ``G``: per-cell [start, count) ranges into
+  * ``A``: the cell-sorted permutation of the database D.
+
+We reproduce exactly that layout with fixed shapes (padded with sentinels)
+so index *search* lowers into gathers + vectorized binary searches — no
+pointer chasing, no data-dependent shapes.  Index *build* is a sort +
+segment reduction, also fixed-shape, so the whole index is buildable inside
+``jit`` (and therefore shardable / dry-runnable).
+
+TPU adaptation notes (DESIGN.md §2):
+  * cell ids are int32; per-dim cell counts are capped so the mixed-radix
+    product stays < 2**31.  When the cap binds, cell edges grow beyond ε —
+    this only *adds* candidates (coverage of the ε-ball is preserved
+    because the 3^m neighborhood of a cell with edge ≥ ε still contains
+    every point within distance ε in the projected space).
+  * only ``m ≤ n`` dimensions are indexed (paper §IV-C); distances are
+    always computed in full n dims, so correctness is unaffected.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.utils import INT32_SENTINEL, pytree_dataclass, static_field
+
+
+def neighbor_offsets(m: int) -> np.ndarray:
+    """All 3^m offsets in {-1, 0, 1}^m (static, tiny for m ≤ 6)."""
+    grids = np.meshgrid(*([np.array([-1, 0, 1])] * m), indexing="ij")
+    return np.stack([g.ravel() for g in grids], axis=-1).astype(np.int32)
+
+
+def max_cells_per_dim(m: int) -> int:
+    """Largest per-dim cell count such that the id space fits int32."""
+    return max(2, int((2.0**31 - 2.0) ** (1.0 / m)) - 1)
+
+
+@pytree_dataclass
+class GridIndex:
+    """ε-grid over the first ``m`` (variance-ordered) dims of the data.
+
+    All arrays have shapes that depend only on (|D|, m) — never on data
+    values — so the index is a well-formed pytree for jit/shard_map.
+    """
+
+    # --- static configuration -------------------------------------------
+    m: int = static_field()                 # number of indexed dims
+    n_points: int = static_field()          # |D|
+    # --- geometry ---------------------------------------------------------
+    epsilon: jnp.ndarray = None             # () f32 — cell edge target (= query radius)
+    mins: jnp.ndarray = None                # (m,) f32 grid origin
+    cell_edge: jnp.ndarray = None           # (m,) f32 actual edge (≥ epsilon)
+    cells_per_dim: jnp.ndarray = None       # (m,) i32
+    radices: jnp.ndarray = None             # (m,) i32 mixed-radix multipliers
+    # --- structure (paper's B / G / A arrays) ------------------------------
+    unique_cells: jnp.ndarray = None        # (|D|,) i32 sorted non-empty ids, sentinel-padded
+    cell_starts: jnp.ndarray = None         # (|D|,) i32 start in sorted order
+    cell_counts: jnp.ndarray = None         # (|D|,) i32 points in cell
+    n_cells: jnp.ndarray = None             # () i32 number of non-empty cells
+    order: jnp.ndarray = None               # (|D|,) i32 A: sorted-pos -> original id
+    point_cell_pos: jnp.ndarray = None      # (|D|,) i32 original id -> unique-cell slot
+    point_coords: jnp.ndarray = None        # (|D|, m) i32 original id -> cell coords
+    points_sorted: jnp.ndarray = None       # (|D|, n) f32 cell-sorted copy of D (locality)
+
+
+def compute_cell_coords(index: GridIndex, proj: jnp.ndarray) -> jnp.ndarray:
+    """(Q, m) float projected coords -> (Q, m) int32 cell coords (clipped)."""
+    c = jnp.floor((proj - index.mins[None, :]) / index.cell_edge[None, :])
+    return jnp.clip(c, 0, index.cells_per_dim[None, :] - 1).astype(jnp.int32)
+
+
+def linearize(coords: jnp.ndarray, radices: jnp.ndarray) -> jnp.ndarray:
+    """(..., m) int32 coords -> (...,) int32 linear cell ids."""
+    return jnp.sum(coords * radices, axis=-1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "materialize_points"))
+def build_grid(
+    points: jnp.ndarray, epsilon: jnp.ndarray, m: int,
+    materialize_points: bool = True,
+) -> GridIndex:
+    """Build the ε-grid over ``points[:, :m]``.
+
+    ``points`` must already be variance-reordered (see ``reorder_by_variance``);
+    we index the first m dims, which are then the highest-variance ones.
+    """
+    npts, n = points.shape
+    assert m <= n, (m, n)
+    proj = points[:, :m]
+
+    mins = jnp.min(proj, axis=0)
+    maxs = jnp.max(proj, axis=0)
+    extent = jnp.maximum(maxs - mins, 1e-30)
+
+    cap = max_cells_per_dim(m)
+    eps = jnp.asarray(epsilon, points.dtype)
+    # Cell edge: ε, unless the int32 id cap forces coarser cells.
+    edge = jnp.maximum(eps, extent / (cap - 1))
+    cells_per_dim = jnp.clip(
+        jnp.ceil(extent / edge).astype(jnp.int32) + 1, 1, cap
+    )
+    # Mixed-radix multipliers: radix[j] = prod_{k<j} cells[k]  (fits int32 by cap).
+    radices = jnp.concatenate(
+        [jnp.ones((1,), jnp.int32), jnp.cumprod(cells_per_dim)[:-1].astype(jnp.int32)]
+    )
+
+    index = GridIndex(
+        m=m, n_points=npts, epsilon=eps, mins=mins, cell_edge=edge,
+        cells_per_dim=cells_per_dim, radices=radices,
+        unique_cells=None, cell_starts=None, cell_counts=None, n_cells=None,
+        order=None, point_cell_pos=None, point_coords=None, points_sorted=None,
+    )
+
+    coords = compute_cell_coords(index, proj)                      # (|D|, m)
+    ids = linearize(coords, radices)                               # (|D|,)
+
+    order = jnp.argsort(ids, stable=True).astype(jnp.int32)        # A
+    ids_sorted = ids[order]
+
+    is_start = jnp.concatenate(
+        [jnp.ones((1,), bool), ids_sorted[1:] != ids_sorted[:-1]]
+    )
+    seg = jnp.cumsum(is_start) - 1                                 # sorted-pos -> cell slot
+    n_cells = seg[-1] + 1
+
+    size = npts
+    unique_cells = jnp.full((size,), INT32_SENTINEL, jnp.int32).at[seg].set(ids_sorted)
+    cell_starts = (
+        jnp.full((size,), size, jnp.int32).at[seg].min(jnp.arange(size, dtype=jnp.int32))
+    )
+    cell_counts = jnp.zeros((size,), jnp.int32).at[seg].add(1)
+
+    point_cell_pos = (
+        jnp.zeros((size,), jnp.int32).at[order].set(seg.astype(jnp.int32))
+    )
+
+    return dataclasses.replace(
+        index,
+        unique_cells=unique_cells,
+        cell_starts=cell_starts,
+        cell_counts=cell_counts,
+        n_cells=n_cells.astype(jnp.int32),
+        order=order,
+        point_cell_pos=point_cell_pos,
+        point_coords=coords,
+        points_sorted=points[order] if materialize_points else None,
+    )
+
+
+def lookup_cells(index: GridIndex, ids: jnp.ndarray):
+    """Binary-search linear cell ids in B.  Returns (starts, counts) with
+    count == 0 for empty / not-found cells.  ``ids`` any shape."""
+    pos = jnp.searchsorted(index.unique_cells, ids).astype(jnp.int32)
+    pos = jnp.clip(pos, 0, index.n_points - 1)
+    found = index.unique_cells[pos] == ids
+    starts = index.cell_starts[pos]
+    counts = jnp.where(found, index.cell_counts[pos], 0)
+    return starts, counts
+
+
+def neighbor_ranges(index: GridIndex, coords: jnp.ndarray):
+    """For query cell coords (Q, m) return candidate ranges over the 3^m
+    adjacent cells: (starts, counts), both (Q, 3^m) int32."""
+    offs = jnp.asarray(neighbor_offsets(index.m))                   # (R, m)
+    ncoords = coords[:, None, :] + offs[None, :, :]                 # (Q, R, m)
+    valid = jnp.all(
+        (ncoords >= 0) & (ncoords < index.cells_per_dim[None, None, :]), axis=-1
+    )
+    ids = linearize(ncoords, index.radices)
+    starts, counts = lookup_cells(index, ids)
+    return starts, jnp.where(valid, counts, 0)
+
+
+def neighborhood_counts(index: GridIndex, coords: jnp.ndarray) -> jnp.ndarray:
+    """Total candidate count in the 3^m neighborhood of each query (Q,)."""
+    _, counts = neighbor_ranges(index, coords)
+    return jnp.sum(counts, axis=-1)
+
+
+def gather_candidates(
+    index: GridIndex,
+    starts: jnp.ndarray,    # (Q, R)
+    counts: jnp.ndarray,    # (Q, R)
+    budget: int,
+):
+    """Expand per-query candidate ranges into fixed-budget index tiles.
+
+    Returns:
+      cand_sorted_pos: (Q, budget) int32 positions into the cell-sorted order
+                       (clipped; check ``valid``),
+      valid:           (Q, budget) bool,
+      total:           (Q,) int32 true candidate count,
+      overflow:        (Q,) bool — true count exceeded the budget (paper
+                       §V-E failure: such queries must be reassigned).
+    """
+    cum = jnp.cumsum(counts, axis=1)                                # (Q, R)
+    total = cum[:, -1]
+    slots = jnp.arange(budget, dtype=jnp.int32)                     # (budget,)
+
+    # For each slot j: which range does the j-th candidate fall into?
+    rr = jax.vmap(lambda c: jnp.searchsorted(c, slots, side="right"))(cum)
+    rr = jnp.clip(rr, 0, counts.shape[1] - 1).astype(jnp.int32)     # (Q, budget)
+    before = jnp.take_along_axis(
+        jnp.concatenate([jnp.zeros_like(cum[:, :1]), cum], axis=1), rr, axis=1
+    )
+    within = slots[None, :] - before
+    start = jnp.take_along_axis(starts, rr, axis=1)
+    pos = start + within
+    valid = slots[None, :] < jnp.minimum(total, budget)[:, None]
+    pos = jnp.clip(jnp.where(valid, pos, 0), 0, index.n_points - 1)
+    return pos.astype(jnp.int32), valid, total, total > budget
+
+
+def reorder_by_variance(points: jnp.ndarray):
+    """Paper §IV-D REORDER: permute dims by descending variance so the
+    indexed prefix (m dims) has maximal discriminatory power.
+
+    Returns (reordered_points, perm) — distances are permutation-invariant,
+    so downstream code works entirely in reordered space.
+    """
+    var = jnp.var(points, axis=0)
+    perm = jnp.argsort(-var, stable=True)
+    return points[:, perm], perm

@@ -1,0 +1,174 @@
+"""Sparse engine — TPU-native replacement for the paper's CPU EXACT-ANN.
+
+The paper hands low-density queries to a kd-tree (work-efficient, branchy —
+exactly what a TPU cannot run well).  We keep the *work bound* and drop the
+branches with a multi-resolution grid pyramid (DESIGN.md §2.2):
+
+  level ℓ = ε·2^ℓ grid, ℓ = 0..L−1.  A query reads its 3^m-neighborhood
+  population at every level (vectorized binary searches — regular), picks
+  the finest level with ≥ sel_factor·(K+1) candidates (a branch-free
+  ``argmax of first-true``), gathers that level's candidates under a fixed
+  budget, and runs one small distance+top-K.
+
+Exactness certificate: the 3^m neighborhood of a level-ℓ grid covers every
+point within cert_r(ℓ) = min_j cell_edge_ℓ_j of the query, so
+``found ≥ K ∧ kth_dist ≤ cert_r(ℓ) ∧ ¬overflow ⇒ exact KNN``.
+Queries missing the certificate fall back to the streamed brute scan
+(core/brute.py) — the result is always exact, like EXACT-ANN in exact mode.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import grid as grid_lib
+from repro.utils import round_up
+
+
+class Pyramid(NamedTuple):
+    levels: tuple                 # tuple[GridIndex] (no materialized points)
+    cert_radii: jnp.ndarray       # (L,) f32 — certified coverage radius per level
+
+
+@functools.partial(jax.jit, static_argnames=("m", "n_levels", "level_scale"))
+def build_pyramid(
+    points_r: jnp.ndarray, epsilon: jnp.ndarray, m: int, n_levels: int = 6,
+    level_scale: float = 2.0,
+) -> Pyramid:
+    """L stacked ε·scale^ℓ grids over the (already variance-reordered) data."""
+    levels = []
+    radii = []
+    for lvl in range(n_levels):
+        eps_l = jnp.asarray(epsilon, points_r.dtype) * (level_scale**lvl)
+        g = grid_lib.build_grid(points_r, eps_l, m, materialize_points=False)
+        levels.append(g)
+        radii.append(jnp.min(g.cell_edge))
+    return Pyramid(levels=tuple(levels), cert_radii=jnp.stack(radii))
+
+
+class SparseKNNResult(NamedTuple):
+    dists: jnp.ndarray        # (Q, K) f32 squared L2 ascending, inf-padded
+    ids: jnp.ndarray          # (Q, K) i32, −1-padded
+    certified: jnp.ndarray    # (Q,) bool — exactness proven at chosen level
+    level: jnp.ndarray        # (Q,) i32 — pyramid level used
+    total_candidates: jnp.ndarray  # (Q,) i32 — work proxy (T₁ numerator)
+
+
+def _query_level(pyr: Pyramid, points_r, qids, safe, sel, k, budget):
+    """Gather + distance + top-K at per-query pyramid level ``sel`` (B,).
+
+    Returns (kd, ki, certified, overflow, total) — the certificate is
+    kth ≤ cert_r(sel)² with ≥ K found and no budget truncation."""
+    starts_l, counts_l = [], []
+    for g in pyr.levels:
+        coords = g.point_coords[safe]
+        s, c = grid_lib.neighbor_ranges(g, coords)
+        starts_l.append(s)
+        counts_l.append(c)
+    starts = jnp.stack(starts_l)                # (L, B, R)
+    counts = jnp.stack(counts_l)                # (L, B, R)
+
+    sel_starts = jnp.take_along_axis(starts, sel[None, :, None], axis=0)[0]
+    sel_counts = jnp.take_along_axis(counts, sel[None, :, None], axis=0)[0]
+
+    pos, valid, total, overflow = grid_lib.gather_candidates(
+        pyr.levels[0], sel_starts, sel_counts, budget
+    )                                            # positions in SELECTED level's order
+
+    orders = jnp.stack([g.order for g in pyr.levels])         # (L, |D|)
+    cand_ids = orders[sel[:, None], pos]                      # (B, budget)
+    cand_pts = points_r[cand_ids]                             # (B, budget, n)
+    qpts = points_r[safe]
+
+    diff = qpts[:, None, :] - cand_pts
+    d2 = jnp.sum(diff * diff, axis=-1)
+    keep = valid & (cand_ids != qids[:, None])
+    d2m = jnp.where(keep, d2, jnp.inf)
+
+    neg, selk = jax.lax.top_k(-d2m, k)
+    kd = -neg
+    ki = jnp.where(jnp.isinf(kd), -1, jnp.take_along_axis(cand_ids, selk, axis=1))
+
+    found = jnp.sum(jnp.isfinite(kd), axis=1)
+    cert_r = pyr.cert_radii[sel]
+    certified = (
+        (found >= k) & (kd[:, k - 1] <= cert_r**2) & ~overflow & (qids >= 0)
+    )
+    return kd, ki, certified, overflow, total.astype(jnp.int32)
+
+
+def _block_fn(pyr: Pyramid, points_r, k, budget, sel_factor):
+    """Two-pass adaptive level search (the TPU kd-tree descent analogue).
+
+    Pass 1 picks the finest level whose *projected* 3^m-neighborhood holds
+    ≥ sel_factor·(K+1) candidates.  With m < n indexed dims that level can
+    under-cover the *full-dimension* KNN radius, so pass 2 escalates: the
+    pass-1 kth distance upper-bounds the true kth, and the first level
+    whose certified radius exceeds it provably contains the exact KNN —
+    one extra gather certifies it (absent budget overflow).
+    """
+    n_levels = len(pyr.levels)
+    npts = pyr.levels[0].n_points
+    cert_r2 = pyr.cert_radii**2                     # (L,) ascending
+
+    def fn(qids):
+        safe = jnp.clip(qids, 0, npts - 1)
+
+        # Level selection by projected candidate counts (cheap, regular).
+        totals = jnp.stack([
+            jnp.sum(grid_lib.neighbor_ranges(g, g.point_coords[safe])[1], axis=-1)
+            for g in pyr.levels
+        ])                                           # (L, B)
+        target = sel_factor * (k + 1)
+        enough = totals >= target
+        first = jnp.argmax(enough, axis=0).astype(jnp.int32)
+        sel1 = jnp.where(jnp.any(enough, axis=0), first, n_levels - 1)
+
+        kd1, ki1, cert1, _, tot1 = _query_level(
+            pyr, points_r, qids, safe, sel1, k, budget
+        )
+
+        # Escalation level: first ℓ with cert_r(ℓ)² ≥ pass-1 kth (∞ → coarsest).
+        kth1 = kd1[:, k - 1]
+        sel2 = jnp.searchsorted(cert_r2, kth1).astype(jnp.int32)
+        sel2 = jnp.clip(jnp.maximum(sel2, sel1), 0, n_levels - 1)
+
+        kd2, ki2, cert2, _, tot2 = _query_level(
+            pyr, points_r, qids, safe, sel2, k, budget
+        )
+
+        use1 = cert1[:, None]
+        kd = jnp.where(use1, kd1, kd2)
+        ki = jnp.where(use1, ki1, ki2)
+        certified = cert1 | cert2
+        level = jnp.where(cert1, sel1, sel2)
+        return kd, ki, certified, level, tot1 + jnp.where(cert1, 0, tot2)
+
+    return fn
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "budget", "query_block", "sel_factor")
+)
+def sparse_knn(
+    pyr: Pyramid,
+    points_r: jnp.ndarray,
+    query_ids: jnp.ndarray,   # (Qpad,) i32, −1 padding
+    *,
+    k: int,
+    budget: int = 512,
+    query_block: int = 128,
+    sel_factor: int = 4,
+) -> SparseKNNResult:
+    qpad = round_up(query_ids.shape[0], query_block)
+    qids = jnp.full((qpad,), -1, jnp.int32).at[: query_ids.shape[0]].set(query_ids)
+    blocks = qids.reshape(-1, query_block)
+    out = jax.lax.map(_block_fn(pyr, points_r, k, budget, sel_factor), blocks)
+    kd, ki, cert, lvl, total = jax.tree_util.tree_map(
+        lambda x: x.reshape((qpad,) + x.shape[2:]), out
+    )
+    n = query_ids.shape[0]
+    return SparseKNNResult(kd[:n], ki[:n], cert[:n], lvl[:n], total[:n])

@@ -1,0 +1,98 @@
+"""Dividing work between the two engines (paper §V-D/§V-F).
+
+The paper routes each query point to the GPU (dense engine) iff its home
+cell holds at least ``n_thresh`` points; ρ then forces a minimum fraction
+of queries onto the CPU (sparse engine), taking them from the least-dense
+cells.  We reproduce the arithmetic exactly; "GPU" / "CPU" become the MXU
+tile-join and pyramid-search pipelines (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import grid as grid_lib
+
+
+def n_min(k: int, m: int) -> float:
+    """Paper Eq. (1): minimum points per cell so that a query at the cell
+    center probabilistically finds K neighbors within ε^β.
+
+    n_min = (2ε^β)^m · K / ( π^{m/2} (ε^β)^m / Γ(m/2+1) )
+          = K · 2^m · Γ(m/2 + 1) / π^{m/2}        (ε^β cancels)
+
+    i.e. K scaled by the volume ratio of the m-cube to its inscribed
+    m-sphere.  When m < n dims are indexed, n → m (paper note (i)).
+    """
+    return k * (2.0**m) * math.gamma(m / 2.0 + 1.0) / (math.pi ** (m / 2.0))
+
+
+def n_thresh(k: int, m: int, gamma: float) -> float:
+    """n_thresh = n_min + (10·n_min − n_min)·γ  (paper §V-D)."""
+    base = n_min(k, m)
+    return base + (10.0 * base - base) * gamma
+
+
+def rho_model(t_sparse: float, t_dense: float) -> float:
+    """Paper Eq. (6): ρ^Model = T₂/(T₁+T₂) with T₁ = per-query sparse-engine
+    (CPU/EXACT-ANN) time and T₂ = per-query dense-engine (GPU-JOIN) time."""
+    denom = t_sparse + t_dense
+    if denom <= 0:
+        return 0.5
+    return t_dense / denom
+
+
+class WorkSplit(NamedTuple):
+    to_dense: jnp.ndarray      # (|D|,) bool — query goes to the dense engine
+    home_counts: jnp.ndarray   # (|D|,) i32 — population of each query's home cell
+    n_dense: jnp.ndarray       # () i32
+    n_sparse: jnp.ndarray      # () i32
+    threshold: jnp.ndarray     # () f32 — n_thresh actually applied
+
+
+def split_work(
+    index: grid_lib.GridIndex,
+    k: int,
+    gamma: float,
+    rho: float,
+) -> WorkSplit:
+    """Assign every query point to the dense or sparse engine.
+
+    1. density rule: dense iff |home cell| ≥ n_thresh(K, m, γ);
+    2. ρ floor (paper §V-F): if |Q^sparse| < ρ|D|, demote dense queries
+       from the least-populated cells until |Q^sparse| ≥ ρ|D| — exactly
+       the paper's "cells with the least number of points" rule.
+
+    Fully jittable: the demotion is a rank-threshold on home-cell counts
+    rather than a data-dependent loop.
+    """
+    npts = index.n_points
+    home_counts = index.cell_counts[index.point_cell_pos]       # (|D|,)
+    thresh = jnp.asarray(n_thresh(k, index.m, gamma), jnp.float32)
+    dense0 = home_counts.astype(jnp.float32) >= thresh
+
+    min_sparse = jnp.asarray(int(math.ceil(rho * npts)), jnp.int32)
+    n_sparse0 = jnp.sum(~dense0).astype(jnp.int32)
+    deficit = jnp.maximum(min_sparse - n_sparse0, 0)            # how many to demote
+
+    # Rank dense queries by home-cell population (ascending): the first
+    # ``deficit`` of them move to the sparse engine.  Implemented as a
+    # sort-position threshold so shapes stay static.
+    sort_key = jnp.where(dense0, home_counts, jnp.iinfo(jnp.int32).max)
+    order = jnp.argsort(sort_key, stable=True)
+    rank = jnp.zeros((npts,), jnp.int32).at[order].set(
+        jnp.arange(npts, dtype=jnp.int32)
+    )
+    demote = dense0 & (rank < deficit)
+    to_dense = dense0 & ~demote
+
+    return WorkSplit(
+        to_dense=to_dense,
+        home_counts=home_counts,
+        n_dense=jnp.sum(to_dense).astype(jnp.int32),
+        n_sparse=(npts - jnp.sum(to_dense)).astype(jnp.int32),
+        threshold=thresh,
+    )

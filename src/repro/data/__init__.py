@@ -1,0 +1,5 @@
+"""Data substrate: deterministic sharded LM pipeline + paper point clouds."""
+from repro.data.pipeline import PipelineState, TokenPipeline
+from repro.data import pointclouds
+
+__all__ = ["PipelineState", "TokenPipeline", "pointclouds"]

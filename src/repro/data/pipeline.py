@@ -1,0 +1,102 @@
+"""Deterministic, sharded, checkpointable synthetic data pipelines.
+
+Training at scale needs a pipeline whose state is (a) tiny (one integer),
+(b) exactly resumable after restart, and (c) identical regardless of how
+many hosts feed it.  We meet all three with counter-keyed PRNG synthesis:
+batch ``i`` is a pure function of ``(seed, i)`` — the checkpoint stores
+only the step cursor, and elastic restarts on a different mesh re-slice
+the same global batch.
+
+``TokenPipeline`` produces LM token batches (plus stub modality inputs
+for the audio/VLM archs); ``batch_for(cfg, shape)`` builds the matching
+batch for any (arch × shape) cell.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+@dataclasses.dataclass
+class PipelineState:
+    """The entire checkpointable state: a cursor."""
+    step: int = 0
+
+
+class TokenPipeline:
+    """Counter-keyed synthetic LM batches with a Zipf-ish unigram mix —
+    enough signal for loss-goes-down integration tests while staying
+    fully deterministic and restart-exact."""
+
+    def __init__(self, cfg: ModelConfig, shape: ShapeConfig, *, seed: int = 0,
+                 batch_override: Optional[int] = None,
+                 seq_override: Optional[int] = None):
+        self.cfg = cfg
+        self.batch = batch_override or shape.global_batch
+        self.seq = seq_override or shape.seq_len
+        self.seed = seed
+        self.state = PipelineState()
+
+    # -- synthesis -------------------------------------------------------
+
+    def _synth(self, step: int) -> Dict[str, np.ndarray]:
+        cfg = self.cfg
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step]))
+        v = cfg.vocab_size
+        s_text = self.seq
+        if cfg.n_patches:
+            s_text = max(self.seq - cfg.n_patches, 8)
+        # Zipf-ish unigram distribution + short-range repetition structure
+        ranks = np.arange(1, v + 1, dtype=np.float64)
+        probs = 1.0 / ranks
+        probs /= probs.sum()
+        toks = rng.choice(v, size=(self.batch, s_text + 1), p=probs)
+        rep = rng.random((self.batch, s_text + 1)) < 0.3
+        rep[:, 0] = False
+        idx = np.where(rep)
+        toks[idx] = toks[idx[0], idx[1] - 1]       # 30% copy-previous
+        batch: Dict[str, np.ndarray] = {
+            "tokens": toks[:, :-1].astype(np.int32),
+            "labels": toks[:, 1:].astype(np.int32),
+        }
+        if cfg.n_encoder_layers:
+            batch["frames"] = rng.standard_normal(
+                (self.batch, cfg.encoder_seq, cfg.d_model)).astype(np.float32)
+        if cfg.n_patches:
+            batch["patches"] = rng.standard_normal(
+                (self.batch, cfg.n_patches, cfg.patch_dim)).astype(np.float32)
+        return batch
+
+    # -- iteration -------------------------------------------------------
+
+    def next_batch(self, sharding=None) -> Dict[str, Any]:
+        """Next global batch; optionally placed with a NamedSharding."""
+        host = self._synth(self.state.step)
+        self.state.step += 1
+        if sharding is None:
+            return {k: jnp.asarray(v) for k, v in host.items()}
+        out = {}
+        for k, v in host.items():
+            shd = sharding if not isinstance(sharding, dict) else sharding[k]
+            out[k] = jax.device_put(jnp.asarray(v), shd)
+        return out
+
+    def peek(self, step: int) -> Dict[str, np.ndarray]:
+        """Batch ``step`` without advancing (determinism tests)."""
+        return self._synth(step)
+
+    # -- checkpointing ----------------------------------------------------
+
+    def state_dict(self) -> Dict[str, int]:
+        return {"step": self.state.step, "seed": self.seed}
+
+    def load_state_dict(self, d: Dict[str, int]):
+        assert d["seed"] == self.seed, "pipeline seed mismatch on restore"
+        self.state.step = int(d["step"])

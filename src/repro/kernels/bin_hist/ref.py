@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the distance-bin histogram kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("n_bins",))
+def distance_bin_histogram_ref(
+    queries: jnp.ndarray,
+    points: jnp.ndarray,
+    query_ids: jnp.ndarray,
+    point_ids: jnp.ndarray,
+    bin_width: jnp.ndarray,
+    *,
+    n_bins: int,
+) -> jnp.ndarray:
+    q = queries.astype(jnp.float32)
+    p = points.astype(jnp.float32)
+    diff = q[:, None, :] - p[None, :, :]
+    d = jnp.sqrt(jnp.maximum(jnp.sum(diff * diff, axis=-1), 0.0))
+    valid = (
+        (point_ids[None, :] >= 0)
+        & (query_ids[:, None] >= 0)
+        & (query_ids[:, None] != point_ids[None, :])
+    )
+    bins = jnp.floor(d / bin_width).astype(jnp.int32)
+    in_range = valid & (bins >= 0) & (bins < n_bins)
+    bins = jnp.where(in_range, bins, n_bins)
+    counts = jnp.zeros((n_bins + 1,), jnp.float32).at[bins.ravel()].add(1.0)
+    return counts[:n_bins]

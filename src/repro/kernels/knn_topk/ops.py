@@ -1,0 +1,69 @@
+"""Public wrapper for the fused streaming KNN top-K: padding, dispatch, and
+the log-depth merge that finishes the per-tile partial top-Ks."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import round_up
+from repro.kernels.knn_topk import kernel as _kernel
+from repro.kernels.knn_topk import ref as _ref
+
+
+def _use_pallas(mode: str) -> bool:
+    if mode == "auto":
+        return jax.default_backend() == "tpu"
+    return mode in ("pallas", "interpret")
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "block_q", "block_c", "mode")
+)
+def knn_topk(
+    queries: jnp.ndarray,      # (Q, D)
+    candidates: jnp.ndarray,   # (C, D)
+    query_ids: jnp.ndarray,    # (Q,) i32
+    cand_ids: jnp.ndarray,     # (C,) i32, −1 = invalid row
+    *,
+    k: int,
+    block_q: int = 128,
+    block_c: int = 256,
+    mode: str = "auto",
+):
+    """Exact K nearest candidates per query (self/invalid excluded).
+
+    Returns (dists (Q, k) f32 ascending — squared L2 — and ids (Q, k) i32,
+    −1 where fewer than k candidates exist)."""
+    if not _use_pallas(mode):
+        return _ref.knn_topk_ref(queries, candidates, query_ids, cand_ids, k=k)
+
+    q_n, d = queries.shape
+    c_n, _ = candidates.shape
+    qp = round_up(max(q_n, 1), block_q)
+    cp = round_up(max(c_n, 1), block_c)
+    q = jnp.zeros((qp, d), queries.dtype).at[:q_n].set(queries)
+    c = jnp.zeros((cp, d), candidates.dtype).at[:c_n].set(candidates)
+    qid = jnp.full((qp,), -1, jnp.int32).at[:q_n].set(query_ids.astype(jnp.int32))
+    cid = jnp.full((cp,), -1, jnp.int32).at[:c_n].set(cand_ids.astype(jnp.int32))
+
+    pd, pi = _kernel.knn_tile_topk(
+        q, c, qid, cid, k=k, block_q=block_q, block_c=block_c,
+        interpret=(mode == "interpret"),
+    )                                                   # (nC, Qp, k) each
+    dists, ids = _ref.merge_topk_ref(pd, pi, k=k)
+    return dists[:q_n], ids[:q_n]
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def merge_running_topk(
+    run_d: jnp.ndarray, run_i: jnp.ndarray,
+    new_d: jnp.ndarray, new_i: jnp.ndarray, *, k: int,
+):
+    """Merge two (Q, k) top-K buffers into one (used by the ring join —
+    each ppermute step merges the incoming shard's local top-K)."""
+    d = jnp.concatenate([run_d, new_d], axis=1)
+    i = jnp.concatenate([run_i, new_i], axis=1)
+    neg, pos = jax.lax.top_k(-d, k)
+    return -neg, jnp.take_along_axis(i, pos, axis=1)

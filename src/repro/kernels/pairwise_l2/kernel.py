@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: tiled pairwise squared-L2 distances (the paper's
+"filtering" hot spot, recast for the MXU — DESIGN.md §2.1).
+
+``dist²(q, c) = ‖q‖² + ‖c‖² − 2·q·cᵀ`` so the inner loop of the join is a
+(TQ×TD)·(TD×TC) matmul on the systolic array plus rank-1 row/col updates on
+the VPU.  The grid is (query tiles × candidate tiles × d-chunks); the
+d-chunk axis accumulates into the output block, so the full (Q, C) matrix
+is built tile-by-tile with VMEM-resident operands.
+
+TSTATIC/TDYNAMIC (paper §V-G) map to the (block_q, block_c) tile shape —
+``block_c`` plays "threads per query point" (candidates processed per step
+per query).  ``benchmarks/table3_granularity.py`` sweeps it.
+
+SHORTC (paper §IV-E) appears as an optional *tile-level* short circuit:
+when every partial distance in the tile already exceeds ε², remaining
+d-chunk accumulation for that tile is skipped.  Partial sums only grow, so
+a consumer that filters at ε² is unaffected (DESIGN.md §2.3).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _pairwise_kernel(q_ref, c_ref, out_ref, *, shortc_eps2: float | None):
+    kd = pl.program_id(2)
+
+    @pl.when(kd == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    def _accumulate():
+        q = q_ref[...].astype(jnp.float32)                 # (TQ, TD)
+        c = c_ref[...].astype(jnp.float32)                 # (TC, TD)
+        qq = jnp.sum(q * q, axis=1, keepdims=True)         # (TQ, 1)
+        cc = jnp.sum(c * c, axis=1, keepdims=True).T       # (1, TC)
+        qc = jax.lax.dot_general(
+            q, c, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )                                                  # (TQ, TC) on the MXU
+        out_ref[...] += qq + cc - 2.0 * qc
+
+    if shortc_eps2 is None:
+        _accumulate()
+    else:
+        # Tile-level SHORTC: partial sums are monotone non-decreasing, so if
+        # the smallest partial distance already exceeds ε² the whole tile is
+        # rejected by any ε-filtering consumer — skip the remaining chunks.
+        alive = jnp.logical_or(kd == 0, jnp.min(out_ref[...]) <= shortc_eps2)
+        pl.when(alive)(_accumulate)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_q", "block_c", "block_d", "shortc_eps2", "interpret"),
+)
+def pairwise_sq_l2(
+    queries: jnp.ndarray,     # (Q, D) — Q % block_q == 0, D % block_d == 0
+    candidates: jnp.ndarray,  # (C, D) — C % block_c == 0
+    *,
+    block_q: int = 128,
+    block_c: int = 128,
+    block_d: int = 128,
+    shortc_eps2: float | None = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Squared L2 distances (Q, C) in float32.  Inputs must be pre-padded
+    to tile multiples (see ops.py for the padding wrapper)."""
+    q_n, d = queries.shape
+    c_n, d2 = candidates.shape
+    assert d == d2, (d, d2)
+    assert q_n % block_q == 0 and c_n % block_c == 0 and d % block_d == 0
+
+    grid = (q_n // block_q, c_n // block_c, d // block_d)
+    kernel = functools.partial(_pairwise_kernel, shortc_eps2=shortc_eps2)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, block_d), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_c, block_d), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((block_q, block_c), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((q_n, c_n), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(queries, candidates)

@@ -1,0 +1,62 @@
+"""jit'd public wrapper for the pairwise-L2 kernel: padding + dispatch.
+
+Dispatch policy (shared by all kernel packages):
+  * ``mode="auto"``   — Pallas (compiled) on TPU, jnp oracle elsewhere.
+  * ``mode="pallas"`` — Pallas compiled (TPU only).
+  * ``mode="interpret"`` — Pallas in interpret mode (CPU validation path).
+  * ``mode="ref"``    — jnp oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import round_up
+from repro.kernels.pairwise_l2 import kernel as _kernel
+from repro.kernels.pairwise_l2 import ref as _ref
+
+
+def _use_pallas(mode: str) -> bool:
+    if mode == "auto":
+        return jax.default_backend() == "tpu"
+    return mode in ("pallas", "interpret")
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_q", "block_c", "block_d", "shortc_eps2", "mode"),
+)
+def pairwise_sq_l2(
+    queries: jnp.ndarray,
+    candidates: jnp.ndarray,
+    *,
+    block_q: int = 128,
+    block_c: int = 128,
+    block_d: int = 128,
+    shortc_eps2: float | None = None,
+    mode: str = "auto",
+) -> jnp.ndarray:
+    """Squared L2 distances (Q, C) float32 for arbitrary (unpadded) shapes.
+
+    Padded query/candidate rows never reach the caller (sliced off); padded
+    feature columns are zero so they contribute nothing to distances.
+    """
+    q_n, d = queries.shape
+    c_n, _ = candidates.shape
+    if not _use_pallas(mode):
+        return _ref.pairwise_sq_l2_ref(queries, candidates)
+
+    qp = round_up(max(q_n, 1), block_q)
+    cp = round_up(max(c_n, 1), block_c)
+    dp = round_up(max(d, 1), block_d)
+    q = jnp.zeros((qp, dp), queries.dtype).at[:q_n, :d].set(queries)
+    c = jnp.zeros((cp, dp), candidates.dtype).at[:c_n, :d].set(candidates)
+    out = _kernel.pairwise_sq_l2(
+        q, c,
+        block_q=block_q, block_c=block_c, block_d=block_d,
+        shortc_eps2=shortc_eps2,
+        interpret=(mode == "interpret"),
+    )
+    return out[:q_n, :c_n]

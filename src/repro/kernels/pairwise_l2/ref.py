@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the pairwise squared-L2 kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def pairwise_sq_l2_ref(queries: jnp.ndarray, candidates: jnp.ndarray) -> jnp.ndarray:
+    """(Q, D) × (C, D) -> (Q, C) squared L2, float32, numerically direct
+    (difference-then-square — the stable form the kernel is tested against)."""
+    q = queries.astype(jnp.float32)
+    c = candidates.astype(jnp.float32)
+    diff = q[:, None, :] - c[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+@jax.jit
+def pairwise_sq_l2_matmul_ref(queries: jnp.ndarray, candidates: jnp.ndarray) -> jnp.ndarray:
+    """Matmul-form oracle — bit-comparable to the kernel's arithmetic."""
+    q = queries.astype(jnp.float32)
+    c = candidates.astype(jnp.float32)
+    qq = jnp.sum(q * q, axis=1, keepdims=True)
+    cc = jnp.sum(c * c, axis=1, keepdims=True).T
+    return qq + cc - 2.0 * (q @ c.T)

@@ -1,0 +1,2 @@
+"""Launch layer: production meshes, the multi-pod dry-run, train/serve
+drivers, HLO + analytic roofline analysis."""

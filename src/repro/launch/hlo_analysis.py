@@ -1,0 +1,313 @@
+"""Post-compile HLO analysis: collective bytes + roofline terms.
+
+``cost_analysis()`` exposes FLOPs and HBM bytes but *not* collective
+traffic, so we parse the optimized (post-SPMD-partitioning) HLO text and
+sum the operand bytes of every collective op.  Shapes in that text are
+already per-device (partitioned), which is exactly the per-chip wire
+traffic the roofline's collective term wants.
+
+Hardware model (TPU v5e-like, per chip):
+    197 TFLOP/s bf16  ·  819 GB/s HBM  ·  ~50 GB/s/link ICI
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# Scheduled HLO prints ``%x = f32[2,4]{1,0} all-gather(%y), channel_id=...``:
+# RESULT shapes are typed, operands are bare names — so we parse the result
+# and derive operand bytes from each op's semantics + its group size.
+_OP_RE = re.compile(
+    r"=\s+(.*?)\b(" + "|".join(_COLLECTIVES) + r")(?:-start)?\(")
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_EXPL_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]*)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _group_size(line: str) -> int:
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _EXPL_GROUPS_RE.search(line)
+    if m:
+        ids = m.group(1)
+        return max(ids.count(",") + 1, 1) if ids else 1
+    return 1
+
+
+def _line_collective_bytes(op: str, result_prefix: str, line: str) -> int:
+    """Per-device operand bytes for one collective instruction."""
+    result = sum(_shape_bytes(sm.group(1), sm.group(2))
+                 for sm in _SHAPE_RE.finditer(result_prefix))
+    g = _group_size(line)
+    if op == "all-gather":
+        return result // max(g, 1)        # operand is 1/g of the gathered out
+    if op == "reduce-scatter":
+        return result * g                 # operand is g× the scattered out
+    # all-reduce / all-to-all / collective-permute: |operand| == |result|
+    return result
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum of operand bytes per collective op kind (per device, one
+    execution of each instruction — see trip-count correction in
+    ``analytic.py`` for collectives inside while loops)."""
+    out: Dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        if "-done" in line:
+            continue                       # count start, not completion
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        prefix, op = m.group(1), m.group(2)
+        out[op] += _line_collective_bytes(op, prefix, line)
+    out["total"] = sum(out[c] for c in _COLLECTIVES)
+    return out
+
+
+def collective_counts(hlo_text: str) -> Dict[str, int]:
+    out: Dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        if "-done" in line:
+            continue
+        m = _OP_RE.search(line)
+        if m:
+            out[m.group(2)] += 1
+    return out
+
+
+# --------------------------------------------------------------------------
+# while-loop trip-count correction
+# --------------------------------------------------------------------------
+# XLA's HloCostAnalysis (behind compiled.cost_analysis()) counts each while
+# body ONCE regardless of trip count — for a scan-over-layers model that
+# undercounts FLOPs/bytes by ~n_layers×, and the same applies to any
+# collective living inside a scanned body.  We recover trip counts from
+# the HLO text itself: a lax.scan lowers to ``while`` whose condition
+# compares the counter against a constant — the largest integer constant
+# in the cond computation is the trip count.  Execution multipliers then
+# propagate down the computation tree (body=×trip, to_apply/calls=×1).
+
+# Computation headers: ``%name (args...) -> type {`` — args may contain
+# nested parens (tuple types), so match greedily to the trailing "{".
+_COMPUTATION_HDR_RE = re.compile(
+    r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_CALLED_RE = re.compile(r"(?:to_apply|calls)=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+# XLA annotates statically-known loop bounds on the while instruction:
+# ``backend_config={..."known_trip_count":{"n":"126"}...}``
+_TRIP_RE = re.compile(r"known_trip_count[^0-9]*(\d+)")
+
+
+def _computation_spans(lines) -> Dict[str, tuple]:
+    spans: Dict[str, tuple] = {}
+    current, start, entry = None, 0, None
+    for i, ln in enumerate(lines):
+        s = ln.strip()
+        m = _COMPUTATION_HDR_RE.match(s)
+        if m:
+            if current is not None:
+                spans[current] = (start, i)
+            current, start = m.group(2), i
+            if m.group(1):
+                entry = current
+    if current is not None:
+        spans[current] = (start, len(lines))
+    spans["__entry__"] = entry
+    return spans
+
+
+def computation_multipliers(hlo_text: str) -> Dict[str, int]:
+    """Execution count of every computation relative to one entry call."""
+    lines = hlo_text.splitlines()
+    spans = _computation_spans(lines)
+    entry = spans.pop("__entry__")
+
+    def trip_of(cond_name: str) -> int:
+        span = spans.get(cond_name)
+        if not span:
+            return 1
+        best = 1
+        for ln in lines[span[0]:span[1]]:
+            for m in _CONST_RE.finditer(ln):
+                best = max(best, int(m.group(1)))
+        return best
+
+    # edges: computation -> [(child, multiplier)]
+    edges: Dict[str, list] = {name: [] for name in spans}
+    for name, (a, b) in spans.items():
+        for ln in lines[a:b]:
+            mb = _BODY_RE.search(ln)
+            if mb and " while(" in ln:
+                mt = _TRIP_RE.search(ln)          # XLA's own annotation
+                if mt:
+                    trip = int(mt.group(1))
+                else:                              # fallback: cond constant
+                    mc = _COND_RE.search(ln)
+                    trip = trip_of(mc.group(1)) if mc else 1
+                edges[name].append((mb.group(1), trip))
+                mc = _COND_RE.search(ln)
+                if mc:
+                    edges[name].append((mc.group(1), trip))
+                continue
+            for m in _CALLED_RE.finditer(ln):
+                edges[name].append((m.group(1), 1))
+
+    mult: Dict[str, int] = {}
+
+    def visit(name: str, m: int):
+        if name not in spans:
+            return
+        mult[name] = max(mult.get(name, 0), m)
+        for child, t in edges.get(name, []):
+            if child != name:
+                visit(child, m * t)
+
+    if entry:
+        visit(entry, 1)
+    for name in spans:                 # disconnected comps execute ≥ once
+        mult.setdefault(name, 1)
+    return mult
+
+
+def collective_bytes_weighted(hlo_text: str) -> Dict[str, int]:
+    """collective_bytes × true execution counts (scan bodies weighted by
+    their recovered trip counts) — the number the roofline's collective
+    term uses."""
+    lines = hlo_text.splitlines()
+    spans = _computation_spans(lines)
+    spans.pop("__entry__")
+    mults = computation_multipliers(hlo_text)
+    weight = [1] * len(lines)
+    for name, (a, b) in spans.items():
+        w = mults.get(name, 1)
+        for i in range(a, b):
+            weight[i] = w
+    out: Dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    for i, line in enumerate(lines):
+        if "-done" in line:
+            continue
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        prefix, op = m.group(1), m.group(2)
+        out[op] += _line_collective_bytes(op, prefix, line) * weight[i]
+    out["total"] = sum(out[c] for c in _COLLECTIVES)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    """Three-term roofline for one compiled (arch × shape × mesh) cell."""
+    flops_per_device: float
+    hbm_bytes_per_device: float
+    collective_bytes_per_device: float
+    chips: int
+    links_per_chip: float = 4.0       # v5e 2D torus: 4 ICI links/chip
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes_per_device / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes_per_device / (ICI_BW * self.links_per_chip)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_time(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops_per_device,
+            "hbm_bytes_per_device": self.hbm_bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "chips": self.chips,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+        }
+
+
+def memory_analysis_dict(compiled) -> dict:
+    """compiled.memory_analysis() fields, defensively (backend-dependent)."""
+    out = {}
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # noqa: BLE001
+        return {"error": repr(e)}
+    if ma is None:
+        return {"unavailable": True}
+    for f in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+              "output_size_in_bytes", "alias_size_in_bytes",
+              "temp_size_in_bytes", "host_generated_code_size_in_bytes",
+              "host_argument_size_in_bytes", "host_output_size_in_bytes",
+              "host_alias_size_in_bytes", "host_temp_size_in_bytes"):
+        v = getattr(ma, f, None)
+        if v is not None:
+            out[f] = int(v)
+    return out
+
+
+def cost_analysis_dict(compiled) -> dict:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception as e:  # noqa: BLE001
+        return {"error": repr(e)}
+    if ca is None:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return {k: float(v) for k, v in dict(ca).items()
+            if isinstance(v, (int, float))}
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS: 6·N·D for training, 2·N·D for inference
+    (N = active params, D = processed tokens)."""
+    n_active = cfg.n_active_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shape.global_batch            # decode: one token per sequence
+    return 2.0 * n_active * tokens

@@ -1,0 +1,215 @@
+"""Step-function builders shared by train.py, serve.py and dryrun.py.
+
+Each builder returns ``(fn, in_specs, in_shardings)`` where ``in_specs``
+are ShapeDtypeStruct pytrees (weak-type-correct, no allocation) suitable
+for ``jax.jit(fn, ...).lower(*in_specs)`` — the multi-pod dry-run path —
+and equally for real execution with concrete arrays.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer
+from repro.optim import OptConfig, adamw_update, init_opt_state
+from repro.sharding import ShardingCtx
+
+F32, I32 = jnp.float32, jnp.int32
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig,
+                *, with_labels: bool = True) -> Dict[str, Any]:
+    """ShapeDtypeStructs for one global batch of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    s_text = s - cfg.n_patches if cfg.n_patches else s
+    out = {"tokens": _sds((b, s_text), I32)}
+    if with_labels:
+        out["labels"] = _sds((b, s_text), I32)
+    if cfg.n_encoder_layers:
+        out["frames"] = _sds((b, cfg.encoder_seq, cfg.d_model), F32)
+    if cfg.n_patches:
+        out["patches"] = _sds((b, cfg.n_patches, cfg.patch_dim), F32)
+    return out
+
+
+def params_specs(cfg: ModelConfig) -> Tuple[Any, Any]:
+    """(ShapeDtypeStruct tree, logical-spec tree) without allocation."""
+    box = {}
+
+    def capture(key):
+        p, s = transformer.init_params(key, cfg)
+        box["s"] = s
+        return p
+
+    shapes = jax.eval_shape(capture, jax.random.PRNGKey(0))
+    return shapes, box["s"]
+
+
+def state_specs(cfg: ModelConfig, opt_cfg: OptConfig):
+    """Train state = params + AdamW moments, as specs."""
+    p_shapes, p_specs = params_specs(cfg)
+    opt_shapes = jax.eval_shape(
+        lambda: init_opt_state(p_shapes, opt_cfg))
+    opt_specs = {
+        "mu": p_specs, "nu": p_specs, "count": (),
+    }
+    return {"params": p_shapes, "opt": opt_shapes}, \
+        {"params": p_specs, "opt": opt_specs}
+
+
+def _tree_shardings(shd: ShardingCtx, shapes, specs):
+    return shd.param_shardings(shapes, specs)
+
+
+def _batch_shardings(shd: ShardingCtx, batch):
+    out = {}
+    for k, v in batch.items():
+        names = ["act_batch"] + [None] * (len(v.shape) - 1)
+        out[k] = shd.named(names, v.shape)
+    return out
+
+
+# --------------------------------------------------------------------------
+# train
+# --------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, opt_cfg: OptConfig,
+                    shd: ShardingCtx, grad_shardings=None):
+    """(state, batch) -> (state, metrics) with cfg.micro_steps gradient
+    accumulation (activation-memory lever for the 100B+ cells).
+
+    ``grad_shardings`` (a NamedSharding tree matching params) pins the
+    gradients to the parameter layout: the backward of a scanned layer
+    stack otherwise materializes *replicated* f32 per-layer grads and
+    all-reduces them whole (measured ~3 TB/device/step on llama3-405b —
+    §Perf); constraining the grad output makes GSPMD keep the per-layer
+    reduction sharded (reduce-scatter form)."""
+    micro = max(cfg.micro_steps, 1)
+
+    def loss_of(params, batch):
+        return transformer.loss_fn(params, cfg, batch, shd)
+
+    def pin(grads):
+        if grad_shardings is None:
+            return grads
+        return jax.tree.map(
+            lambda g, s: jax.lax.with_sharding_constraint(g, s),
+            grads, grad_shardings)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if micro == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_of, has_aux=True)(params, batch)
+            grads = pin(grads)
+        else:
+            def split(x):
+                return x.reshape((micro, x.shape[0] // micro) + x.shape[1:])
+            micro_batches = jax.tree.map(split, batch)
+
+            def acc_step(carry, mb):
+                gacc, lacc = carry
+                (l, m), g = jax.value_and_grad(
+                    loss_of, has_aux=True)(params, mb)
+                g = pin(g)
+                gacc = jax.tree.map(
+                    lambda a, gi: a + gi.astype(jnp.float32) / micro,
+                    gacc, g)
+                return (gacc, lacc + l / micro), m
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), ms = jax.lax.scan(
+                acc_step, (g0, jnp.zeros((), jnp.float32)), micro_batches)
+            metrics = jax.tree.map(lambda x: x[-1], ms)
+        new_params, new_opt, om = adamw_update(
+            grads, state["opt"], params, opt_cfg)
+        return {"params": new_params, "opt": new_opt}, \
+            {"loss": loss, **metrics, **om}
+
+    return train_step
+
+
+def build_train(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                opt_cfg: Optional[OptConfig] = None):
+    """Returns (jitted_or_lowerable_fn, example_in_specs, in_shardings)."""
+    opt_cfg = opt_cfg or OptConfig(moment_dtype=cfg.opt_state_dtype)
+    shd = ShardingCtx.for_mesh(mesh, fsdp=cfg.fsdp, seq_shard=cfg.seq_shard)
+    st_shapes, st_specs = state_specs(cfg, opt_cfg)
+    st_shard = _tree_shardings(shd, st_shapes, st_specs)
+    b_specs = batch_specs(cfg, shape)
+    b_shard = _batch_shardings(shd, b_specs)
+    fn = make_train_step(cfg, opt_cfg, shd,
+                         grad_shardings=st_shard["params"])
+    return fn, (st_shapes, b_specs), (st_shard, b_shard)
+
+
+# --------------------------------------------------------------------------
+# serve: prefill
+# --------------------------------------------------------------------------
+
+def build_prefill(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    shd = ShardingCtx.for_mesh(mesh, fsdp=cfg.fsdp, seq_shard=cfg.seq_shard)
+    p_shapes, p_specs = params_specs(cfg)
+    p_shard = _tree_shardings(shd, p_shapes, p_specs)
+    b = batch_specs(cfg, shape, with_labels=False)
+    b_shard = _batch_shardings(shd, b)
+    cache_len = shape.seq_len
+
+    def prefill_fn(params, batch):
+        return transformer.prefill(
+            params, cfg, batch["tokens"], cache_len, shd,
+            frames=batch.get("frames"), patches=batch.get("patches"))
+
+    return prefill_fn, (p_shapes, b), (p_shard, b_shard)
+
+
+# --------------------------------------------------------------------------
+# serve: decode
+# --------------------------------------------------------------------------
+
+def cache_shapes_and_shardings(cfg: ModelConfig, batch: int, cache_len: int,
+                               shd: ShardingCtx):
+    shapes = jax.eval_shape(
+        lambda: transformer.init_cache(cfg, batch, cache_len))
+    specs = transformer.cache_specs(cfg)
+    return shapes, _tree_shardings(shd, shapes, specs)
+
+
+def build_decode(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    """decode_* cells: one new token against a cache of seq_len."""
+    shd = ShardingCtx.for_mesh(mesh, fsdp=cfg.fsdp, seq_shard=cfg.seq_shard)
+    p_shapes, p_specs = params_specs(cfg)
+    p_shard = _tree_shardings(shd, p_shapes, p_specs)
+    b = shape.global_batch
+    c_shapes, c_shard = cache_shapes_and_shardings(
+        cfg, b, shape.seq_len, shd)
+    tok = _sds((b,), I32)
+    tok_shard = shd.named(["act_batch"], (b,))
+    pos = _sds((), I32)
+    pos_shard = NamedSharding(mesh, P())
+
+    def serve_step(params, token, cache, pos):
+        return transformer.decode_step(params, cfg, token, cache, pos, shd)
+
+    return serve_step, (p_shapes, tok, c_shapes, pos), \
+        (p_shard, tok_shard, c_shard, pos_shard)
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    """Dispatch on the cell kind: train / prefill / decode."""
+    if shape.kind == "train":
+        return build_train(cfg, shape, mesh)
+    if shape.kind == "prefill":
+        return build_prefill(cfg, shape, mesh)
+    return build_decode(cfg, shape, mesh)

@@ -1,0 +1,165 @@
+"""kNN-LM retrieval head — the paper's join as a first-class LM feature.
+
+At serve time the decoder's final hidden state queries a datastore of
+(hidden, next-token) pairs; the output distribution is
+
+    p(w) = λ · p_kNN(w)  +  (1 − λ) · p_LM(w),
+    p_kNN(w) ∝ Σ_{i : v_i = w} exp(−d_i² / T)          (Khandelwal et al.)
+
+The lookup engine *is* the paper's machinery (DESIGN.md §3.3):
+
+  * replicated datastore  -> the streamed fused-top-K dense engine
+    (``core.brute.brute_knn``: grid-free, MXU tile join — the hot serving
+    path for datastores that fit per-device HBM);
+  * sharded datastore     -> the ring-systolic join over the "model" mesh
+    axis (``sharded_lookup``): each device holds a datastore shard, the
+    query batch visits all shards via ppermute, exact global top-K.
+  * analytics / offline   -> ``HybridKNNJoin`` builds the datastore's own
+    self-join (e.g. datastore dedup), reusing β/γ/ρ untouched.
+
+Keys are stored in the *reordered, variance-ranked* space (§IV-D) and
+can be PCA-free dimension-truncated (m < n, §IV-C) — both paper
+optimizations apply verbatim to retrieval.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core import brute as brute_lib
+from repro.core import grid as grid_lib
+from repro.kernels.knn_topk import ops as topk_ops
+from repro.models import transformer
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Datastore:
+    keys: jnp.ndarray      # (N, d_key) float32, reordered space
+    values: jnp.ndarray    # (N,) int32 next-token ids
+    order: jnp.ndarray     # (d,) variance reorder permutation (§IV-D)
+
+    def tree_flatten(self):
+        return (self.keys, self.values, self.order), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def size(self) -> int:
+        return self.keys.shape[0]
+
+
+def build_datastore(params, cfg: ModelConfig, token_batches: Sequence,
+                    *, m_dims: Optional[int] = None) -> Datastore:
+    """Run the LM over token batches; collect (hidden_t -> token_{t+1})
+    pairs.  ``m_dims`` truncates keys to the top-variance dims (§IV-C:
+    index fewer dims, exactness preserved by re-ranking at full dim —
+    for retrieval the truncation is the approximation knob)."""
+    keys, vals = [], []
+    for tokens in token_batches:
+        hidden, _, _ = transformer.forward_seq(params, cfg, tokens)
+        keys.append(np.asarray(hidden[:, :-1].astype(jnp.float32))
+                    .reshape(-1, hidden.shape[-1]))
+        vals.append(np.asarray(tokens[:, 1:]).reshape(-1))
+    all_keys = jnp.asarray(np.concatenate(keys))
+    all_vals = jnp.asarray(np.concatenate(vals).astype(np.int32))
+    reordered, order = grid_lib.reorder_by_variance(all_keys)
+    if m_dims is not None:
+        reordered = reordered[:, :m_dims]
+    return Datastore(keys=reordered, values=all_vals, order=order)
+
+
+def _project(ds: Datastore, queries: jnp.ndarray) -> jnp.ndarray:
+    """Apply the datastore's REORDER permutation (+ truncation) to queries."""
+    q = queries.astype(jnp.float32)[:, ds.order]
+    return q[:, : ds.keys.shape[1]]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "corpus_chunk"))
+def lookup(ds: Datastore, queries: jnp.ndarray, *, k: int,
+           corpus_chunk: int = 4096) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Replicated-datastore lookup: (d² (B,k), values (B,k))."""
+    q = _project(ds, queries)
+    qids = ds.size + jnp.arange(q.shape[0], dtype=jnp.int32)  # no self-excl.
+    d2, ids = brute_lib.brute_knn(ds.keys, q, qids, k=k,
+                                  corpus_chunk=corpus_chunk)
+    vals = ds.values[jnp.clip(ids, 0, ds.size - 1)]
+    vals = jnp.where(ids >= 0, vals, -1)
+    return d2, vals
+
+
+def sharded_lookup(mesh: Mesh, axis: str, *, k: int):
+    """Ring lookup for datastores sharded over ``axis`` (the corpus shard
+    rotates; queries stay resident — exact global top-K in
+    ``mesh.shape[axis]`` neighbor-to-neighbor hops)."""
+    n_shards = mesh.shape[axis]
+    ring = [(i, (i + 1) % n_shards) for i in range(n_shards)]
+
+    def local(q, keys, vals):
+        run_d = jax.lax.pcast(
+            jnp.full((q.shape[0], k), jnp.inf, jnp.float32), axis, to="varying")
+        run_v = jax.lax.pcast(
+            jnp.full((q.shape[0], k), -1, jnp.int32), axis, to="varying")
+
+        def step(_, carry):
+            rd, rv, ks, vs = carry
+            qids = vs.shape[0] * n_shards + jnp.arange(
+                q.shape[0], dtype=jnp.int32)
+            nd, ni = topk_ops.knn_topk(
+                q, ks, qids, jnp.arange(ks.shape[0], dtype=jnp.int32), k=k)
+            nv = jnp.where(ni >= 0, vs[jnp.clip(ni, 0, vs.shape[0] - 1)], -1)
+            rd, rv = topk_ops.merge_running_topk(rd, rv, nd, nv, k=k)
+            ks = jax.lax.ppermute(ks, axis, ring)
+            vs = jax.lax.ppermute(vs, axis, ring)
+            return rd, rv, ks, vs
+
+        rd, rv, _, _ = jax.lax.fori_loop(
+            0, n_shards, step, (run_d, run_v, keys, vals))
+        return rd, rv
+
+    shard_fn = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(), P(axis), P(axis)),
+        out_specs=(P(), P()),
+        check_vma=False)   # after a full ring rotation every device holds
+    return shard_fn        # the identical exact top-K (invariance by
+                           # construction, not statically provable)
+
+
+def knn_probs(d2: jnp.ndarray, vals: jnp.ndarray, vocab: int,
+              temperature: float) -> jnp.ndarray:
+    """Scatter exp(−d²/T) onto the vocabulary.  (B,k) -> (B,V)."""
+    w = jax.nn.softmax(jnp.where(vals >= 0, -d2 / temperature, -jnp.inf),
+                       axis=-1)
+    w = jnp.where(vals >= 0, w, 0.0)
+    b, k = vals.shape
+    out = jnp.zeros((b, vocab), jnp.float32)
+    rows = jnp.broadcast_to(jnp.arange(b)[:, None], (b, k))
+    return out.at[rows, jnp.clip(vals, 0, vocab - 1)].add(w)
+
+
+def decode_step_retrieval(params, cfg: ModelConfig, token, cache, pos,
+                          ds: Datastore, shd=None):
+    """transformer.decode_step + kNN interpolation (serving hot path).
+
+    One pass through the stack: the final-norm hidden state is both the
+    unembed input (p_LM) and the retrieval query (p_kNN)."""
+    from repro.models import layers as L
+    rc = cfg.retrieval
+    hidden, new_cache = transformer.decode_step_hidden(
+        params, cfg, token, cache, pos, shd)
+    logits = L.unembed(params["embed"], cfg, hidden[:, None])[:, 0]
+    p_lm = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    d2, vals = lookup(ds, hidden, k=rc.k)
+    p_knn = knn_probs(d2, vals, cfg.vocab_size, rc.temperature)
+    p = rc.lam * p_knn + (1.0 - rc.lam) * p_lm
+    return jnp.log(jnp.maximum(p, 1e-20)), new_cache

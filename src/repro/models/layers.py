@@ -1,0 +1,568 @@
+"""Shared NN layers for the architecture zoo, with logical-axis sharding.
+
+Parameters are plain nested dicts of jnp arrays; every init returns
+``(params, specs)`` where ``specs`` mirrors the structure with tuples of
+*logical* axis names ("embed", "heads", "mlp", "vocab", "experts", ...).
+``sharding.resolve_specs`` maps logical names onto mesh axes per run config
+(TP over "model", optional FSDP over "data"), dropping axes that do not
+divide — so e.g. GQA KV heads replicate automatically when kv < tp.
+
+All attention/MLP math follows the assigned architectures:
+  * GQA with grouped einsums (no KV head repetition in HBM),
+  * optional qk-norm (qwen3), non-parametric LN (olmo), LayerNorm+GELU
+    (whisper), local windowed attention (recurrentgemma),
+  * RoPE everywhere (adaptation note: whisper's learned positions are
+    replaced by RoPE to keep one attention implementation — recorded in
+    DESIGN.md assumptions),
+  * decode paths with in-place KV caches; local attention uses a
+    ring-buffer cache of size ``window`` (O(1) memory at 500k context).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+Params = Dict[str, Any]
+Specs = Dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# init helpers
+# --------------------------------------------------------------------------
+
+def _normal(key, shape, scale, dtype):
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+def dense_init(key, shape, axes, dtype, fan_in=None):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    scale = 1.0 / math.sqrt(max(fan_in, 1))
+    return _normal(key, shape, scale, dtype), tuple(axes)
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+def init_norm(cfg: ModelConfig, dtype):
+    if cfg.nonparam_norm:
+        return {}, {}
+    p = {"scale": jnp.ones((cfg.d_model,), dtype)}
+    s = {"scale": ("embed",)}
+    if cfg.use_layernorm:
+        p["bias"] = jnp.zeros((cfg.d_model,), dtype)
+        s["bias"] = ("embed",)
+    return p, s
+
+
+def apply_norm(params, cfg: ModelConfig, x):
+    xf = x.astype(jnp.float32)
+    if cfg.use_layernorm or cfg.nonparam_norm:
+        mean = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mean) * jax.lax.rsqrt(var + 1e-6)
+    else:  # RMSNorm
+        out = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + 1e-6)
+    if params and "scale" in params:
+        out = out * params["scale"].astype(jnp.float32)
+    if params and "bias" in params:
+        out = out + params["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def rms_head_norm(x, scale):
+    """Per-head RMS norm for qk-norm (qwen3); x (..., hd)."""
+    xf = x.astype(jnp.float32)
+    out = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + 1e-6)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# rotary position embeddings
+# --------------------------------------------------------------------------
+
+def rope_angles(positions: jnp.ndarray, head_dim: int, theta: float):
+    """positions (...,) -> (cos, sin), each (..., head_dim//2) f32."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray):
+    """x (..., S, nh, hd); cos/sin (..., S, hd//2) broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# attention (GQA; global / local / cross; train + decode)
+# --------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, dtype, cross: bool = False):
+    d, h, g, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 6)
+    p, s = {}, {}
+    p["wq"], s["wq"] = dense_init(ks[0], (d, h, hd), ("embed", "heads", "head_dim"), dtype)
+    p["wk"], s["wk"] = dense_init(ks[1], (d, g, hd), ("embed", "kv_heads", "head_dim"), dtype)
+    p["wv"], s["wv"] = dense_init(ks[2], (d, g, hd), ("embed", "kv_heads", "head_dim"), dtype)
+    p["wo"], s["wo"] = dense_init(
+        ks[3], (h, hd, d), ("heads", "head_dim", "embed"), dtype, fan_in=h * hd
+    )
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+        s["q_norm"] = ("head_dim",)
+        s["k_norm"] = ("head_dim",)
+    return p, s
+
+
+def _qkv(params, cfg: ModelConfig, x, kv_input, positions, kv_positions,
+         use_rope: bool):
+    h, g, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("btd,dgk->btgk", kv_input, params["wk"])
+    v = jnp.einsum("btd,dgk->btgk", kv_input, params["wv"])
+    if "q_norm" in params:
+        q = rms_head_norm(q, params["q_norm"])
+        k = rms_head_norm(k, params["k_norm"])
+    if use_rope:
+        qc, qs = rope_angles(positions, hd, cfg.rope_theta)
+        kc, ks_ = rope_angles(kv_positions, hd, cfg.rope_theta)
+        q = apply_rope(q, qc, qs)
+        k = apply_rope(k, kc, ks_)
+    return q, k, v
+
+
+def _gqa_attend(cfg: ModelConfig, q, k, v, mask):
+    """q (B,S,H,hd), k/v (B,T,G,hd), mask (B,S,T) or (S,T) bool (True=keep)."""
+    h, g, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    rep = h // g
+    b, sq = q.shape[0], q.shape[1]
+    qg = q.reshape(b, sq, g, rep, hd)
+    logits = jnp.einsum("bsgrk,btgk->bgrst", qg, k).astype(jnp.float32)
+    logits = logits / math.sqrt(hd)
+    if mask.ndim == 2:
+        mask = mask[None]
+    logits = jnp.where(mask[:, None, None, :, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bgrst,btgk->bsgrk", probs, v)
+    return out.reshape(b, sq, h, hd)
+
+
+def _flash_attend(cfg: ModelConfig, q, k, v, *, kind: str,
+                  q_chunk: int, kv_chunk: int, causal_skip: bool,
+                  shd=None):
+    """Chunked online-softmax attention — the (S,T) logits tensor is never
+    materialized (peak B·qc·kc per step).  Pure XLA; the Pallas analogue
+    would fuse the same loop into VMEM, but this form is what the dry-run
+    lowers for every long-context cell.
+
+    With ``causal_skip`` the Python loop over q chunks only visits kv
+    chunks at or below the diagonal — statically halving attention FLOPs
+    for causal masks (§Perf hillclimb lever; exact, not approximate).
+    """
+    h, g, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    rep = h // g
+    b, s = q.shape[0], q.shape[1]
+    t = k.shape[1]
+    causal = kind in ("attn", "local")
+    scale = 1.0 / math.sqrt(hd)
+
+    qc = min(q_chunk, s)
+    kc = min(kv_chunk, t)
+    n_q = -(-s // qc)
+    n_kv_total = -(-t // kc)
+    s_pad, t_pad = n_q * qc, n_kv_total * kc
+    if s_pad != s:
+        q = jnp.pad(q, ((0, 0), (0, s_pad - s), (0, 0), (0, 0)))
+    if t_pad != t:
+        k = jnp.pad(k, ((0, 0), (0, t_pad - t), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, t_pad - t), (0, 0), (0, 0)))
+    if shd is not None:
+        # Pin attention internals to the HEAD-sharded layout for the whole
+        # chunk loop.  Without this GSPMD re-shards q/k/v between the SP
+        # (sequence) and TP (head) layouts on every kv chunk — measured as
+        # 9 TB/device/step of all-to-alls on llama3-405b (§Perf).
+        q = shd.constrain(q, "act_batch", None, "act_heads", None)
+        k = shd.constrain(k, "act_batch", None, "kv_heads", None)
+        v = shd.constrain(v, "act_batch", None, "kv_heads", None)
+    qg = q.reshape(b, n_q, qc, g, rep, hd)
+    kg = k.reshape(b, n_kv_total, kc, g, hd)
+    vg = v.reshape(b, n_kv_total, kc, g, hd)
+
+    outs = []
+    for i in range(n_q):
+        q_i = qg[:, i]                              # (B, qc, G, rep, hd)
+        q_pos = i * qc + jnp.arange(qc)
+        n_kv = -(-min((i + 1) * qc, t) // kc) if (causal and causal_skip) \
+            else n_kv_total
+
+        m0 = jnp.full((b, g, rep, qc), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, g, rep, qc), jnp.float32)
+        a0 = jnp.zeros((b, g, rep, qc, hd), jnp.float32)
+
+        def step(carry, inp):
+            m, l, acc = carry
+            k_j, v_j, j = inp
+            kv_pos = j * kc + jnp.arange(kc)
+            logits = jnp.einsum(
+                "bqgrk,btgk->bgrqt", q_i, k_j,
+                preferred_element_type=jnp.float32) * scale
+            mask = kv_pos[None, :] < t
+            if causal:
+                mask = mask & (q_pos[:, None] >= kv_pos[None, :])
+            if kind == "local" and cfg.window:
+                mask = mask & (q_pos[:, None] - kv_pos[None, :] < cfg.window)
+            logits = jnp.where(mask[None, None, None], logits, -1e30)
+            m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(logits - m_new[..., None])
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bgrqt,btgk->bgrqk", p.astype(v_j.dtype), v_j,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        ks = jnp.moveaxis(kg[:, :n_kv], 1, 0)
+        vs = jnp.moveaxis(vg[:, :n_kv], 1, 0)
+        js = jnp.arange(n_kv)
+        (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (ks, vs, js))
+        out_i = acc / jnp.maximum(l, 1e-30)[..., None]
+        # (B,G,rep,qc,hd) -> (B,qc,H,hd)
+        outs.append(jnp.moveaxis(out_i, 3, 1).reshape(b, qc, h, hd))
+    out = jnp.concatenate(outs, axis=1)[:, :s]
+    return out.astype(q.dtype)
+
+
+def attention_forward(
+    params, cfg: ModelConfig, x, *,
+    kind: str = "attn",              # attn | local | enc-attn (bidirectional)
+    encoder_out: Optional[jnp.ndarray] = None,   # cross-attention source
+    positions: Optional[jnp.ndarray] = None,
+    shd=None,
+):
+    """Full-sequence attention (train / prefill)."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    if encoder_out is not None:
+        t = encoder_out.shape[1]
+        kv_pos = jnp.arange(t)[None, :]
+        q, k, v = _qkv(params, cfg, x, encoder_out, positions, kv_pos, use_rope=False)
+        if cfg.attn_chunk and s > cfg.attn_chunk:
+            out = _flash_attend(cfg, q, k, v, kind="cross",
+                                q_chunk=cfg.attn_chunk, kv_chunk=cfg.attn_chunk,
+                                causal_skip=False, shd=shd)
+            return jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+        mask = jnp.ones((s, t), bool)
+    else:
+        q, k, v = _qkv(params, cfg, x, x, positions, positions, use_rope=True)
+        if cfg.attn_chunk and s > cfg.attn_chunk:
+            out = _flash_attend(cfg, q, k, v, kind=kind,
+                                q_chunk=cfg.attn_chunk, kv_chunk=cfg.attn_chunk,
+                                causal_skip=cfg.causal_skip, shd=shd)
+            return jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+        sq = jnp.arange(s)
+        if kind == "enc-attn":
+            mask = jnp.ones((s, s), bool)
+        elif kind == "local":
+            mask = (sq[:, None] >= sq[None, :]) & (sq[:, None] - sq[None, :] < cfg.window)
+        else:
+            mask = sq[:, None] >= sq[None, :]
+    out = _gqa_attend(cfg, q, k, v, mask)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+
+
+def attention_forward_collect(
+    params, cfg: ModelConfig, x, *, kind: str = "attn",
+    positions: Optional[jnp.ndarray] = None,
+    shd=None,
+):
+    """attention_forward that also returns the (roped) K/V for cache
+    construction during prefill.  Returns (out, (k, v))."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q, k, v = _qkv(params, cfg, x, x, positions, positions, use_rope=True)
+    if cfg.attn_chunk and s > cfg.attn_chunk:
+        out = _flash_attend(cfg, q, k, v, kind=kind,
+                            q_chunk=cfg.attn_chunk, kv_chunk=cfg.attn_chunk,
+                            causal_skip=cfg.causal_skip, shd=shd)
+    else:
+        sq = jnp.arange(s)
+        if kind == "local":
+            mask = (sq[:, None] >= sq[None, :]) & \
+                (sq[:, None] - sq[None, :] < cfg.window)
+        else:
+            mask = sq[:, None] >= sq[None, :]
+        out = _gqa_attend(cfg, q, k, v, mask)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"]), (k, v)
+
+
+def pad_cache(kv: jnp.ndarray, cache_len: int):
+    """Zero-pad a (B,S,G,hd) prefill K/V to the static cache length."""
+    s = kv.shape[1]
+    if s >= cache_len:
+        return kv[:, :cache_len]
+    return jnp.pad(kv, ((0, 0), (0, cache_len - s), (0, 0), (0, 0)))
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_seq: int, kind: str, dtype):
+    """Decode cache.  Local attention keeps only a window-sized ring."""
+    g, hd = cfg.n_kv_heads, cfg.hd
+    t = min(max_seq, cfg.window) if kind == "local" else max_seq
+    return {
+        "k": jnp.zeros((batch, t, g, hd), dtype),
+        "v": jnp.zeros((batch, t, g, hd), dtype),
+    }
+
+
+def attention_decode(
+    params, cfg: ModelConfig, x1, cache, pos, *,
+    kind: str = "attn",
+    encoder_out: Optional[jnp.ndarray] = None,
+    cross_cache: Optional[dict] = None,
+):
+    """One-token decode.  x1 (B,1,D); pos () i32 absolute position.
+    Returns (out (B,1,D), new_cache)."""
+    b = x1.shape[0]
+    hd = cfg.hd
+    posb = jnp.full((b, 1), pos, jnp.int32)
+    if encoder_out is not None or cross_cache is not None:
+        # Cross-attention: keys/values are static per request (precomputed
+        # by prefill into ``cross_cache``; recomputed here if absent).
+        if cross_cache is None:
+            t = encoder_out.shape[1]
+            kv_pos = jnp.arange(t)[None, :]
+            q, k, v = _qkv(params, cfg, x1, encoder_out, posb, kv_pos, use_rope=False)
+        else:
+            q, _, _ = _qkv(params, cfg, x1, x1[:, :1], posb, posb, use_rope=False)
+            k, v = cross_cache["k"], cross_cache["v"]
+        mask = jnp.ones((b, 1, k.shape[1]), bool)
+        out = _gqa_attend(cfg, q, k, v, mask)
+        return jnp.einsum("bshk,hkd->bsd", out, params["wo"]), cache
+
+    q, k1, v1 = _qkv(params, cfg, x1, x1, posb, posb, use_rope=True)
+    t_cache = cache["k"].shape[1]
+    slot = jnp.mod(pos, t_cache) if kind == "local" else pos
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k1, slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v1, slot, axis=1)
+    idx = jnp.arange(t_cache)
+    if kind == "local":
+        valid = idx[None, :] <= jnp.minimum(pos, t_cache - 1)
+        # ring buffer: every resident slot is within the window by design
+        mask = jnp.broadcast_to(valid, (b, 1, t_cache))
+    else:
+        mask = jnp.broadcast_to(idx[None, :] <= pos, (b, 1, t_cache))
+    out = _gqa_attend(cfg, q, ck, cv, mask)
+    return (
+        jnp.einsum("bshk,hkd->bsd", out, params["wo"]),
+        {"k": ck, "v": cv},
+    )
+
+
+def init_cross_cache(params, cfg: ModelConfig, encoder_out):
+    """Precompute decoder cross-attention K/V from encoder output."""
+    t = encoder_out.shape[1]
+    kv_pos = jnp.arange(t)[None, :]
+    k = jnp.einsum("btd,dgk->btgk", encoder_out, params["wk"])
+    v = jnp.einsum("btd,dgk->btgk", encoder_out, params["wv"])
+    return {"k": k, "v": v}
+
+
+# --------------------------------------------------------------------------
+# MLP (SwiGLU / GELU)
+# --------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p, s = {}, {}
+    if cfg.gelu_mlp:
+        p["w_in"], s["w_in"] = dense_init(ks[0], (d, f), ("embed", "mlp"), dtype)
+        p["w_out"], s["w_out"] = dense_init(ks[1], (f, d), ("mlp", "embed"), dtype)
+    else:
+        p["w_gate"], s["w_gate"] = dense_init(ks[0], (d, f), ("embed", "mlp"), dtype)
+        p["w_up"], s["w_up"] = dense_init(ks[1], (d, f), ("embed", "mlp"), dtype)
+        p["w_down"], s["w_down"] = dense_init(ks[2], (f, d), ("mlp", "embed"), dtype)
+    return p, s
+
+
+def apply_mlp(params, cfg: ModelConfig, x):
+    if cfg.gelu_mlp:
+        h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, params["w_in"]))
+        return jnp.einsum("bsf,fd->bsd", h, params["w_out"])
+    a = jnp.einsum("bsd,df->bsf", x, params["w_gate"])
+    u = jnp.einsum("bsd,df->bsf", x, params["w_up"])
+    return jnp.einsum("bsf,fd->bsd", jax.nn.silu(a) * u, params["w_down"])
+
+
+# --------------------------------------------------------------------------
+# Mixture of Experts (sort-based dispatch, capacity-bounded)
+# --------------------------------------------------------------------------
+
+def init_moe(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    e, f = cfg.moe.n_experts, cfg.moe.d_expert
+    ks = jax.random.split(key, 4)
+    p, s = {}, {}
+    p["router"], s["router"] = dense_init(ks[0], (d, e), ("embed", "experts"), dtype)
+    p["w_gate"], s["w_gate"] = dense_init(ks[1], (e, d, f), ("experts", "embed", "expert_mlp"), dtype, fan_in=d)
+    p["w_up"], s["w_up"] = dense_init(ks[2], (e, d, f), ("experts", "embed", "expert_mlp"), dtype, fan_in=d)
+    p["w_down"], s["w_down"] = dense_init(ks[3], (e, f, d), ("experts", "expert_mlp", "embed"), dtype, fan_in=f)
+    return p, s
+
+
+def _moe_dispatch(params, cfg: ModelConfig, xt, cap: int):
+    """Sort-based capacity-bounded top-k dispatch for a token block
+    xt (T, d).  The top-k select is the same primitive as the KNN join's
+    neighbor select — the router is a 1-NN-per-expert-centroid special
+    case (DESIGN.md §3.3).  Returns (out (T, d), aux ())."""
+    t, d = xt.shape
+    e, k_top = cfg.moe.n_experts, cfg.moe.top_k
+
+    logits = jnp.einsum("td,de->te", xt, params["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eidx = jax.lax.top_k(probs, k_top)                     # (T, K)
+    gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+
+    # Switch-style load-balance aux loss.
+    density = jnp.mean(
+        jax.nn.one_hot(eidx[:, 0], e, dtype=jnp.float32), axis=0
+    )
+    density_proxy = jnp.mean(probs, axis=0)
+    aux = jnp.sum(density * density_proxy) * e
+
+    flat_e = eidx.reshape(-1)                                      # (T*K,)
+    flat_t = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k_top)
+    flat_g = gates.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sg = flat_e[order], flat_t[order], flat_g[order]
+    starts = jnp.searchsorted(se, jnp.arange(e, dtype=se.dtype))
+    pos_in_e = jnp.arange(t * k_top, dtype=jnp.int32) - starts[se].astype(jnp.int32)
+    keep = pos_in_e < cap
+    slot = jnp.where(keep, se.astype(jnp.int32) * cap + pos_in_e, e * cap)
+
+    buf = jnp.zeros((e * cap, d), xt.dtype).at[slot].set(xt[st], mode="drop")
+    h = buf.reshape(e, cap, d)
+    a = jnp.einsum("ecd,edf->ecf", h, params["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", h, params["w_up"])
+    o = jnp.einsum("ecf,efd->ecd", jax.nn.silu(a) * u, params["w_down"])
+    of = o.reshape(e * cap, d)
+
+    contrib = jnp.where(
+        keep[:, None], of[jnp.clip(slot, 0, e * cap - 1)], 0.0
+    ) * sg[:, None].astype(xt.dtype)
+    out = jnp.zeros((t, d), xt.dtype).at[st].add(contrib)
+    return out, aux
+
+
+def _moe_cap(cfg: ModelConfig, t: int) -> int:
+    cap = int(math.ceil(t * cfg.moe.top_k / cfg.moe.n_experts *
+                        cfg.moe.capacity_factor))
+    return max(8, -(-cap // 8) * 8)
+
+
+def apply_moe(params, cfg: ModelConfig, x, shd=None):
+    """MoE layer over x (B,S,D).  Two dispatch strategies:
+
+    * global (baseline): one capacity buffer over all B·S tokens.  Under
+      GSPMD the (e·cap, d) scatter target is replicated, so every data
+      shard's contribution is combined with a giant all-reduce — the
+      collective-bound pathology the granite/qwen3-moe prefill dry-runs
+      expose (EXPERIMENTS.md §Perf).
+    * sharded (``cfg.moe_sharded_dispatch``): tokens are split into one
+      chunk per data shard (leading dim constrained to the data axes),
+      each chunk dispatches into its OWN capacity buffer, and only the
+      expert einsum crosses the mesh (the proper EP all-to-all, ~tokens
+      ·k·d bytes instead of e·cap·d per layer).
+    """
+    b, s_, d = x.shape
+    t = b * s_
+    n_chunks = 1
+    if cfg.moe_sharded_dispatch and shd is not None and shd.mesh is not None:
+        from repro.sharding import data_axis_names, axis_size
+        n_data = axis_size(shd.mesh, data_axis_names(shd.mesh))
+        if n_data > 1 and t % n_data == 0:
+            n_chunks = n_data
+
+    if n_chunks == 1:
+        out, aux = _moe_dispatch(params, cfg, x.reshape(t, d),
+                                 _moe_cap(cfg, t))
+        return out.reshape(b, s_, d), aux
+
+    xc = x.reshape(n_chunks, t // n_chunks, d)
+    if shd is not None:
+        xc = shd.constrain(xc, "act_batch", None, "act_embed")
+    cap = _moe_cap(cfg, t // n_chunks)
+    out, aux = jax.vmap(
+        lambda xi: _moe_dispatch(params, cfg, xi, cap))(xc)
+    if shd is not None:
+        out = shd.constrain(out, "act_batch", None, "act_embed")
+    return out.reshape(b, s_, d), jnp.mean(aux)
+
+
+# --------------------------------------------------------------------------
+# embeddings / unembedding
+# --------------------------------------------------------------------------
+
+def init_embeddings(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 2)
+    p, s = {}, {}
+    p["tok"], s["tok"] = dense_init(
+        ks[0], (cfg.vocab_size, cfg.d_model), ("vocab", "embed"), dtype,
+        fan_in=cfg.d_model,
+    )
+    if not cfg.tie_embeddings:
+        p["unembed"], s["unembed"] = dense_init(
+            ks[1], (cfg.d_model, cfg.vocab_size), ("embed", "vocab"), dtype
+        )
+    return p, s
+
+
+def embed(params, cfg: ModelConfig, tokens):
+    return params["tok"][tokens].astype(jnp.dtype(cfg.dtype))
+
+
+def unembed(params, cfg: ModelConfig, x):
+    w = params["tok"].T if cfg.tie_embeddings else params["unembed"]
+    return jnp.einsum("bsd,dv->bsv", x, w)
+
+
+def chunked_xent(logits_fn, x, labels, mask, chunk: int = 512):
+    """Cross-entropy over sequence chunks so the (B, S, V) logits tensor is
+    never fully materialized (peak B·chunk·V) — §Perf memory lever."""
+    b, s, _ = x.shape
+    chunk = min(chunk, s)
+    n_chunks = -(-s // chunk)
+    pad = n_chunks * chunk - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    xc = jnp.moveaxis(x.reshape(b, n_chunks, chunk, -1), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(b, n_chunks, chunk), 1, 0)
+    mc = jnp.moveaxis(mask.reshape(b, n_chunks, chunk), 1, 0)
+
+    def one(args):
+        xi, li, mi = args
+        logits = logits_fn(xi).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, li[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mi
+        return jnp.sum(nll), jnp.sum(mi)
+
+    tot, cnt = jax.lax.map(one, (xc, lc, mc))
+    return jnp.sum(tot) / jnp.maximum(jnp.sum(cnt), 1.0)

@@ -1,0 +1,127 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+    x̃  = conv1d_w4(W_in x)                      (temporal conv, width 4)
+    iₜ = σ(x̃ₜ ⊙ w_i + b_i)                      (input gate, per channel)
+    aₜ = exp(−c · softplus(Λ) · σ(x̃ₜ ⊙ w_a + b_a))   (recurrence gate)
+    hₜ = aₜ ⊙ hₜ₋₁ + √(1−aₜ²) ⊙ (iₜ ⊙ x̃ₜ)
+    out = W_out( GeLU(W_gate x) ⊙ h )
+
+Adaptation note (DESIGN.md §4.1): the paper's block-diagonal gate
+projections are reduced to per-channel (diagonal) gates — the recurrence
+structure, gating nonlinearity and √(1−a²) normalization are preserved;
+parameter count follows ModelConfig.n_params().  State is O(rnn_d) per
+sequence ⇒ recurrentgemma-9b is a ``long_500k`` cell.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+
+_C = 8.0  # Griffin's fixed recurrence constant
+
+
+def init_rglru(key, cfg: ModelConfig, dtype):
+    d, rd, cw = cfg.d_model, cfg.rnn_d, cfg.conv_width
+    ks = jax.random.split(key, 4)
+    p, s = {}, {}
+    p["w_in"], s["w_in"] = dense_init(ks[0], (d, rd), ("embed", "rnn"), dtype)
+    p["w_gate"], s["w_gate"] = dense_init(ks[1], (d, rd), ("embed", "rnn"), dtype)
+    p["w_out"], s["w_out"] = dense_init(ks[2], (rd, d), ("rnn", "embed"), dtype)
+    p["conv"] = _conv_init(ks[3], cw, rd, dtype)
+    s["conv"] = ("conv", "rnn")
+    p["lam"] = jnp.full((rd,), 0.0, dtype)        # Λ (softplus ⇒ decay rates)
+    p["w_i"] = jnp.ones((rd,), dtype)
+    p["b_i"] = jnp.zeros((rd,), dtype)
+    p["w_a"] = jnp.ones((rd,), dtype)
+    p["b_a"] = jnp.zeros((rd,), dtype)
+    for nm in ("lam", "w_i", "b_i", "w_a", "b_a"):
+        s[nm] = ("rnn",)
+    return p, s
+
+
+def _conv_init(key, cw, rd, dtype):
+    return (jax.random.normal(key, (cw, rd), jnp.float32) / jnp.sqrt(cw)).astype(dtype)
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int, dtype):
+    rd, cw = cfg.rnn_d, cfg.conv_width
+    return {
+        "h": jnp.zeros((batch, rd), jnp.float32),
+        "conv": jnp.zeros((batch, cw - 1, rd), dtype),  # trailing inputs
+    }
+
+
+def _causal_conv(x, w, carry):
+    """Depthwise causal conv, width cw.  x (B,S,rd), carry (B,cw−1,rd)."""
+    cw = w.shape[0]
+    xx = jnp.concatenate([carry, x], axis=1)            # (B, S+cw−1, rd)
+    out = sum(
+        xx[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(cw)
+    )
+    return out, xx[:, -(cw - 1):, :]
+
+
+def _gates(params, xt):
+    """Per-channel input & recurrence gates for conv output xt (..., rd)."""
+    xf = xt.astype(jnp.float32)
+    i_g = jax.nn.sigmoid(xf * params["w_i"].astype(jnp.float32)
+                         + params["b_i"].astype(jnp.float32))
+    a_exp = jax.nn.sigmoid(xf * params["w_a"].astype(jnp.float32)
+                           + params["b_a"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["lam"].astype(jnp.float32)) * a_exp
+    a = jnp.exp(log_a)
+    return i_g, a
+
+
+def rglru_forward(params, cfg: ModelConfig, x, state=None):
+    """Full-sequence RG-LRU.  x (B,S,D) -> (out (B,S,D), new_state)."""
+    b, s, d = x.shape
+    if state is None:
+        state = init_rglru_state(cfg, b, x.dtype)
+
+    xi = jnp.einsum("bsd,dr->bsr", x, params["w_in"])
+    xc, conv_carry = _causal_conv(xi, params["conv"], state["conv"])
+    i_g, a = _gates(params, xc)                          # (B,S,rd) f32
+    drive = (i_g * xc.astype(jnp.float32)) * jnp.sqrt(
+        jnp.maximum(1.0 - a * a, 1e-12)
+    )
+
+    chunk = min(cfg.rnn_chunk, s)
+    n_chunks = -(-s // chunk)
+    pad = n_chunks * chunk - s
+    if pad:
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+        drive = jnp.pad(drive, ((0, 0), (0, pad), (0, 0)))
+
+    def scan_chunk(h0, inp):
+        ac, dc = inp
+
+        def inner(h, ts):
+            at, dt = ts
+            h2 = at * h + dt
+            return h2, h2
+
+        h_last, hs = jax.checkpoint(
+            lambda h0_, a_, d_: jax.lax.scan(
+                inner, h0_, (jnp.moveaxis(a_, 1, 0), jnp.moveaxis(d_, 1, 0))
+            )
+        )(h0, ac, dc)
+        return h_last, jnp.moveaxis(hs, 0, 1)
+
+    a_c = jnp.stack(jnp.split(a, n_chunks, axis=1))
+    d_c = jnp.stack(jnp.split(drive, n_chunks, axis=1))
+    h_final, hs = jax.lax.scan(scan_chunk, state["h"], (a_c, d_c))
+    h = jnp.moveaxis(hs, 0, 1).reshape(b, n_chunks * chunk, -1)[:, :s]
+
+    gate = jax.nn.gelu(jnp.einsum("bsd,dr->bsr", x, params["w_gate"]))
+    out = jnp.einsum("bsr,rd->bsd", gate * h.astype(x.dtype), params["w_out"])
+    return out, {"h": h_final, "conv": conv_carry}
+
+
+def rglru_decode(params, cfg: ModelConfig, x1, state):
+    """Single-token step; O(1) state (this is why 500k decode is free)."""
+    out, new_state = rglru_forward(params, cfg, x1, state)
+    return out, new_state

@@ -1,0 +1,199 @@
+"""RWKV-6 "Finch" mixer (arXiv:2404.05892) — attention-free, data-dependent
+per-channel decay (the defining v6 feature), implemented as a chunked,
+remat-friendly ``lax.scan`` linear recurrence.
+
+Per head (size hd), with r/k/v/g projections of the token-shift-mixed
+input and decay w_t = exp(−exp(w0 + tanh(x̃ A) B)):
+
+    y_t = rᵗ_t · (S_t + (u ⊙ k_t) v_tᵀ)
+    S_{t+1} = diag(w_t) · S_t + k_t v_tᵀ
+
+State is O(H·hd²) per sequence — constant in context length, which is why
+rwkv6-3b is a ``long_500k`` cell (DESIGN.md §4).  Training memory is kept
+linear by rematerializing the recurrence per ``cfg.rnn_chunk`` chunk.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+
+_LORA_R = 64  # decay LoRA rank (Finch uses small low-rank decay MLPs)
+
+
+def init_rwkv(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    hd = cfg.rnn_head_dim
+    n_heads = d // hd
+    ks = jax.random.split(key, 12)
+    p, s = {}, {}
+    for i, name in enumerate(("wr", "wk", "wv", "wg", "wo")):
+        p[name], s[name] = dense_init(ks[i], (d, d), ("embed", "rnn"), dtype)
+    # token-shift mixing coefficients (per channel, per branch)
+    for j, name in enumerate(("mu_r", "mu_k", "mu_v", "mu_g", "mu_w")):
+        p[name] = jnp.full((d,), 0.5, dtype)
+        s[name] = ("rnn",)
+    # data-dependent decay: w0 + tanh(x̃ A) B   (low-rank, per channel)
+    p["w0"] = jnp.full((d,), -6.0, dtype)
+    s["w0"] = ("rnn",)
+    p["wd_a"], s["wd_a"] = dense_init(ks[5], (d, _LORA_R), ("embed", None), dtype)
+    p["wd_b"], s["wd_b"] = dense_init(ks[6], (_LORA_R, d), (None, "rnn"), dtype)
+    p["u"] = jnp.zeros((n_heads, hd), dtype)          # "bonus" for current token
+    s["u"] = ("rnn_heads", "head_dim")
+    p["ln_scale"] = jnp.ones((d,), dtype)             # per-head group norm scale
+    s["ln_scale"] = ("rnn",)
+    # RWKV blocks are self-contained: internal pre-norms for both mixes.
+    p["ln1"] = jnp.ones((d,), dtype)
+    p["ln2"] = jnp.ones((d,), dtype)
+    s["ln1"] = ("rnn",)
+    s["ln2"] = ("rnn",)
+    # channel mix (RWKV FFN)
+    p["cm_k"], s["cm_k"] = dense_init(ks[7], (d, cfg.d_ff), ("embed", "mlp"), dtype)
+    p["cm_v"], s["cm_v"] = dense_init(ks[8], (cfg.d_ff, d), ("mlp", "embed"), dtype)
+    p["cm_r"], s["cm_r"] = dense_init(ks[9], (d, d), ("embed", "rnn"), dtype)
+    p["cm_mu_k"] = jnp.full((d,), 0.5, dtype)
+    p["cm_mu_r"] = jnp.full((d,), 0.5, dtype)
+    s["cm_mu_k"] = ("rnn",)
+    s["cm_mu_r"] = ("rnn",)
+    return p, s
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int, dtype):
+    d = cfg.d_model
+    hd = cfg.rnn_head_dim
+    h = d // hd
+    return {
+        "wkv": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "shift_tm": jnp.zeros((batch, d), dtype),   # last token (time mix)
+        "shift_cm": jnp.zeros((batch, d), dtype),   # last token (channel mix)
+    }
+
+
+def _mix(x, x_prev, mu):
+    return x + (x_prev - x) * mu.astype(x.dtype)
+
+
+def _rms(x, scale):
+    xf = x.astype(jnp.float32)
+    out = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + 1e-6)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _group_norm(y, scale, n_heads):
+    b, s, d = y.shape
+    hd = d // n_heads
+    yf = y.reshape(b, s, n_heads, hd).astype(jnp.float32)
+    mean = jnp.mean(yf, axis=-1, keepdims=True)
+    var = jnp.var(yf, axis=-1, keepdims=True)
+    yn = (yf - mean) * jax.lax.rsqrt(var + 1e-5)
+    return (yn.reshape(b, s, d) * scale.astype(jnp.float32)).astype(y.dtype)
+
+
+def _wkv_scan(r, k, v, w, u, state0):
+    """Linear recurrence over time.  r/k/v/w (B,S,H,hd) — returns
+    (y (B,S,H,hd), final state (B,H,hd,hd) f32)."""
+
+    def step(state, inp):
+        rt, kt, vt, wt = inp                               # (B,H,hd) each
+        kv = kt[..., :, None] * vt[..., None, :]           # (B,H,hd,hd)
+        y = jnp.einsum(
+            "bhk,bhkv->bhv", rt, state + u[None, :, :, None] * kv
+        )
+        state = wt[..., :, None] * state + kv
+        return state, y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0).astype(jnp.float32) for t in (r, k, v, w))
+    state, ys = jax.lax.scan(step, state0, xs)
+    return jnp.moveaxis(ys, 0, 1), state
+
+
+def rwkv_forward(params, cfg: ModelConfig, x, state=None):
+    """Full-sequence RWKV-6 time mix + channel mix.  x (B,S,D).
+    Returns (out, new_state).  Recurrence chunked+remat'd for training."""
+    b, s, d = x.shape
+    hd = cfg.rnn_head_dim
+    h = d // hd
+    if state is None:
+        state = init_rwkv_state(cfg, b, x.dtype)
+
+    # ---- time mix (over internally pre-normed input) ---------------------
+    xn = _rms(x, params["ln1"])
+    x_prev = jnp.concatenate([state["shift_tm"][:, None, :], xn[:, :-1, :]], axis=1)
+    xw = _mix(xn, x_prev, params["mu_w"])
+    r = jnp.einsum("bsd,de->bse", _mix(xn, x_prev, params["mu_r"]), params["wr"])
+    k = jnp.einsum("bsd,de->bse", _mix(xn, x_prev, params["mu_k"]), params["wk"])
+    v = jnp.einsum("bsd,de->bse", _mix(xn, x_prev, params["mu_v"]), params["wv"])
+    g = jax.nn.silu(
+        jnp.einsum("bsd,de->bse", _mix(xn, x_prev, params["mu_g"]), params["wg"])
+    )
+    dd = jnp.einsum(
+        "bsr,rd->bsd", jnp.tanh(jnp.einsum("bsd,dr->bsr", xw, params["wd_a"])),
+        params["wd_b"],
+    )
+    w = jnp.exp(-jnp.exp((params["w0"].astype(jnp.float32) + dd.astype(jnp.float32))))
+
+    rh = r.reshape(b, s, h, hd)
+    kh = k.reshape(b, s, h, hd)
+    vh = v.reshape(b, s, h, hd)
+    wh = w.reshape(b, s, h, hd)
+    u = params["u"].astype(jnp.float32)
+
+    # chunked scan with rematerialization
+    chunk = min(cfg.rnn_chunk, s)
+    n_chunks = -(-s // chunk)
+    pad = n_chunks * chunk - s
+
+    def pad_t(t):
+        return jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else t
+
+    rh, kh, vh, wh = map(pad_t, (rh, kh, vh, wh))
+    # pad w with ones (decay 1 = no-op) so state passes through padding
+    if pad:
+        wh = wh.at[:, s:, :, :].set(1.0)
+        kh = kh.at[:, s:, :, :].set(0.0)
+
+    def chunk_step(st, inp):
+        rc, kc, vc, wc = inp
+        y, st2 = jax.checkpoint(_wkv_scan)(rc, kc, vc, wc, u, st)
+        return st2, y
+
+    xs = tuple(
+        jnp.stack(jnp.split(t, n_chunks, axis=1)) for t in (rh, kh, vh, wh)
+    )
+    final_state, ys = jax.lax.scan(chunk_step, state["wkv"], xs)
+    # ys (n_chunks, B, chunk, H, hd) -> (B, S, D)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, n_chunks * chunk, h, hd)[:, :s]
+    y = y.reshape(b, s, d).astype(x.dtype)
+
+    y = _group_norm(y, params["ln_scale"], h) * g
+    tm_out = jnp.einsum("bsd,de->bse", y, params["wo"])
+
+    # ---- channel mix ----------------------------------------------------
+    x2 = x + tm_out
+    x2n = _rms(x2, params["ln2"])
+    x2_prev = jnp.concatenate([state["shift_cm"][:, None, :], x2n[:, :-1, :]], axis=1)
+    kk = jnp.einsum("bsd,df->bsf", _mix(x2n, x2_prev, params["cm_mu_k"]), params["cm_k"])
+    kk = jnp.square(jax.nn.relu(kk))
+    cm = jnp.einsum("bsf,fd->bsd", kk, params["cm_v"])
+    rr = jax.nn.sigmoid(
+        jnp.einsum("bsd,de->bse", _mix(x2n, x2_prev, params["cm_mu_r"]), params["cm_r"])
+    )
+    out = x2 + rr * cm
+
+    new_state = {
+        "wkv": final_state,
+        "shift_tm": xn[:, -1, :],
+        "shift_cm": x2n[:, -1, :],
+    }
+    return out, new_state
+
+
+def rwkv_decode(params, cfg: ModelConfig, x1, state):
+    """Single-token step; x1 (B,1,D).  O(1) in context length."""
+    out, new_state = rwkv_forward(params, cfg, x1, state)
+    return out, new_state

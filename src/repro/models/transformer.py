@@ -1,0 +1,557 @@
+"""Model assembly for the architecture zoo.
+
+One implementation covers all ten assigned architectures through
+``cfg.block_pattern`` (per-layer mixer kinds cycled over depth) and the
+family flags on ``ModelConfig``:
+
+  dense GQA (llama3/olmo/qwen3/yi)      pattern ("attn",)
+  MoE (qwen3-moe/granite-moe)           pattern ("attn",) + cfg.moe
+  RWKV-6 (rwkv6-3b)                     pattern ("rwkv",)   — self-contained
+  RG-LRU hybrid (recurrentgemma-9b)     pattern ("rglru","rglru","local")
+  enc-dec audio (whisper-large-v3)      decoder ("attn",) + n_encoder_layers
+  VLM (llava-next-mistral-7b)           pattern ("attn",) + n_patches stub
+
+Layer stacking: layers are grouped into ``n_groups`` repetitions of the
+block pattern and *scanned* (``lax.scan`` over stacked params) with
+per-layer rematerialization — HLO stays O(pattern), activation memory
+stays O(1) in depth.  Remainder layers (pattern not dividing depth, e.g.
+recurrentgemma's 38 = 12×3 + 2) run unscanned after the scan.
+
+Three entry points (all SPMD-ready via ``ShardingCtx``):
+  init_params    (params, logical specs)
+  forward_seq    train / prefill (collects KV caches + recurrent states)
+  decode_step    single token with static-shape caches
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import rglru as rglru_lib
+from repro.models import rwkv6 as rwkv_lib
+from repro.sharding import ShardingCtx, null_ctx
+
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# layer plan
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LayerPlan:
+    kinds: Tuple[str, ...]        # kind of every decoder layer, in order
+    pattern: Tuple[str, ...]
+    n_groups: int                 # scanned repetitions of the pattern
+    rem_kinds: Tuple[str, ...]    # unscanned tail layers
+
+
+def layer_plan(cfg: ModelConfig) -> LayerPlan:
+    lp = len(cfg.block_pattern)
+    kinds = tuple(cfg.block_pattern[i % lp] for i in range(cfg.n_layers))
+    if cfg.scan_layers and cfg.n_layers >= 2 * lp:
+        g = cfg.n_layers // lp
+        rem = kinds[g * lp:]
+    else:
+        g, rem = 0, kinds
+    return LayerPlan(kinds, cfg.block_pattern, g, rem)
+
+
+# --------------------------------------------------------------------------
+# single-layer init / apply
+# --------------------------------------------------------------------------
+
+def _init_layer(key, cfg: ModelConfig, kind: str, dtype, *, cross: bool):
+    """One block's params+specs.  'rwkv' blocks are self-contained."""
+    if kind == "rwkv":
+        return rwkv_lib.init_rwkv(key, cfg, dtype)
+    ks = jax.random.split(key, 4)
+    p: Params = {}
+    s: Params = {}
+    p["norm1"], s["norm1"] = L.init_norm(cfg, dtype)
+    if kind == "rglru":
+        p["rglru"], s["rglru"] = rglru_lib.init_rglru(ks[0], cfg, dtype)
+    else:
+        p["attn"], s["attn"] = L.init_attention(ks[0], cfg, dtype)
+    if cross:
+        p["normx"], s["normx"] = L.init_norm(cfg, dtype)
+        p["xattn"], s["xattn"] = L.init_attention(ks[1], cfg, dtype, cross=True)
+    p["norm2"], s["norm2"] = L.init_norm(cfg, dtype)
+    if cfg.moe is not None and kind != "rwkv":
+        p["moe"], s["moe"] = L.init_moe(ks[2], cfg, dtype)
+    else:
+        p["mlp"], s["mlp"] = L.init_mlp(ks[2], cfg, dtype)
+    return p, s
+
+
+def _layer_state_shape(cfg: ModelConfig, kind: str, batch: int, cache_len: int,
+                       dtype, *, cross: bool):
+    """Zeroed decode cache / recurrent state for one layer."""
+    st: Params = {}
+    if kind == "rwkv":
+        st["rnn"] = rwkv_lib.init_rwkv_state(cfg, batch, dtype)
+    elif kind == "rglru":
+        st["rnn"] = rglru_lib.init_rglru_state(cfg, batch, dtype)
+    else:
+        st["kv"] = L.init_kv_cache(cfg, batch, cache_len, kind, dtype)
+    if cross:
+        g, hd = cfg.n_kv_heads, cfg.hd
+        st["cross"] = {
+            "k": jnp.zeros((batch, cfg.encoder_seq, g, hd), dtype),
+            "v": jnp.zeros((batch, cfg.encoder_seq, g, hd), dtype),
+        }
+    return st
+
+
+def _apply_layer_seq(p, cfg: ModelConfig, kind: str, x, shd: ShardingCtx, *,
+                     encoder_out=None, state=None, cache_len=0, collect=False):
+    """Full-sequence block.  Returns (x, aux, new_state_or_cache)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_state: Params = {}
+    if kind == "rwkv":
+        out, rnn = rwkv_lib.rwkv_forward(p, cfg, x, state["rnn"] if state else None)
+        if collect:
+            new_state["rnn"] = rnn
+        return out, aux, new_state
+
+    h = L.apply_norm(p["norm1"], cfg, x)
+    if kind == "rglru":
+        mix, rnn = rglru_lib.rglru_forward(
+            p["rglru"], cfg, h, state["rnn"] if state else None)
+        if collect:
+            new_state["rnn"] = rnn
+    else:
+        if collect:
+            mix, (kk, vv) = L.attention_forward_collect(
+                p["attn"], cfg, h, kind=kind, shd=shd)
+            t = min(cache_len, cfg.window) if kind == "local" else cache_len
+            if kind == "local" and kk.shape[1] > t:
+                # keep the trailing window; ring-buffer layout slot = pos % t
+                # ⇒ tail element j (abs pos pos0+j) lands at (pos0+j) % t,
+                # i.e. a roll by +pos0.
+                s_full = kk.shape[1]
+                pos0 = s_full - t
+                kk = jnp.roll(kk[:, pos0:], pos0 % t, axis=1)
+                vv = jnp.roll(vv[:, pos0:], pos0 % t, axis=1)
+            else:
+                kk = L.pad_cache(kk, t)
+                vv = L.pad_cache(vv, t)
+            new_state["kv"] = {"k": kk, "v": vv}
+        else:
+            mix = L.attention_forward(p["attn"], cfg, h, kind=kind, shd=shd)
+    x = shd.constrain(x + mix, "act_batch", "act_seq", "act_embed")
+
+    if encoder_out is not None:
+        hx = L.apply_norm(p["normx"], cfg, x)
+        x = x + L.attention_forward(p["xattn"], cfg, hx,
+                                    encoder_out=encoder_out, shd=shd)
+        if collect:
+            new_state["cross"] = L.init_cross_cache(p["xattn"], cfg, encoder_out)
+
+    h2 = L.apply_norm(p["norm2"], cfg, x)
+    if "moe" in p:
+        mlp, aux = L.apply_moe(p["moe"], cfg, h2, shd)
+    else:
+        mlp = L.apply_mlp(p["mlp"], cfg, h2)
+    x = shd.constrain(x + mlp, "act_batch", "act_seq", "act_embed")
+    return x, aux, new_state
+
+
+def _apply_layer_decode(p, cfg: ModelConfig, kind: str, x1, st, pos,
+                        shd: ShardingCtx):
+    """One-token block step.  Returns (x1, new_state)."""
+    new_state = dict(st)
+    if kind == "rwkv":
+        out, rnn = rwkv_lib.rwkv_decode(p, cfg, x1, st["rnn"])
+        new_state["rnn"] = rnn
+        return out, new_state
+
+    h = L.apply_norm(p["norm1"], cfg, x1)
+    if kind == "rglru":
+        mix, rnn = rglru_lib.rglru_decode(p["rglru"], cfg, h, st["rnn"])
+        new_state["rnn"] = rnn
+    else:
+        mix, kv = L.attention_decode(p["attn"], cfg, h, st["kv"], pos, kind=kind)
+        new_state["kv"] = kv
+    x1 = x1 + mix
+
+    if "cross" in st:
+        hx = L.apply_norm(p["normx"], cfg, x1)
+        out, _ = L.attention_decode(
+            p["xattn"], cfg, hx, None, pos, cross_cache=st["cross"])
+        x1 = x1 + out
+
+    h2 = L.apply_norm(p["norm2"], cfg, x1)
+    if "moe" in p:
+        mlp, _ = L.apply_moe(p["moe"], cfg, h2)
+    else:
+        mlp = L.apply_mlp(p["mlp"], cfg, h2)
+    return x1 + mlp, new_state
+
+
+# --------------------------------------------------------------------------
+# whole-model init
+# --------------------------------------------------------------------------
+
+def init_params(key, cfg: ModelConfig):
+    """Returns (params, specs).  Scan-stacked leaves get a leading "layers"
+    logical dim.  Call under ``jax.eval_shape`` for the dry-run."""
+    dtype = jnp.dtype(cfg.param_dtype)
+    plan = layer_plan(cfg)
+    cross = cfg.n_encoder_layers > 0
+    k_emb, k_blocks, k_rem, k_enc, k_extra = jax.random.split(key, 5)
+
+    params: Params = {}
+    specs: Params = {}
+    params["embed"], specs["embed"] = L.init_embeddings(k_emb, cfg, dtype)
+    params["final_norm"], specs["final_norm"] = L.init_norm(cfg, dtype)
+
+    def layer_spec(kind, cross_):
+        """Specs are value-independent; trace the init to capture them
+        without materializing a layer's arrays."""
+        box = {}
+
+        def capture(k):
+            p, s = _init_layer(k, cfg, kind, dtype, cross=cross_)
+            box["s"] = s
+            return p
+
+        jax.eval_shape(capture, jax.random.PRNGKey(0))
+        return box["s"]
+
+    def stack_init(key, kinds, n_groups, cross_):
+        """vmap the per-group init over group keys -> stacked params."""
+        pos_params, pos_specs = [], []
+        for pos, kind in enumerate(kinds):
+            def one(k, kind=kind):
+                return _init_layer(k, cfg, kind, dtype, cross=cross_)[0]
+            keys = jax.random.split(jax.random.fold_in(key, pos), n_groups)
+            stacked = jax.vmap(one)(keys)
+            pos_params.append(stacked)
+            pos_specs.append(_prepend_layers_axis(layer_spec(kind, cross_)))
+        return pos_params, pos_specs
+
+    if plan.n_groups:
+        params["blocks"], specs["blocks"] = stack_init(
+            k_blocks, plan.pattern, plan.n_groups, cross)
+    else:
+        params["blocks"], specs["blocks"] = [], []
+    rem_p, rem_s = [], []
+    for i, kind in enumerate(plan.rem_kinds):
+        p1, s1 = _init_layer(jax.random.fold_in(k_rem, i), cfg, kind, dtype,
+                             cross=cross)
+        rem_p.append(p1)
+        rem_s.append(s1)
+    params["rem"], specs["rem"] = rem_p, rem_s
+
+    if cross:
+        enc_p: Params = {}
+        enc_s: Params = {}
+        n_enc = cfg.n_encoder_layers
+        if cfg.scan_layers and n_enc >= 2:
+            bp, bs = stack_init(k_enc, ("enc-attn",), n_enc, False)
+            enc_p["blocks"], enc_s["blocks"] = bp, bs
+            enc_p["rem"], enc_s["rem"] = [], []
+        else:
+            enc_pairs = [
+                _init_layer(jax.random.fold_in(k_enc, i), cfg, "enc-attn",
+                            dtype, cross=False) for i in range(n_enc)]
+            enc_p["blocks"], enc_s["blocks"] = [], []
+            enc_p["rem"] = [p for p, _ in enc_pairs]
+            enc_s["rem"] = [s for _, s in enc_pairs]
+        enc_p["norm"], enc_s["norm"] = L.init_norm(cfg, dtype)
+        params["encoder"], specs["encoder"] = enc_p, enc_s
+
+    if cfg.n_patches:
+        d = cfg.d_model
+        pd = cfg.patch_dim
+        kp = jax.random.split(k_extra, 2)
+        proj_p: Params = {}
+        proj_s: Params = {}
+        proj_p["w1"], proj_s["w1"] = L.dense_init(
+            kp[0], (pd, d), ("embed", "mlp"), dtype)
+        proj_p["w2"], proj_s["w2"] = L.dense_init(
+            kp[1], (d, d), ("mlp", "embed"), dtype)
+        params["mm_projector"], specs["mm_projector"] = proj_p, proj_s
+    return params, specs
+
+
+def _prepend_layers_axis(spec_tree):
+    return jax.tree.map(
+        lambda s: ("layers",) + tuple(s), spec_tree,
+        is_leaf=lambda s: isinstance(s, tuple))
+
+
+# --------------------------------------------------------------------------
+# cache init
+# --------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int):
+    """Static-shape decode state for the whole stack (call under
+    ``jax.eval_shape`` for dry-run ShapeDtypeStructs)."""
+    dtype = jnp.dtype(cfg.dtype)
+    plan = layer_plan(cfg)
+    cross = cfg.n_encoder_layers > 0
+
+    def one(kind):
+        return _layer_state_shape(cfg, kind, batch, cache_len, dtype,
+                                  cross=cross)
+
+    cache: Params = {"blocks": [], "rem": []}
+    for pos, kind in enumerate(plan.pattern):
+        if plan.n_groups:
+            cache["blocks"].append(
+                jax.tree.map(
+                    lambda x: jnp.broadcast_to(
+                        x[None], (plan.n_groups,) + x.shape), one(kind)))
+    for kind in plan.rem_kinds:
+        cache["rem"].append(one(kind))
+    return cache
+
+
+def _layer_state_spec(cfg: ModelConfig, kind: str, *, cross: bool):
+    """Logical-axis tuples mirroring _layer_state_shape (for the dry-run's
+    cache in_shardings)."""
+    st: Params = {}
+    if kind == "rwkv":
+        st["rnn"] = {
+            "wkv": ("act_batch", "rnn_heads", None, None),
+            "shift_tm": ("act_batch", "rnn"),
+            "shift_cm": ("act_batch", "rnn"),
+        }
+    elif kind == "rglru":
+        st["rnn"] = {
+            "h": ("act_batch", "rnn"),
+            "conv": ("act_batch", None, "rnn"),
+        }
+    else:
+        st["kv"] = {
+            "k": ("act_batch", "act_kv_seq", "kv_heads", None),
+            "v": ("act_batch", "act_kv_seq", "kv_heads", None),
+        }
+    if cross:
+        st["cross"] = {
+            "k": ("act_batch", None, "kv_heads", None),
+            "v": ("act_batch", None, "kv_heads", None),
+        }
+    return st
+
+
+def cache_specs(cfg: ModelConfig):
+    """Spec tree matching ``init_cache``'s structure."""
+    plan = layer_plan(cfg)
+    cross = cfg.n_encoder_layers > 0
+    specs: Params = {"blocks": [], "rem": []}
+    for kind in plan.pattern:
+        if plan.n_groups:
+            specs["blocks"].append(_prepend_layers_axis(
+                _layer_state_spec(cfg, kind, cross=cross)))
+    for kind in plan.rem_kinds:
+        specs["rem"].append(_layer_state_spec(cfg, kind, cross=cross))
+    return specs
+
+
+# --------------------------------------------------------------------------
+# sequence forward (train / prefill)
+# --------------------------------------------------------------------------
+
+def _cast_params(params, cfg: ModelConfig):
+    """Compute-dtype cast (master weights stay f32 in the train state; the
+    cast is differentiable so grads flow back at f32)."""
+    dt = jnp.dtype(cfg.dtype)
+
+    def cast(p):
+        if jnp.issubdtype(p.dtype, jnp.floating) and p.dtype != dt:
+            return p.astype(dt)
+        return p
+
+    return jax.tree.map(cast, params)
+
+
+def encode(params, cfg: ModelConfig, frames, shd: ShardingCtx):
+    """Whisper-style encoder over precomputed frame embeddings (stub
+    frontend per the assignment): frames (B, T_enc, D)."""
+    enc = params["encoder"]
+    x = frames.astype(jnp.dtype(cfg.dtype))
+
+    def body(x, p):
+        out, _, _ = _apply_layer_seq(p, cfg, "enc-attn", x, shd)
+        return out
+
+    if enc["blocks"]:
+        def scan_body(x, p_pos):
+            f = body
+            if cfg.remat:
+                f = jax.checkpoint(f)
+            return f(x, p_pos[0]), None
+        x, _ = jax.lax.scan(scan_body, x, (enc["blocks"][0],))
+    for p1 in enc["rem"]:
+        x = body(x, p1)
+    return L.apply_norm(enc["norm"], cfg, x)
+
+
+def forward_seq(params, cfg: ModelConfig, tokens, shd: Optional[ShardingCtx]
+                = None, *, frames=None, patches=None, states=None,
+                collect: bool = False, cache_len: int = 0):
+    """Token ids -> final hidden states.
+
+    Returns (hidden (B,S,D), aux_loss, new_states).  ``collect=True``
+    gathers KV caches / recurrent states for subsequent decode (prefill).
+    ``states`` carries recurrent state in (e.g. chunked long-context
+    prefill for SSM archs).
+    """
+    shd = shd or null_ctx()
+    params = _cast_params(params, cfg)
+    plan = layer_plan(cfg)
+    x = L.embed(params["embed"], cfg, tokens)
+
+    if cfg.n_patches and patches is not None:
+        pr = params["mm_projector"]
+        pe = jax.nn.gelu(jnp.einsum("bpc,cd->bpd", patches.astype(x.dtype),
+                                    pr["w1"]))
+        pe = jnp.einsum("bpd,de->bpe", pe, pr["w2"])
+        x = jnp.concatenate([pe, x], axis=1)
+
+    encoder_out = None
+    if cfg.n_encoder_layers and frames is not None:
+        encoder_out = encode(params, cfg, frames, shd)
+
+    x = shd.constrain(x, "act_batch", "act_seq", "act_embed")
+    aux_total = jnp.zeros((), jnp.float32)
+    new_states: Params = {"blocks": [], "rem": []}
+
+    def apply_one(x, p, st, kind):
+        return _apply_layer_seq(
+            p, cfg, kind, x, shd, encoder_out=encoder_out, state=st,
+            cache_len=cache_len, collect=collect)
+
+    if plan.n_groups:
+        pat = plan.pattern
+        remat_kwargs = {}
+        if cfg.remat_policy == "dots":
+            remat_kwargs["policy"] = \
+                jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+
+        def group_body(carry, inp):
+            x, aux = carry
+            p_pos = inp[0]
+            st_pos = inp[1] if states is not None else (None,) * len(pat)
+            outs = []
+            for pos, kind in enumerate(pat):
+                f = functools.partial(apply_one, kind=kind)
+                if cfg.remat:
+                    f = jax.checkpoint(f, **remat_kwargs)
+                x, aux_i, ns = f(x, p_pos[pos], st_pos[pos])
+                aux = aux + aux_i
+                outs.append(ns)
+            return (x, aux), tuple(outs)
+
+        xs_states = (tuple(states["blocks"]),) if states is not None else ()
+        (x, aux_total), collected = jax.lax.scan(
+            group_body, (x, aux_total),
+            (tuple(params["blocks"]),) + xs_states)
+        new_states["blocks"] = list(collected)
+
+    for i, kind in enumerate(plan.rem_kinds):
+        st = states["rem"][i] if states is not None else None
+        x, aux_i, ns = apply_one(x, params["rem"][i], st, kind)
+        aux_total = aux_total + aux_i
+        new_states["rem"].append(ns)
+
+    x = L.apply_norm(params["final_norm"], cfg, x)
+    return x, aux_total, (new_states if collect else None)
+
+
+def loss_fn(params, cfg: ModelConfig, batch, shd: Optional[ShardingCtx] = None):
+    """Next-token cross entropy (+ MoE aux).  batch keys: tokens, labels,
+    optional loss_mask / frames / patches."""
+    shd = shd or null_ctx()
+    hidden, aux, _ = forward_seq(
+        params, cfg, batch["tokens"], shd,
+        frames=batch.get("frames"), patches=batch.get("patches"))
+    labels = batch["labels"]
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones_like(labels, jnp.float32)
+    if cfg.n_patches and "patches" in batch:
+        # patch positions carry no next-token loss
+        s_text = labels.shape[1]
+        hidden = hidden[:, hidden.shape[1] - s_text:]
+    xent = L.chunked_xent(
+        lambda xc: L.unembed(params["embed"], cfg, xc), hidden, labels,
+        mask.astype(jnp.float32), chunk=cfg.xent_chunk)
+    loss = xent + 0.01 * aux
+    return loss, {"xent": xent, "moe_aux": aux}
+
+
+# --------------------------------------------------------------------------
+# decode
+# --------------------------------------------------------------------------
+
+def decode_step_hidden(params, cfg: ModelConfig, token, cache, pos,
+                       shd: Optional[ShardingCtx] = None):
+    """Decode through the stack, returning the final-norm hidden state
+    (B, D) — the retrieval query vector — plus the updated cache."""
+    shd = shd or null_ctx()
+    params = _cast_params(params, cfg)
+    plan = layer_plan(cfg)
+    x1 = L.embed(params["embed"], cfg, token[:, None])
+    x1 = shd.constrain(x1, "act_batch", None, "act_embed")
+
+    new_cache: Params = {"blocks": [], "rem": []}
+    if plan.n_groups:
+        pat = plan.pattern
+
+        def group_body(x1, inp):
+            p_pos, st_pos = inp
+            new_sts = []
+            for pos_i, kind in enumerate(pat):
+                x1, ns = _apply_layer_decode(
+                    p_pos[pos_i], cfg, kind, x1, st_pos[pos_i], pos, shd)
+                new_sts.append(ns)
+            return x1, tuple(new_sts)
+
+        x1, collected = jax.lax.scan(
+            group_body, x1, (tuple(params["blocks"]), tuple(cache["blocks"])))
+        new_cache["blocks"] = list(collected)
+
+    for i, kind in enumerate(plan.rem_kinds):
+        x1, ns = _apply_layer_decode(
+            params["rem"][i], cfg, kind, x1, cache["rem"][i], pos, shd)
+        new_cache["rem"].append(ns)
+
+    x1 = L.apply_norm(params["final_norm"], cfg, x1)
+    return x1[:, 0], new_cache
+
+
+def decode_step(params, cfg: ModelConfig, token, cache, pos,
+                shd: Optional[ShardingCtx] = None):
+    """One serving step: token (B,) int32, pos () int32 absolute position.
+    Returns (logits (B, vocab), new_cache).  Static shapes throughout —
+    this is what the decode_* dry-run cells lower."""
+    shd = shd or null_ctx()
+    hidden, new_cache = decode_step_hidden(params, cfg, token, cache, pos, shd)
+    logits = L.unembed(params["embed"], cfg, hidden[:, None])[:, 0]
+    logits = shd.constrain(logits, "act_batch", "act_vocab")
+    return logits, new_cache
+
+
+# --------------------------------------------------------------------------
+# prefill convenience (serving path; dry-run uses decode_step directly)
+# --------------------------------------------------------------------------
+
+def prefill(params, cfg: ModelConfig, tokens, cache_len: int,
+            shd: Optional[ShardingCtx] = None, *, frames=None, patches=None):
+    """Run the full prompt, return (last_logits (B,V), cache)."""
+    hidden, _, states = forward_seq(
+        params, cfg, tokens, shd, frames=frames, patches=patches,
+        collect=True, cache_len=cache_len)
+    logits = L.unembed(params["embed"], cfg, hidden[:, -1:])[:, 0]
+    return logits, states

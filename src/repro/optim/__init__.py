@@ -1,0 +1,17 @@
+"""Optimizer substrate: AdamW (dtype-configurable moments), warmup-cosine
+schedule, int8 error-feedback gradient compression."""
+from repro.optim.adamw import (
+    OptConfig, adamw_update, clip_by_global_norm, global_norm,
+    init_opt_state, warmup_cosine,
+)
+from repro.optim.compression import (
+    compressed_grad_mean, compression_ratio, dequantize, ef_quantize,
+    init_residuals, quantize,
+)
+
+__all__ = [
+    "OptConfig", "adamw_update", "clip_by_global_norm", "global_norm",
+    "init_opt_state", "warmup_cosine", "compressed_grad_mean",
+    "compression_ratio", "dequantize", "ef_quantize", "init_residuals",
+    "quantize",
+]

@@ -1,0 +1,80 @@
+"""Int8 error-feedback gradient compression for the DP all-reduce.
+
+The DP gradient all-reduce moves ``4·n_params`` bytes per step per link in
+fp32 (2· in bf16).  Quantizing to int8 with a per-tensor scale cuts the
+collective term 4× (vs fp32); the quantization error is carried in a
+per-device *residual* that is added back before the next quantization
+(error feedback), which keeps the scheme unbiased over time — the
+long-run sum of applied updates equals the sum of true gradients.
+
+Implementation shape (TPU-native): inside ``shard_map`` over the data
+axes, each device quantizes its local gradient, ``all_gather``s the int8
+payload + scales (int8 on the wire — this is the 4× byte saving; psum of
+int8 would overflow and XLA would upcast), then dequantizes and averages
+locally.  ``compressed_grad_mean`` is a drop-in for the mean-over-data-
+shards the train step otherwise gets implicitly from GSPMD.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+_Q = 127.0
+
+
+def quantize(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-tensor symmetric int8.  Returns (q int8, scale f32)."""
+    g32 = g.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(g32)) / _Q
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(g32 / scale), -_Q, _Q).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_quantize(g: jnp.ndarray, residual: jnp.ndarray):
+    """Error-feedback quantize: q(g + r); r' = (g + r) − deq(q)."""
+    corrected = g.astype(jnp.float32) + residual
+    q, scale = quantize(corrected)
+    new_residual = corrected - dequantize(q, scale)
+    return q, scale, new_residual
+
+
+def init_residuals(grads) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compressed_grad_mean(grads, residuals, axis_names: Sequence[str]):
+    """Mean of ``grads`` over ``axis_names`` with int8 wire format.
+
+    Must be called inside shard_map with ``axis_names`` bound.  Returns
+    (mean_grads f32, new_residuals).
+    """
+    axes = tuple(axis_names)
+    n = jax.lax.psum(jnp.ones((), jnp.float32), axes)
+
+    def one(g, r):
+        q, scale, r_new = ef_quantize(g, r)
+        # int8 on the wire; gathered once per tensor then reduced locally.
+        q_all = jax.lax.all_gather(q, axes)          # (n_dev, *shape) int8
+        s_all = jax.lax.all_gather(scale, axes)      # (n_dev,) f32
+        s_all = s_all.reshape((-1,) + (1,) * g.ndim)
+        mean = jnp.sum(q_all.astype(jnp.float32) * s_all, axis=0) / n
+        return mean.astype(g.dtype), r_new
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(residuals)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return (jax.tree.unflatten(treedef, [o[0] for o in out]),
+            jax.tree.unflatten(treedef, [o[1] for o in out]))
+
+
+def compression_ratio(dtype=jnp.float32) -> float:
+    """Wire-byte reduction vs the uncompressed all-reduce."""
+    return jnp.dtype(dtype).itemsize / jnp.dtype(jnp.int8).itemsize

@@ -1,0 +1,8 @@
+"""Runtime substrate: fault tolerance, straggler mitigation, supervision."""
+from repro.runtime.stragglers import StragglerConfig, StragglerDetector, suggest_rho
+from repro.runtime.supervisor import RunReport, Supervisor, SupervisorConfig
+
+__all__ = [
+    "StragglerConfig", "StragglerDetector", "suggest_rho",
+    "RunReport", "Supervisor", "SupervisorConfig",
+]

@@ -1,0 +1,76 @@
+"""Straggler detection + mitigation.
+
+At thousands of nodes, per-step time is gated by the slowest host; a
+persistent straggler (thermal throttling, flaky ICI link, noisy
+neighbor) silently costs its whole pod.  We keep an EWMA + EW-variance
+of per-host step time and flag hosts exceeding ``mu + k·sigma`` for
+``patience`` consecutive steps.
+
+Mitigations surfaced to the driver:
+  * for the KNN-join workload: rebalance via the paper's own lever —
+    recompute ρ from the observed per-engine times (Eq. 6, reused
+    *online*): a slow sparse engine shifts queries to the dense engine
+    and vice versa (``suggest_rho``).
+  * for LM training: flag the host for exclusion at the next elastic
+    restart boundary (the supervisor owns the restart).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class StragglerConfig:
+    alpha: float = 0.2          # EWMA weight for the newest sample
+    k_sigma: float = 3.0        # flag threshold
+    patience: int = 3           # consecutive flags before reporting
+    warmup_steps: int = 5       # ignore compile/cache warmup
+
+
+class StragglerDetector:
+    def __init__(self, n_hosts: int, cfg: Optional[StragglerConfig] = None):
+        self.cfg = cfg or StragglerConfig()
+        self.n_hosts = n_hosts
+        self.mu = np.zeros(n_hosts)
+        self.var = np.zeros(n_hosts)
+        self.count = 0
+        self.flags = np.zeros(n_hosts, dtype=int)
+
+    def update(self, step_times: np.ndarray) -> List[int]:
+        """Feed per-host wall times for one step; returns hosts that have
+        been flagged for >= patience consecutive steps."""
+        step_times = np.asarray(step_times, dtype=float)
+        assert step_times.shape == (self.n_hosts,)
+        self.count += 1
+        a = self.cfg.alpha
+        if self.count == 1:
+            self.mu = step_times.copy()
+            self.var = np.zeros_like(step_times)
+        else:
+            delta = step_times - self.mu
+            self.mu += a * delta
+            self.var = (1 - a) * (self.var + a * delta * delta)
+        if self.count <= self.cfg.warmup_steps:
+            return []
+        # a host straggles relative to the fleet, not to its own history
+        fleet_mu = float(np.median(self.mu))
+        fleet_sigma = float(np.sqrt(np.median(self.var)) + 1e-9)
+        over = step_times > fleet_mu + self.cfg.k_sigma * fleet_sigma
+        self.flags = np.where(over, self.flags + 1, 0)
+        return [int(i) for i in np.nonzero(self.flags >= self.cfg.patience)[0]]
+
+    def healthy_hosts(self) -> List[int]:
+        return [i for i in range(self.n_hosts)
+                if self.flags[i] < self.cfg.patience]
+
+
+def suggest_rho(t1_per_query: float, t2_per_query: float) -> float:
+    """The paper's Eq. 6, reused online as the straggler-rebalance lever
+    for the hybrid join: rho = T2 / (T1 + T2)."""
+    denom = t1_per_query + t2_per_query
+    if denom <= 0:
+        return 0.5
+    return float(t2_per_query / denom)

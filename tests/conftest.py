@@ -1,0 +1,29 @@
+"""Shared test fixtures.  NOTE: no XLA_FLAGS here — tests must see the
+real single CPU device; distributed tests spawn subprocesses that set
+--xla_force_host_platform_device_count themselves."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_mixture(n_dense=600, n_sparse=200, dim=8, seed=0):
+    """Dense cluster + sparse background — the paper's density split."""
+    r = np.random.default_rng(seed)
+    dense = r.normal(0, 0.05, (n_dense, dim))
+    sparse = r.uniform(-3, 3, (n_sparse, dim))
+    return np.concatenate([dense, sparse]).astype(np.float32)
+
+
+def oracle_knn(pts, k, queries=None, exclude_self=True):
+    """O(N²) float64 oracle: (sorted sq-dists, ids)."""
+    q = pts if queries is None else queries
+    d2 = ((q[:, None, :].astype(np.float64) -
+           pts[None, :, :].astype(np.float64)) ** 2).sum(-1)
+    if exclude_self and queries is None:
+        np.fill_diagonal(d2, np.inf)
+    idx = np.argsort(d2, axis=1)[:, :k]
+    return np.take_along_axis(d2, idx, axis=1), idx

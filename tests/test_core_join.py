@@ -1,0 +1,183 @@
+"""The paper's algorithm: exactness, parameter semantics, baselines."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_mixture, oracle_knn
+from repro.core import (
+    HybridConfig, HybridKNNJoin, brute_knn, refimpl_knn, self_join_brute,
+)
+from repro.core import epsilon as eps_lib
+from repro.core import grid as grid_lib
+from repro.core import splitter as split_lib
+
+
+# ---------------------------------------------------------------------------
+# exactness: the hybrid result equals the float64 oracle no matter the params
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("beta,gamma,rho", [
+    (0.0, 0.0, 0.0), (0.0, 0.8, 0.0), (1.0, 0.0, 0.0), (0.5, 0.4, 0.5),
+    (0.0, 0.0, 1.0),
+])
+def test_hybrid_join_exact_all_params(beta, gamma, rho):
+    pts = make_mixture(400, 150, dim=6, seed=1)
+    k = 4
+    res = HybridKNNJoin(HybridConfig(
+        k=k, m=4, beta=beta, gamma=gamma, rho=rho)).join(pts)
+    od, _ = oracle_knn(pts, k)
+    np.testing.assert_allclose(
+        np.sort(res.dists, axis=1), np.sqrt(od), rtol=1e-4, atol=1e-4)
+    assert not (res.ids == np.arange(len(pts))[:, None]).any(), "self in KNN"
+
+
+def test_hybrid_join_every_query_resolved():
+    pts = make_mixture(300, 300, dim=10, seed=2)
+    res = HybridKNNJoin(HybridConfig(k=3, m=4)).join(pts)
+    assert (res.ids >= 0).all()
+    assert np.isfinite(res.dists).all()
+    # source lanes are within {dense, sparse, brute}
+    assert set(np.unique(res.source)) <= {0, 1, 2}
+
+
+def test_hybrid_join_high_dim_m_projection():
+    """m < n indexing (§IV-C) keeps exactness."""
+    pts = make_mixture(250, 100, dim=40, seed=3)
+    res = HybridKNNJoin(HybridConfig(k=5, m=6)).join(pts)
+    od, _ = oracle_knn(pts, 5)
+    np.testing.assert_allclose(
+        np.sort(res.dists, axis=1), np.sqrt(od), rtol=1e-4, atol=1e-4)
+
+
+def test_gamma_shifts_work_to_cpu():
+    """γ↑ -> fewer dense-engine queries (paper §V-D)."""
+    pts = make_mixture(500, 200, dim=8, seed=4)
+    res_lo = HybridKNNJoin(HybridConfig(k=5, m=4, gamma=0.0)).join(pts)
+    res_hi = HybridKNNJoin(HybridConfig(k=5, m=4, gamma=1.0)).join(pts)
+    assert res_hi.stats.n_dense <= res_lo.stats.n_dense
+
+
+def test_rho_floor_respected():
+    """ρ forces ≥ ρ·|D| queries onto the sparse engine (§V-F)."""
+    pts = make_mixture(600, 50, dim=6, seed=5)
+    for rho in (0.3, 0.7):
+        res = HybridKNNJoin(HybridConfig(k=4, m=4, rho=rho)).join(pts)
+        assert res.stats.n_sparse >= rho * len(pts) - 1
+
+
+def test_beta_increases_epsilon():
+    pts = make_mixture(400, 100, dim=8, seed=6)
+    r0 = HybridKNNJoin(HybridConfig(k=5, m=4, beta=0.0)).join(pts)
+    r1 = HybridKNNJoin(HybridConfig(k=5, m=4, beta=1.0)).join(pts)
+    assert r1.stats.epsilon > r0.stats.epsilon
+
+
+# ---------------------------------------------------------------------------
+# baselines
+# ---------------------------------------------------------------------------
+
+def test_refimpl_matches_oracle():
+    pts = make_mixture(200, 100, dim=8, seed=7)
+    res, rank_times = refimpl_knn(pts, k=4, n_ranks=3)
+    od, _ = oracle_knn(pts, 4)
+    np.testing.assert_allclose(
+        np.sort(res.dists, axis=1), np.sqrt(od), rtol=1e-4, atol=1e-4)
+    assert len(rank_times) == 3 and all(t >= 0 for t in rank_times)
+
+
+def test_brute_self_join_matches_oracle():
+    pts = make_mixture(150, 80, dim=12, seed=8)
+    d, i = self_join_brute(jnp.asarray(pts), k=6, kernel_mode="ref")
+    od, oi = oracle_knn(pts, 6)
+    np.testing.assert_allclose(np.asarray(d), od, rtol=1e-4, atol=1e-4)
+
+
+def test_brute_knn_query_subset():
+    pts = make_mixture(100, 60, dim=5, seed=9)
+    q = pts[:20]
+    d, i = brute_knn(jnp.asarray(pts), jnp.asarray(q),
+                     jnp.arange(20, dtype=jnp.int32), k=3, kernel_mode="ref")
+    od, _ = oracle_knn(pts, 3)
+    np.testing.assert_allclose(np.asarray(d), od[:20], rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# ε selection (§V-C)
+# ---------------------------------------------------------------------------
+
+def test_select_epsilon_monotone_in_beta_and_k():
+    pts = jnp.asarray(make_mixture(500, 200, dim=8, seed=10))
+    key = jax.random.PRNGKey(0)
+    sels = [eps_lib.select_epsilon(pts, key, 5, beta)
+            for beta in (0.0, 0.5, 1.0)]
+    eps = [float(s.epsilon) for s in sels]
+    assert eps[0] <= eps[1] <= eps[2]
+    k_eps = [float(eps_lib.select_epsilon(pts, key, k, 0.0).epsilon)
+             for k in (1, 5, 25)]
+    assert k_eps[0] <= k_eps[1] <= k_eps[2]
+    # final ε = 2·ε^β (circumscribed n-sphere, §V-C2)
+    s = sels[0]
+    np.testing.assert_allclose(float(s.epsilon),
+                               2 * float(s.epsilon_beta), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# splitter (§V-D): Eq. 1 + thresholds
+# ---------------------------------------------------------------------------
+
+def test_n_min_equation_one():
+    # Eq. 1: n_min = (2ε)^n·K / vol_sphere(ε, n) — ratio of cube to sphere
+    from math import gamma as G, pi
+    for m in (2, 3, 6):
+        for k in (1, 5):
+            want = (2.0 ** m * k) * G(m / 2 + 1) / (pi ** (m / 2))
+            got = split_lib.n_min(k, m)
+            np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_n_thresh_gamma_interpolation():
+    k, m = 5, 4
+    base = split_lib.n_min(k, m)
+    assert split_lib.n_thresh(k, m, 0.0) == pytest.approx(base)
+    assert split_lib.n_thresh(k, m, 1.0) == pytest.approx(10 * base)
+
+
+def test_rho_model_equation_six():
+    assert split_lib.rho_model(2e-3, 1e-3) == pytest.approx(1e-3 / 3e-3)
+    assert split_lib.rho_model(0.0, 0.0) == pytest.approx(0.5)
+
+
+# ---------------------------------------------------------------------------
+# grid index + REORDER (§IV-A, §IV-D)
+# ---------------------------------------------------------------------------
+
+def test_reorder_by_variance_descending():
+    r = np.random.default_rng(11)
+    pts = r.normal(0, 1, (500, 6)) * np.array([0.1, 3.0, 1.0, 0.01, 2.0, 0.5])
+    out, order = grid_lib.reorder_by_variance(jnp.asarray(pts, jnp.float32))
+    v = np.var(np.asarray(out), axis=0)
+    assert (np.diff(v) <= 1e-5).all(), "variance must be non-increasing"
+
+
+def test_grid_candidates_superset_of_epsilon_ball():
+    """Every true ε-neighbor must be inside the 3^m cell neighborhood."""
+    pts = jnp.asarray(make_mixture(300, 100, dim=4, seed=12))
+    eps = jnp.float32(0.15)
+    idx = grid_lib.build_grid(pts, eps, 4)
+    proj = pts[:, :4]
+    coords = grid_lib.compute_cell_coords(idx, proj)
+    starts, counts = grid_lib.neighbor_ranges(idx, coords)
+    pos, valid, total, overflow = grid_lib.gather_candidates(
+        idx, starts, counts, 4096)
+    order = np.asarray(idx.order)
+    cands = order[np.clip(np.asarray(pos), 0, len(order) - 1)]
+    d2 = ((np.asarray(pts)[:, None] - np.asarray(pts)[None]) ** 2).sum(-1)
+    true_nbrs = d2 <= float(eps) ** 2
+    valid = np.asarray(valid) & ~np.asarray(overflow)[:, None]
+    for i in range(0, pts.shape[0], 37):
+        if overflow[i]:
+            continue                      # §V-E: overflow -> reassigned
+        cand_set = set(cands[i][valid[i]].tolist())
+        nbrs = set(np.nonzero(true_nbrs[i])[0].tolist())
+        assert nbrs <= cand_set | {i}

@@ -1,0 +1,85 @@
+"""kNN-LM retrieval head: the paper's join in the serving path."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import RetrievalConfig, get_smoke_config
+from repro.models import (
+    Datastore, build_datastore, decode_step_retrieval, init_cache,
+    init_params, knn_probs, lookup, prefill,
+)
+
+
+def _setup(lam=0.5):
+    cfg = dataclasses.replace(
+        get_smoke_config("olmo_1b"),
+        retrieval=RetrievalConfig(enabled=True, k=4, lam=lam))
+    params, _ = init_params(jax.random.PRNGKey(0), cfg)
+    r = np.random.default_rng(0)
+    corpus = jnp.asarray(r.integers(0, cfg.vocab_size, (4, 48)), jnp.int32)
+    ds = build_datastore(params, cfg, [corpus])
+    return cfg, params, corpus, ds
+
+
+def test_datastore_build_shapes():
+    cfg, params, corpus, ds = _setup()
+    assert ds.size == 4 * 47              # (hidden_t, token_{t+1}) pairs
+    assert ds.keys.shape[1] == cfg.d_model
+    assert ((ds.values >= 0) & (ds.values < cfg.vocab_size)).all()
+
+
+def test_lookup_exact_vs_oracle():
+    cfg, params, corpus, ds = _setup()
+    r = np.random.default_rng(1)
+    q = jnp.asarray(r.normal(size=(8, cfg.d_model)), jnp.float32)
+    d2, vals = lookup(ds, q, k=4)
+    qp = np.asarray(q)[:, np.asarray(ds.order)][:, :ds.keys.shape[1]]
+    o = ((qp[:, None] - np.asarray(ds.keys)[None]) ** 2).sum(-1)
+    idx = np.argsort(o, axis=1)[:, :4]
+    np.testing.assert_allclose(np.sort(np.asarray(d2), axis=1),
+                               np.take_along_axis(o, idx, axis=1),
+                               rtol=1e-3, atol=1e-3)
+    assert (np.diff(np.asarray(d2), axis=1) >= -1e-6).all()
+
+
+def test_knn_probs_is_distribution():
+    d2 = jnp.asarray([[0.1, 0.2, 0.5, 1.0]])
+    vals = jnp.asarray([[3, 3, 7, -1]], jnp.int32)   # one invalid neighbor
+    p = knn_probs(d2, vals, vocab=10, temperature=1.0)
+    assert p.shape == (1, 10)
+    np.testing.assert_allclose(float(p.sum()), 1.0, rtol=1e-5)
+    assert float(p[0, 3]) > float(p[0, 7])           # closer -> heavier
+    assert float(p[0, 1]) == 0.0
+
+
+def test_retrieval_recalls_memorized_continuation():
+    """On a query hidden state that IS in the datastore, the kNN
+    distribution puts its mass on the stored next token — λ=1 serving
+    must argmax to the memorized continuation."""
+    cfg, params, corpus, ds = _setup(lam=1.0)
+    cache = init_cache(cfg, corpus.shape[0], corpus.shape[1] + 4)
+    # prefill the exact corpus prefix; the decode-step query then equals a
+    # stored key (same tokens, same params)
+    t = 20
+    _, cache = prefill(params, cfg, corpus[:, :t], corpus.shape[1] + 4)
+    logp, _ = decode_step_retrieval(
+        params, cfg, corpus[:, t], cache, jnp.int32(t), ds)
+    pred = np.asarray(jnp.argmax(logp, axis=-1))
+    want = np.asarray(corpus[:, t + 1])
+    assert (pred == want).mean() >= 0.75, (pred, want)
+
+
+def test_retrieval_interpolation_changes_distribution():
+    cfg, params, corpus, ds = _setup(lam=0.5)
+    cache = init_cache(cfg, 4, 40)
+    _, cache0 = prefill(params, cfg, corpus[:, :20], 40)
+    lam0, _ = decode_step_retrieval(
+        params, cfg, corpus[:, 20], cache0,
+        jnp.int32(20), ds)
+    cfg_nolam = dataclasses.replace(
+        cfg, retrieval=dataclasses.replace(cfg.retrieval, lam=0.0))
+    lam_off, _ = decode_step_retrieval(
+        params, cfg_nolam, corpus[:, 20], cache0, jnp.int32(20), ds)
+    assert not np.allclose(np.asarray(lam0), np.asarray(lam_off))

@@ -1,0 +1,156 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import HybridConfig, HybridKNNJoin, brute_knn
+from repro.core import splitter as split_lib
+from repro.kernels.knn_topk import ops as topk_ops, ref as topk_ref
+from repro.optim import dequantize, ef_quantize, quantize
+from repro.utils import cdiv, pad_to, round_up
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# KNN invariants: for ANY point cloud and parameters the join is exact
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(30, 120),
+    dim=st.integers(2, 12),
+    k=st.integers(1, 6),
+    seed=st.integers(0, 2**31 - 1),
+    gamma=st.floats(0.0, 1.0),
+    rho=st.floats(0.0, 1.0),
+)
+def test_hybrid_join_invariants(n, dim, k, seed, gamma, rho):
+    r = np.random.default_rng(seed)
+    pts = r.normal(0, 1, (n, dim)).astype(np.float32)
+    res = HybridKNNJoin(HybridConfig(
+        k=k, m=min(4, dim), gamma=gamma, rho=rho,
+        n_query_sample=min(64, n), n_pair_sample=256,
+        query_block=32, dense_budget=256, sparse_budget=128,
+        brute_chunk=256)).join(pts)
+    # 1. exactness against the float64 oracle
+    d2 = ((pts[:, None].astype(np.float64) - pts[None]) ** 2).sum(-1)
+    np.fill_diagonal(d2, np.inf)
+    want = np.sqrt(np.sort(d2, axis=1)[:, :k])
+    np.testing.assert_allclose(np.sort(res.dists, axis=1), want,
+                               rtol=1e-3, atol=1e-3)
+    # 2. no self-neighbors, all ids valid
+    assert not (res.ids == np.arange(n)[:, None]).any()
+    assert ((res.ids >= 0) & (res.ids < n)).all()
+    # 3. every query attributed to exactly one engine
+    assert res.source.shape == (n,)
+
+
+@settings(**SETTINGS)
+@given(
+    q=st.integers(1, 40), c=st.integers(8, 200), d=st.integers(1, 16),
+    k=st.integers(1, 8), seed=st.integers(0, 2**31 - 1),
+)
+def test_knn_topk_kernel_property(q, c, d, k, seed):
+    # contract: k ≤ |candidates| (the streaming wrapper guarantees this by
+    # padding chunks; the raw kernel requires it)
+    r = np.random.default_rng(seed)
+    qa = jnp.asarray(r.normal(size=(q, d)), jnp.float32)
+    ca = jnp.asarray(r.normal(size=(c, d)), jnp.float32)
+    qids = jnp.arange(q, dtype=jnp.int32)
+    cids = jnp.arange(c, dtype=jnp.int32)
+    gd, gi = topk_ops.knn_topk(qa, ca, qids, cids, k=k, mode="interpret")
+    wd, wi = topk_ref.knn_topk_ref(qa, ca, qids, cids, k=k)
+    np.testing.assert_allclose(np.asarray(gd), np.asarray(wd),
+                               rtol=1e-3, atol=1e-4)
+    # ascending distances; −1 ids only where dist is inf
+    gd_np, gi_np = np.asarray(gd), np.asarray(gi)
+    finite = np.isfinite(gd_np)
+    assert (np.diff(np.where(finite, gd_np, np.inf), axis=1)
+            >= -1e-6).all()
+    assert ((gi_np >= 0) == finite).all()
+
+
+# ---------------------------------------------------------------------------
+# splitter math
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(k=st.integers(1, 64), m=st.integers(1, 8),
+       g1=st.floats(0, 1), g2=st.floats(0, 1))
+def test_n_thresh_monotone_in_gamma(k, m, g1, g2):
+    lo, hi = sorted((g1, g2))
+    assert split_lib.n_thresh(k, m, lo) <= split_lib.n_thresh(k, m, hi) + 1e-9
+    assert split_lib.n_min(k, m) >= k    # cube ⊇ sphere ⇒ need > K points
+
+
+@settings(**SETTINGS)
+@given(t1=st.floats(1e-9, 1.0), t2=st.floats(1e-9, 1.0))
+def test_rho_model_in_unit_interval(t1, t2):
+    rho = split_lib.rho_model(t1, t2)
+    assert 0.0 <= rho <= 1.0
+    # Eq. 4: T1·|Qcpu| == T2·|Qgpu| at the model point
+    np.testing.assert_allclose(t1 * rho, t2 * (1 - rho), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# int8 error-feedback compression
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(n=st.integers(1, 4096), seed=st.integers(0, 2**31 - 1),
+       scale=st.floats(1e-6, 1e3))
+def test_quantize_roundtrip_bounded(n, seed, scale):
+    r = np.random.default_rng(seed)
+    g = jnp.asarray(r.normal(0, scale, (n,)), jnp.float32)
+    q, s = quantize(g)
+    err = np.abs(np.asarray(dequantize(q, s) - g))
+    assert (err <= float(s) / 2 + 1e-6).all()    # half-ULP of the int8 grid
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1), steps=st.integers(2, 30))
+def test_error_feedback_drift_bounded(seed, steps):
+    """Σ applied updates tracks Σ true gradients within one quantum —
+    the unbiasedness-over-time property of error feedback."""
+    r = np.random.default_rng(seed)
+    resid = jnp.zeros((64,), jnp.float32)
+    total_true = np.zeros(64)
+    total_applied = np.zeros(64)
+    max_scale = 0.0
+    for _ in range(steps):
+        g = jnp.asarray(r.normal(0, 1, (64,)), jnp.float32)
+        q, s, resid = ef_quantize(g, resid)
+        total_true += np.asarray(g)
+        total_applied += np.asarray(dequantize(q, s))
+        max_scale = max(max_scale, float(s))
+    drift = np.abs(total_true - total_applied)
+    assert (drift <= max_scale + 1e-5).all()     # == |final residual| bound
+
+
+# ---------------------------------------------------------------------------
+# shape utilities
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(a=st.integers(0, 10**6), b=st.integers(1, 10**4))
+def test_cdiv_round_up(a, b):
+    assert cdiv(a, b) == -(-a // b)
+    assert round_up(a, b) % b == 0
+    assert 0 <= round_up(a, b) - a < b
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(1, 100), target=st.integers(1, 200))
+def test_pad_to(n, target):
+    x = jnp.ones((n, 3))
+    if target < n:
+        try:
+            pad_to(x, target)
+            assert False, "should refuse to shrink"
+        except ValueError:
+            return
+    y = pad_to(x, target, value=7.0)
+    assert y.shape == (target, 3)
+    assert (np.asarray(y[n:]) == 7.0).all()
