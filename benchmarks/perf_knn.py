@@ -80,13 +80,60 @@ HYPOTHESES = {
                   "device (memory ceiling) — the paper's single-GPU form",
     "hybrid_spmd": "the paper's full algorithm: grid-pruned candidate "
                    "sets cut compute ~|D|/cell-occupancy vs brute ring",
+    "session_serving": "persistent JoinSession amortizes engine "
+                       "compiles: steady-state joins pay query work "
+                       "only (zero retrace on the response path)",
 }
+
+
+def run_session_serving(n_batches: int):
+    """Executed (not lowered) serving measurement: cold vs steady-state
+    join latency through the work-queue scheduler on a scaled workload."""
+    import time
+
+    import numpy as np
+
+    from repro.core import HybridConfig
+    from repro.runtime import JoinSession
+
+    n, dim, k = 4096, 16, 8
+    r = np.random.default_rng(0)
+    pts = np.concatenate([
+        r.normal(0, 0.05, (n // 2, dim)),
+        r.uniform(-3, 3, (n - n // 2, dim)),
+    ]).astype(np.float32)
+    session = JoinSession(HybridConfig(
+        k=k, m=min(6, dim), gamma=0.2, rho=0.2, n_batches=n_batches))
+
+    t0 = time.perf_counter()
+    cold = session.join(pts)
+    t_cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    steady = session.join(pts.copy())       # same shapes, fresh values
+    t_steady = time.perf_counter() - t0
+    return {
+        "arch": "knn_join", "shape": f"serving_{n}x{dim}d",
+        "variant": "session_serving",
+        "hypothesis": HYPOTHESES["session_serving"],
+        "n_batches": n_batches,
+        "t_cold_s": t_cold,
+        "t_steady_s": t_steady,
+        "compiles_cold": cold.stats.n_engine_compiles,
+        "compiles_steady": steady.stats.n_engine_compiles,
+        "steady_batch_sizes": steady.stats.batch_sizes,
+        "steady_t_batches": steady.stats.t_dense_batches,
+        "n_rebalanced": steady.stats.n_rebalanced,
+        "rho_online": steady.stats.rho_online,
+        "response_s": steady.stats.response_time,
+    }
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--variant", nargs="+", default=["baseline"],
                     choices=sorted(HYPOTHESES))
+    ap.add_argument("--n-batches", type=int, default=4,
+                    help="work-queue granularity for session_serving")
     args = ap.parse_args()
     mesh = make_production_mesh()
     chips = mesh_chip_count(mesh)
@@ -94,6 +141,15 @@ def main():
     path = os.path.join(PERF_DIR, "knn_join__ring.json")
     hist = json.load(open(path)) if os.path.exists(path) else []
     for variant in args.variant:
+        if variant == "session_serving":
+            rec = run_session_serving(args.n_batches)
+            hist = [h for h in hist if h["variant"] != variant] + [rec]
+            print(f"[perf-knn] {variant}: cold {rec['t_cold_s']:.3f}s "
+                  f"({rec['compiles_cold']} engine compiles) steady "
+                  f"{rec['t_steady_s']:.3f}s ({rec['compiles_steady']} "
+                  f"compiles) nb={rec['n_batches']} "
+                  f"rebalanced={rec['n_rebalanced']}")
+            continue
         fn, specs = build(variant, mesh)
         with mesh:
             lowered = jax.jit(fn).lower(*specs) if variant == "replicated" \

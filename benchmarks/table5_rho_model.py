@@ -32,8 +32,11 @@ def run(args):
         pts = load_dataset(ds, args.scale)
         k = PAPER_K[ds]
         beta, gamma = _best_params(ds, args.out)
+        # online_rebalance off: this table contrasts STATIC ρ choices —
+        # dynamic demotion would erode exactly the effect being measured.
         mk = lambda rho: HybridConfig(k=k, m=min(6, pts.shape[1]),
-                                      beta=beta, gamma=gamma, rho=rho)
+                                      beta=beta, gamma=gamma, rho=rho,
+                                      online_rebalance=False)
         _, res0 = timed_trials(
             lambda: HybridKNNJoin(mk(0.5)).join(pts), args.trials)
         t_init = res0.stats.response_time

@@ -3,13 +3,19 @@
     PYTHONPATH=src python examples/quickstart.py
 
 Walks the full Algorithm 1 pipeline — REORDER, ε selection, grid build,
-β/γ/ρ work split, dense MXU-tile engine, sparse pyramid engine, failure
-reassignment, brute certification — and verifies the result is exact.
+β/γ/ρ work split, the §V-A work queue feeding the dense MXU-tile engine
+in batches while the sparse pyramid engine drains asynchronously,
+online ρ rebalance, failure reassignment, brute certification — and
+verifies the result is exact.  A second join through the same
+``JoinSession`` shows the serving path: zero new engine compilations.
 """
+import time
+
 import numpy as np
 
-from repro.core import HybridConfig, HybridKNNJoin
+from repro.core import HybridConfig
 from repro.data import pointclouds
+from repro.runtime import JoinSession
 
 
 def main():
@@ -19,8 +25,11 @@ def main():
     pts = pointclouds.load("chist", n_override=4000)
     k = 5
 
-    cfg = HybridConfig(k=k, m=6, beta=0.0, gamma=0.4, rho=0.2)
-    result = HybridKNNJoin(cfg).join(pts)
+    cfg = HybridConfig(k=k, m=6, beta=0.0, gamma=0.4, rho=0.2, n_batches=4)
+    session = JoinSession(cfg)
+    t0 = time.perf_counter()
+    result = session.join(pts)
+    t_cold = time.perf_counter() - t0
     s = result.stats
 
     print("HYBRIDKNN-JOIN on a CHist-like cloud "
@@ -28,6 +37,9 @@ def main():
     print(f"  selected ε            : {s.epsilon:.4f} (ε^β = {s.epsilon_beta:.4f})")
     print(f"  work split            : {s.n_dense} dense / {s.n_sparse} sparse "
           f"(threshold {s.n_thresh:.1f} pts/cell)")
+    print(f"  queue                 : {s.n_batches} dense batches {s.batch_sizes}, "
+          f"{s.n_sparse_rounds} sparse rounds, "
+          f"{s.n_rebalanced} demoted online (ρ^online {s.rho_online:.3f})")
     print(f"  dense-engine failures : {s.n_failed} (reassigned, §V-E)")
     print(f"  uncertified -> brute  : {s.n_uncertified}")
     print(f"  response time         : {s.response_time:.3f}s "
@@ -46,6 +58,14 @@ def main():
     by_engine = np.bincount(result.source, minlength=3)
     print(f"  resolved by engine    : dense={by_engine[0]} "
           f"sparse={by_engine[1]} brute={by_engine[2]}")
+
+    # serving path: same-shaped second join reuses every compiled engine
+    t0 = time.perf_counter()
+    again = session.join(pts.copy())
+    t_steady = time.perf_counter() - t0
+    print(f"  serving (2nd join)    : {t_steady:.3f}s vs {t_cold:.3f}s cold, "
+          f"{again.stats.n_engine_compiles} new engine compiles "
+          f"(cache: {session.compile_counts})")
 
 
 if __name__ == "__main__":

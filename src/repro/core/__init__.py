@@ -10,11 +10,13 @@ from repro.core.hybrid import HybridConfig, HybridKNNJoin, JoinStats, KNNResult
 from repro.core.refimpl import refimpl_knn
 from repro.core.brute import brute_knn, self_join_brute
 from repro.core.distributed import hybrid_join_spmd, ring_self_join
+from repro.core.queue import AsyncEngineCall, QueueReport, WorkQueue, run_work_queue
 from repro.core import epsilon, grid, splitter
 
 __all__ = [
     "HybridConfig", "HybridKNNJoin", "JoinStats", "KNNResult",
     "refimpl_knn", "brute_knn", "self_join_brute",
     "ring_self_join", "hybrid_join_spmd",
+    "AsyncEngineCall", "QueueReport", "WorkQueue", "run_work_queue",
     "epsilon", "grid", "splitter",
 ]

@@ -36,6 +36,7 @@ from repro.core import grid as grid_lib
 from repro.core import sparse_knn as sparse_lib
 from repro.core import splitter as split_lib
 from repro.kernels.knn_topk import ops as topk_ops
+from repro import utils
 
 
 # --------------------------------------------------------------------------
@@ -67,10 +68,10 @@ def ring_self_join(
     def local(qpts, qids, cpts, cids):
         # qpts (q_loc, n); cpts (c_loc, n) — resident shard, rotates.
         # pcast: the running buffers are device-varying from step 1 on.
-        run_d = jax.lax.pcast(
+        run_d = utils.pcast(
             jnp.full((qpts.shape[0], k), jnp.inf, jnp.float32), axes, to="varying"
         )
-        run_i = jax.lax.pcast(
+        run_i = utils.pcast(
             jnp.full((qpts.shape[0], k), -1, jnp.int32), axes, to="varying"
         )
         c_loc = cpts.shape[0]
@@ -101,7 +102,7 @@ def ring_self_join(
         return rd, ri
 
     spec = P(axes)
-    shard_fn = jax.shard_map(
+    shard_fn = utils.shard_map(
         local, mesh=mesh,
         in_specs=(spec, spec, spec, spec),
         out_specs=(spec, spec),
@@ -139,10 +140,10 @@ def ring_self_join_bf16(
     ring = [(i, (i + 1) % n_shards) for i in range(n_shards)]
 
     def local(qpts, qids, cpts, cids):
-        run_d = jax.lax.pcast(
+        run_d = utils.pcast(
             jnp.full((qpts.shape[0], k), jnp.inf, jnp.float32), axes,
             to="varying")
-        run_i = jax.lax.pcast(
+        run_i = utils.pcast(
             jnp.full((qpts.shape[0], k), -1, jnp.int32), axes, to="varying")
         wire = jax.lax.bitcast_convert_type(
             cpts.astype(jnp.bfloat16), jnp.int16)     # opaque wire format
@@ -173,7 +174,7 @@ def ring_self_join_bf16(
         return rd, ri
 
     spec = P(axes)
-    shard_fn = jax.shard_map(
+    shard_fn = utils.shard_map(
         local, mesh=mesh,
         in_specs=(spec, spec, spec, spec),
         out_specs=(spec, spec))
@@ -322,7 +323,7 @@ def hybrid_join_spmd(
         return SPMDJoinResult(out_d, out_i, out_s, unresolved)
 
     spec_q = P(axes)
-    shard_fn = jax.shard_map(
+    shard_fn = utils.shard_map(
         local, mesh=mesh,
         in_specs=(P(), spec_q, P()),
         out_specs=SPMDJoinResult(spec_q, spec_q, spec_q, P()),

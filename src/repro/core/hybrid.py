@@ -8,31 +8,30 @@ fallback lane:
   2.  select ε from sampled histogram          (§V-C,  β)
   3.  build the ε-grid index, m ≤ n dims       (§IV-A, §IV-C)
   4.  split work: density + ρ floor            (§V-D,  γ, ρ)
-  5.  dense engine on Q^dense                  (§V-B, GPU-JOIN)
+  5.  dense engine on Q^dense, dequeued in
+      n_batches work-queue batches             (§V-A/§V-B, GPU-JOIN)
   6.  collect failures Q^fail                  (§V-E)
-  7.  sparse engine on Q^sparse ∪ Q^fail       (§V-B, EXACT-ANN)
+  7.  sparse engine drains Q^sparse async;
+      online ρ rebalance demotes from the
+      queue tail between rounds                (§V-B/§V-F, EXACT-ANN)
   8.  brute-certify the residue                (exactness backstop)
   9.  merge + report T₁/T₂ and ρ^Model         (§VI-E2, Eq. 6)
 
-The per-engine wall times recorded here are what the paper calls T₁ and
-T₂; ``stats.rho_model`` reproduces Table V's analytic load-balance point.
+Execution lives in ``repro.runtime.session.JoinSession`` (index ownership
++ compiled-engine caching) driving ``repro.core.queue`` (the multi-round
+work-queue scheduler); ``HybridKNNJoin`` is kept as the thin, stable
+entry point.  The per-engine wall times recorded here are what the paper
+calls T₁ and T₂; ``stats.rho_model`` reproduces Table V's analytic
+load-balance point.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Optional
+from typing import List, Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import brute as brute_lib
-from repro.core import dense_join as dense_lib
-from repro.core import epsilon as eps_lib
-from repro.core import grid as grid_lib
-from repro.core import sparse_knn as sparse_lib
-from repro.core import splitter as split_lib
 from repro.utils import round_up
 
 
@@ -53,6 +52,11 @@ class HybridConfig:
     # dense engine (GPU-JOIN analogue)
     dense_budget: int = 1024      # candidate budget per query (batching, §IV-B)
     query_block: int = 128        # queries per streamed block (TSTATIC tile)
+    # work-queue scheduler (§V-A, Table III granularity)
+    n_batches: int = 4            # dense batches dequeued per join
+    online_rebalance: bool = True # Eq. 6-driven demotion between rounds
+    rebalance_sync_batches: int = 1  # force a T₁ harvest after this many
+                                     # dense batches (0: poll only)
     # sparse engine (EXACT-ANN analogue)
     n_levels: int = 6
     level_scale: float = 2.0
@@ -66,6 +70,7 @@ class HybridConfig:
     def __post_init__(self):
         assert 0.0 <= self.beta <= 1.0 and 0.0 <= self.gamma <= 1.0
         assert 0.0 <= self.rho <= 1.0 and self.k >= 1 and self.m >= 1
+        assert self.n_batches >= 1 and self.rebalance_sync_batches >= 0
 
 
 @dataclasses.dataclass
@@ -82,14 +87,29 @@ class JoinStats:
     t_dense: float = 0.0
     t_sparse: float = 0.0
     t_brute: float = 0.0
+    t_wall: float = 0.0           # scheduler wall time (engines overlap)
     t1_per_query: float = 0.0     # paper T₁ (sparse engine, per query)
     t2_per_query: float = 0.0     # paper T₂ (dense engine, per query)
     rho_model: float = 0.5        # Eq. 6
+    # work-queue scheduler accounting (§V-A/§V-F)
+    n_batches: int = 0            # dense batches actually dequeued
+    batch_sizes: List[int] = dataclasses.field(default_factory=list)
+    t_dense_batches: List[float] = dataclasses.field(default_factory=list)
+    n_rebalanced: int = 0         # queries demoted online beyond the ρ floor
+    n_sparse_rounds: int = 0
+    n_sparse_engine_total: int = 0  # all queries the sparse engine processed
+    rho_online: float = 0.0       # last Eq. 6 estimate the scheduler applied
+    n_engine_compiles: int = 0    # engine compilations triggered by this join
 
     @property
     def response_time(self) -> float:
         """Main-operation response time (paper excludes data load / index
-        construction; we additionally report t_build separately)."""
+        construction; we additionally report t_build separately).  The
+        scheduler overlaps the engines, so this is the measured wall time
+        of the query phase — NOT the sum of per-engine times, which
+        double-counts the overlap window."""
+        if self.t_wall > 0.0:
+            return self.t_wall
         return self.t_dense + self.t_sparse + self.t_brute
 
 
@@ -114,140 +134,18 @@ def _pad_ids(ids: np.ndarray, block: int) -> jnp.ndarray:
 
 
 class HybridKNNJoin:
-    """Reusable joiner: ``HybridKNNJoin(cfg).join(points)``."""
+    """Reusable joiner: ``HybridKNNJoin(cfg).join(points)``.
+
+    Thin compatibility wrapper over ``repro.runtime.session.JoinSession``
+    — the session API exposes the same joins plus the compile-count
+    probe and engine cache introspection."""
 
     def __init__(self, config: HybridConfig):
         self.config = config
+        # Imported here: runtime.session imports this module's dataclasses.
+        from repro.runtime.session import JoinSession
+
+        self.session = JoinSession(config)
 
     def join(self, points, epsilon: Optional[float] = None) -> KNNResult:
-        cfg = self.config
-        pts = jnp.asarray(points, jnp.float32)
-        npts, ndim = pts.shape
-        assert cfg.k < npts, "K must be smaller than |D|"
-        m = min(cfg.m, ndim)
-        key = jax.random.PRNGKey(cfg.seed)
-
-        # (1) REORDER — distances are dim-permutation invariant, so all
-        # downstream work happens in reordered space; ids are unaffected.
-        if cfg.reorder:
-            points_r, _ = grid_lib.reorder_by_variance(pts)
-        else:
-            points_r = pts
-
-        # (2) ε selection (§V-C2) — skipped when the caller pins ε.
-        t0 = time.perf_counter()
-        if epsilon is None:
-            sel = eps_lib.select_epsilon(
-                points_r, key, cfg.k, cfg.beta,
-                n_query_sample=min(cfg.n_query_sample, npts),
-                n_bins=cfg.n_bins,
-                n_pair_sample=cfg.n_pair_sample,
-            )
-            eps = float(jax.block_until_ready(sel.epsilon))
-            eps_beta = float(sel.epsilon_beta)
-        else:
-            eps, eps_beta = float(epsilon), float(epsilon) / 2.0
-        t_select = time.perf_counter() - t0
-
-        # (3) index + pyramid build.
-        t0 = time.perf_counter()
-        index = grid_lib.build_grid(points_r, jnp.float32(eps), m)
-        pyramid = sparse_lib.build_pyramid(
-            points_r, jnp.float32(eps), m, n_levels=cfg.n_levels,
-            level_scale=cfg.level_scale,
-        )
-        jax.block_until_ready(index.unique_cells)
-        t_build = time.perf_counter() - t0
-
-        # (4) split work between engines (§V-D, §V-F).
-        split = split_lib.split_work(index, cfg.k, cfg.gamma, cfg.rho)
-        to_dense = np.asarray(split.to_dense)
-        dense_ids = np.nonzero(to_dense)[0].astype(np.int32)
-        sparse_ids = np.nonzero(~to_dense)[0].astype(np.int32)
-
-        final_d = np.full((npts, cfg.k), np.inf, np.float32)
-        final_i = np.full((npts, cfg.k), -1, np.int32)
-        source = np.full((npts,), 1, np.int8)
-        stats = JoinStats(
-            epsilon=eps, epsilon_beta=eps_beta,
-            n_dense=len(dense_ids), n_sparse=len(sparse_ids),
-            n_thresh=float(split.threshold),
-            t_select_eps=t_select, t_build=t_build,
-        )
-
-        # (5)+(6) dense engine + failure collection.
-        failed_ids = np.zeros((0,), np.int32)
-        if len(dense_ids):
-            qp = _pad_ids(dense_ids, cfg.query_block)
-            t0 = time.perf_counter()
-            dres = jax.block_until_ready(
-                dense_lib.dense_join(
-                    index, points_r, qp, jnp.float32(eps),
-                    k=cfg.k, budget=cfg.dense_budget,
-                    query_block=cfg.query_block,
-                )
-            )
-            stats.t_dense = time.perf_counter() - t0
-            nd = len(dense_ids)
-            ok = ~np.asarray(dres.failed[:nd])
-            ok_ids = dense_ids[ok]
-            final_d[ok_ids] = np.asarray(dres.dists[:nd])[ok]
-            final_i[ok_ids] = np.asarray(dres.ids[:nd])[ok]
-            source[ok_ids] = 0
-            failed_ids = dense_ids[~ok]
-            stats.n_failed = len(failed_ids)
-            if len(ok_ids):
-                stats.t2_per_query = stats.t_dense / len(ok_ids)
-
-        # (7) sparse engine on Q^sparse ∪ Q^fail (paper runs Q^fail after
-        # Q^CPU on the same engine — we batch them together).
-        sparse_all = np.concatenate([sparse_ids, failed_ids]).astype(np.int32)
-        uncert_ids = np.zeros((0,), np.int32)
-        if len(sparse_all):
-            qp = _pad_ids(sparse_all, cfg.query_block)
-            t0 = time.perf_counter()
-            sres = jax.block_until_ready(
-                sparse_lib.sparse_knn(
-                    pyramid, points_r, qp,
-                    k=cfg.k, budget=cfg.sparse_budget,
-                    query_block=cfg.query_block, sel_factor=cfg.sel_factor,
-                )
-            )
-            stats.t_sparse = time.perf_counter() - t0
-            ns = len(sparse_all)
-            cert = np.asarray(sres.certified[:ns])
-            cert_ids = sparse_all[cert]
-            final_d[cert_ids] = np.asarray(sres.dists[:ns])[cert]
-            final_i[cert_ids] = np.asarray(sres.ids[:ns])[cert]
-            source[cert_ids] = 1
-            uncert_ids = sparse_all[~cert]
-            stats.n_uncertified = len(uncert_ids)
-            stats.t1_per_query = stats.t_sparse / max(len(sparse_all), 1)
-
-        # (8) brute backstop — exactness regardless of parameter choices.
-        if len(uncert_ids):
-            qp = _pad_ids(uncert_ids, cfg.query_block)
-            t0 = time.perf_counter()
-            bd, bi = jax.block_until_ready(
-                brute_lib.brute_knn(
-                    points_r, points_r[np.clip(qp, 0, npts - 1)], qp,
-                    k=cfg.k, corpus_chunk=cfg.brute_chunk,
-                    kernel_mode=cfg.kernel_mode,
-                )
-            )
-            stats.t_brute = time.perf_counter() - t0
-            nu = len(uncert_ids)
-            final_d[uncert_ids] = np.asarray(bd[:nu])
-            final_i[uncert_ids] = np.asarray(bi[:nu])
-            source[uncert_ids] = 2
-
-        # (9) ρ^Model (Eq. 6) from the measured per-query engine costs.
-        stats.rho_model = split_lib.rho_model(
-            stats.t1_per_query, stats.t2_per_query
-        )
-        return KNNResult(
-            dists=np.sqrt(np.maximum(final_d, 0.0)),
-            ids=final_i,
-            source=source,
-            stats=stats,
-        )
+        return self.session.join(points, epsilon)

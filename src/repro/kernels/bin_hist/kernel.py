@@ -16,6 +16,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams; support both.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 
 def _hist_kernel(q_ref, c_ref, qid_ref, cid_ref, bw_ref, out_ref, *, n_bins: int):
     i = pl.program_id(0)
@@ -86,7 +89,7 @@ def distance_bin_histogram(
         ],
         out_specs=pl.BlockSpec((1, n_bins), lambda i, j: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((1, n_bins), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary"),
         ),
         interpret=interpret,

@@ -23,6 +23,9 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams; support both.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 _INF = np.float32(np.inf)
 
 
@@ -108,7 +111,7 @@ def knn_tile_topk(
             jax.ShapeDtypeStruct((n_c, q_n, k), jnp.float32),
             jax.ShapeDtypeStruct((n_c, q_n, k), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

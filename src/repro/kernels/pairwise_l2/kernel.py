@@ -25,6 +25,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams; support both.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 
 def _pairwise_kernel(q_ref, c_ref, out_ref, *, shortc_eps2: float | None):
     kd = pl.program_id(2)
@@ -85,7 +88,7 @@ def pairwise_sq_l2(
         ],
         out_specs=pl.BlockSpec((block_q, block_c), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((q_n, c_n), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -15,14 +15,22 @@ from __future__ import annotations
 
 import jax
 import numpy as np
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+try:  # jax ≥ 0.5 has explicit axis types; older versions are Auto-only.
+    from jax.sharding import AxisType
+
+    def _axis_kw(n_axes: int) -> dict:
+        return {"axis_types": (AxisType.Auto,) * n_axes}
+except ImportError:
+    def _axis_kw(n_axes: int) -> dict:
+        return {}
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_kw(len(axes)))
 
 
 def make_host_mesh(model: int = 1) -> Mesh:
@@ -30,9 +38,7 @@ def make_host_mesh(model: int = 1) -> Mesh:
     used by tests (8 host devices) and CPU examples (1 device)."""
     n = len(jax.devices())
     data = n // model
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(AxisType.Auto, AxisType.Auto))
+    return jax.make_mesh((data, model), ("data", "model"), **_axis_kw(2))
 
 
 def mesh_chip_count(mesh: Mesh) -> int:

@@ -37,6 +37,7 @@ from repro.core import brute as brute_lib
 from repro.core import grid as grid_lib
 from repro.kernels.knn_topk import ops as topk_ops
 from repro.models import transformer
+from repro import utils
 
 
 @jax.tree_util.register_pytree_node_class
@@ -105,9 +106,9 @@ def sharded_lookup(mesh: Mesh, axis: str, *, k: int):
     ring = [(i, (i + 1) % n_shards) for i in range(n_shards)]
 
     def local(q, keys, vals):
-        run_d = jax.lax.pcast(
+        run_d = utils.pcast(
             jnp.full((q.shape[0], k), jnp.inf, jnp.float32), axis, to="varying")
-        run_v = jax.lax.pcast(
+        run_v = utils.pcast(
             jnp.full((q.shape[0], k), -1, jnp.int32), axis, to="varying")
 
         def step(_, carry):
@@ -126,7 +127,7 @@ def sharded_lookup(mesh: Mesh, axis: str, *, k: int):
             0, n_shards, step, (run_d, run_v, keys, vals))
         return rd, rv
 
-    shard_fn = jax.shard_map(
+    shard_fn = utils.shard_map(
         local, mesh=mesh,
         in_specs=(P(), P(axis), P(axis)),
         out_specs=(P(), P()),

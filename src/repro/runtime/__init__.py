@@ -1,8 +1,10 @@
-"""Runtime substrate: fault tolerance, straggler mitigation, supervision."""
+"""Runtime substrate: sessions, fault tolerance, straggler mitigation."""
+from repro.runtime.session import JoinSession, clear_engine_cache
 from repro.runtime.stragglers import StragglerConfig, StragglerDetector, suggest_rho
 from repro.runtime.supervisor import RunReport, Supervisor, SupervisorConfig
 
 __all__ = [
+    "JoinSession", "clear_engine_cache",
     "StragglerConfig", "StragglerDetector", "suggest_rho",
     "RunReport", "Supervisor", "SupervisorConfig",
 ]

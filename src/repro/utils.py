@@ -40,6 +40,28 @@ def static_field(**kw):
     return dataclasses.field(metadata={"static": True}, **kw)
 
 
+def shard_map(f, *, mesh, in_specs, out_specs, **kw):
+    """``jax.shard_map`` across jax versions: newer releases expose it at
+    the top level with ``check_vma``; older ones keep it under
+    ``jax.experimental.shard_map`` with the ``check_rep`` spelling."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is None:
+        from jax.experimental.shard_map import shard_map as sm
+        if "check_vma" in kw:
+            kw["check_rep"] = kw.pop("check_vma")
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+
+def pcast(x, axes, *, to="varying"):
+    """``jax.lax.pcast`` when available (newer jax tracks varying-axis
+    types inside shard_map); identity on older versions, whose
+    replication checker does not require the explicit cast."""
+    fn = getattr(jax.lax, "pcast", None)
+    if fn is None:
+        return x
+    return fn(x, axes, to=to)
+
+
 def cdiv(a: int, b: int) -> int:
     return -(-a // b)
 

@@ -148,6 +148,46 @@ def test_rho_model_equation_six():
     assert split_lib.rho_model(0.0, 0.0) == pytest.approx(0.5)
 
 
+def test_n_min_n_thresh_closed_form_values():
+    """Spot checks against hand-computed Eq. 1 values."""
+    from math import pi
+    # k=1, m=2: 1·4·Γ(2)/π = 4/π
+    assert split_lib.n_min(1, 2) == pytest.approx(4.0 / pi)
+    # k=2, m=4: 2·16·Γ(3)/π² = 64/π²
+    assert split_lib.n_min(2, 4) == pytest.approx(64.0 / pi**2)
+    # k=5, m=6: 5·64·Γ(4)/π³ = 1920/π³
+    assert split_lib.n_min(5, 6) == pytest.approx(1920.0 / pi**3)
+    # γ interpolates linearly between n_min and 10·n_min
+    assert split_lib.n_thresh(2, 4, 0.5) == pytest.approx(5.5 * 64.0 / pi**2)
+    assert split_lib.n_thresh(5, 6, 0.25) == pytest.approx(
+        3.25 * 1920.0 / pi**3)
+
+
+def test_rho_floor_demotes_least_populated_cells():
+    """§V-F: when ρ forces demotion, the queries moved to the sparse
+    engine come from the least-populated dense cells."""
+    pts = make_mixture(500, 100, dim=6, seed=21)
+    idx = grid_lib.build_grid(jnp.asarray(pts), jnp.float32(0.2), 4)
+    k, gamma = 3, 0.0
+    base = split_lib.split_work(idx, k, gamma, 0.0)
+    home = np.asarray(base.home_counts)
+    dense0 = np.asarray(base.to_dense)        # density-only assignment
+    n_dense0 = int(dense0.sum())
+    assert n_dense0 > 0, "fixture must produce dense work"
+    # force a demotion deficit past the density-only sparse count
+    rho = min((len(pts) - n_dense0 + n_dense0 // 2) / len(pts), 1.0)
+    split = split_lib.split_work(idx, k, gamma, rho)
+    to_dense = np.asarray(split.to_dense)
+    demoted = dense0 & ~to_dense
+    kept = to_dense
+    assert demoted.any() and kept.any()
+    # every demoted query's home cell is no more populated than any kept one
+    assert home[demoted].max() <= home[kept].min()
+    # and the floor is met exactly as ceil(ρ·|D|)
+    import math
+    assert int((~to_dense).sum()) >= math.ceil(rho * len(pts))
+
+
 # ---------------------------------------------------------------------------
 # grid index + REORDER (§IV-A, §IV-D)
 # ---------------------------------------------------------------------------

@@ -96,6 +96,44 @@ def test_bin_hist_counts_every_pair_below_cutoff():
     assert int(np.asarray(got).sum()) == 32 * 128
 
 
+# ---------------------------------------------------------------------------
+# kernel-mode parity: every dispatch path must agree (pallas compiled is
+# TPU-only; interpret runs the same kernel body on CPU)
+# ---------------------------------------------------------------------------
+
+PARITY_MODES = ["ref", "interpret", "pallas"]
+
+
+def _skip_unless_available(mode):
+    if mode == "pallas" and jax.default_backend() != "tpu":
+        pytest.skip("pallas compiled mode requires a TPU backend")
+
+
+@pytest.mark.parametrize("mode", PARITY_MODES)
+@pytest.mark.parametrize("q,c,d", [(32, 96, 8), (100, 300, 7)])
+def test_pairwise_l2_mode_parity(mode, q, c, d):
+    _skip_unless_available(mode)
+    qa, ca = _data(q, c, d, jnp.float32, seed=5)
+    got = pl_ops.pairwise_sq_l2(qa, ca, mode=mode)
+    want = pl_ref.pairwise_sq_l2_ref(qa, ca)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("mode", PARITY_MODES)
+@pytest.mark.parametrize("q,c,d,k", [(32, 96, 8, 4), (64, 192, 24, 7)])
+def test_knn_topk_mode_parity(mode, q, c, d, k):
+    _skip_unless_available(mode)
+    qa, ca = _data(q, c, d, jnp.float32, seed=6)
+    qids = jnp.arange(q, dtype=jnp.int32)
+    cids = jnp.arange(c, dtype=jnp.int32)
+    gd, gi = kt_ops.knn_topk(qa, ca, qids, cids, k=k, mode=mode)
+    wd, wi = kt_ref.knn_topk_ref(qa, ca, qids, cids, k=k)
+    np.testing.assert_allclose(np.asarray(gd), np.asarray(wd),
+                               rtol=1e-4, atol=1e-4)
+    assert (np.asarray(gi) == np.asarray(wi)).all()
+
+
 def test_pairwise_l2_shortc_tile_skip_matches():
     """SHORTC's tile-level analogue must not change results."""
     qa, ca = _data(64, 128, 32, jnp.float32)

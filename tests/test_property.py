@@ -2,7 +2,15 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -r requirements-dev.txt)",
+)
 from hypothesis import given, settings, strategies as st
+
+pytestmark = pytest.mark.slow    # deselect with -m "not slow"
 
 from repro.core import HybridConfig, HybridKNNJoin, brute_knn
 from repro.core import splitter as split_lib
