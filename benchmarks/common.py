@@ -33,6 +33,11 @@ def parser(name: str) -> argparse.ArgumentParser:
     ap.add_argument("--datasets", nargs="*", default=list(DATASETS))
     ap.add_argument("--trials", type=int, default=1)
     ap.add_argument("--out", default=RESULTS_DIR)
+    from repro.core.dense_join import BACKENDS
+
+    ap.add_argument("--backend", default="auto", choices=sorted(BACKENDS),
+                    help="engine execution backend (DESIGN.md §2.5): the "
+                         "cell-tiled MXU path vs the per-query jnp oracle")
     return ap
 
 

@@ -86,9 +86,11 @@ HYPOTHESES = {
 }
 
 
-def run_session_serving(n_batches: int):
+def run_session_serving(n_batches: int, backend: str = "auto"):
     """Executed (not lowered) serving measurement: cold vs steady-state
-    join latency through the work-queue scheduler on a scaled workload."""
+    join latency through the work-queue scheduler on a scaled workload.
+    ``backend`` picks the engine path (cell-tiled MXU vs per-query ref),
+    so the tiled hot loop is measured on whatever host runs this."""
     import time
 
     import numpy as np
@@ -103,7 +105,8 @@ def run_session_serving(n_batches: int):
         r.uniform(-3, 3, (n - n // 2, dim)),
     ]).astype(np.float32)
     session = JoinSession(HybridConfig(
-        k=k, m=min(6, dim), gamma=0.2, rho=0.2, n_batches=n_batches))
+        k=k, m=min(6, dim), gamma=0.2, rho=0.2, n_batches=n_batches,
+        backend=backend))
 
     t0 = time.perf_counter()
     cold = session.join(pts)
@@ -115,6 +118,7 @@ def run_session_serving(n_batches: int):
         "arch": "knn_join", "shape": f"serving_{n}x{dim}d",
         "variant": "session_serving",
         "hypothesis": HYPOTHESES["session_serving"],
+        "backend": session.backend,
         "n_batches": n_batches,
         "t_cold_s": t_cold,
         "t_steady_s": t_steady,
@@ -134,6 +138,11 @@ def main():
                     choices=sorted(HYPOTHESES))
     ap.add_argument("--n-batches", type=int, default=4,
                     help="work-queue granularity for session_serving")
+    from repro.core.dense_join import BACKENDS
+
+    ap.add_argument("--backend", default="auto", choices=sorted(BACKENDS),
+                    help="engine backend for session_serving (cell-tiled "
+                         "MXU path vs per-query ref)")
     args = ap.parse_args()
     mesh = make_production_mesh()
     chips = mesh_chip_count(mesh)
@@ -142,9 +151,10 @@ def main():
     hist = json.load(open(path)) if os.path.exists(path) else []
     for variant in args.variant:
         if variant == "session_serving":
-            rec = run_session_serving(args.n_batches)
+            rec = run_session_serving(args.n_batches, args.backend)
             hist = [h for h in hist if h["variant"] != variant] + [rec]
-            print(f"[perf-knn] {variant}: cold {rec['t_cold_s']:.3f}s "
+            print(f"[perf-knn] {variant}: backend={rec['backend']} cold "
+                  f"{rec['t_cold_s']:.3f}s "
                   f"({rec['compiles_cold']} engine compiles) steady "
                   f"{rec['t_steady_s']:.3f}s ({rec['compiles_steady']} "
                   f"compiles) nb={rec['n_batches']} "

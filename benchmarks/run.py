@@ -23,10 +23,29 @@ def main():
     ap = common.parser("benchmarks.run")
     ap.add_argument("--quick", action="store_true",
                     help="tiny datasets (CI smoke)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="kernel-path CI smoke: one tiny dataset, Table III "
+                         "only — pair with --backend interpret so the tiled "
+                         "Pallas path runs end-to-end on CPU")
     args = ap.parse_args()
     if args.quick:
         args.scale = 0.08
     t0 = time.time()
+
+    if args.smoke:
+        args.scale = 0.05
+        args.datasets = ["chist"]
+        args.trials = 1
+        print(f"[bench] SMOKE backend={args.backend} "
+              f"datasets={args.datasets} scale={args.scale}")
+        rec = table3_granularity.run(args)
+        assert rec, "table3 smoke produced no records"
+        # (zero-compile steady state is asserted by the test suite under a
+        # deterministic scheduler; online rebalance makes it timing-
+        # dependent here, so the smoke only gates on the runs completing)
+        print(f"[bench] smoke ok ({time.time() - t0:.0f}s, "
+              f"{len(rec)} configs)")
+        return
 
     print(f"[bench] datasets={args.datasets} scale={args.scale}")
     results = {}

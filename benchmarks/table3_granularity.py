@@ -10,7 +10,12 @@ into two knobs here —
     the dense assignment is dequeued in, which bounds terminal load
     imbalance to one batch at the cost of more dispatches.
 
-We sweep both and report response time, reproducing the paper's finding
+  * kernel candidate-tile width: ``block_c`` (TDYNAMIC §V-G) on the
+    tiled MXU backend — pass ``--backend pallas`` (TPU) or
+    ``--backend interpret`` (CPU kernel body) to sweep it on the fused
+    kernel that actually runs; the default ``auto`` resolves per host.
+
+We sweep all of them and report response time, reproducing the paper's finding
 that a moderate setting beats both extremes, and that past the
 resource-saturation point the knob stops mattering (their Songs row).
 Trials run through a persistent ``JoinSession`` so compile cost is paid
@@ -32,6 +37,15 @@ TILE_SWEEP = [
     ("budget4096", dict(query_block=128, dense_budget=4096)),
 ]
 
+# block_c is TDYNAMIC (§V-G) on the kernel that actually runs: the
+# candidate-tile width of the fused dense kernel.  Only the tiled
+# backends (--backend pallas|interpret) exercise it; ref ignores it.
+BLOCKC_SWEEP = [
+    ("blockc64", dict(block_c=64)),
+    ("blockc128", dict(block_c=128)),
+    ("blockc256", dict(block_c=256)),
+]
+
 # §V-A queue granularity: 1 batch == the old monolithic dispatch.
 QUEUE_SWEEP = [
     ("nb1", dict(n_batches=1)),
@@ -39,19 +53,28 @@ QUEUE_SWEEP = [
     ("nb16", dict(n_batches=16)),
 ]
 
-SWEEP = TILE_SWEEP + QUEUE_SWEEP
+def active_sweep(backend: str):
+    """The ref backend ignores block_c — sweeping it there would just
+    re-run identical joins, so TDYNAMIC only joins the sweep on the
+    tiled backends."""
+    from repro.core.dense_join import resolve_backend
+
+    tdynamic = BLOCKC_SWEEP if resolve_backend(backend) != "ref" else []
+    return TILE_SWEEP + tdynamic + QUEUE_SWEEP
 
 
 def run(args):
+    backend = getattr(args, "backend", "auto")
+    sweep = active_sweep(backend)
     rows = []
     rec = {}
     for ds in args.datasets:
         pts = load_dataset(ds, args.scale)
         k = PAPER_K[ds]
         row = [ds, f"k={k}"]
-        for name, kw in SWEEP:
+        for name, kw in sweep:
             cfg = HybridConfig(k=k, m=min(6, pts.shape[1]),
-                               gamma=0.0, rho=0.0, **kw)
+                               gamma=0.0, rho=0.0, backend=backend, **kw)
             session = JoinSession(cfg)
             t, res = timed_trials(
                 lambda session=session, pts=pts: session.join(pts),
@@ -59,13 +82,15 @@ def run(args):
             resp = res.stats.response_time
             row.append(f"{resp:.3f}s")
             rec[f"{ds}/{name}"] = {
-                "response_s": resp, "wall_s": t,
+                "response_s": resp, "wall_s": t, "backend": session.backend,
                 "n_engine_compiles_steady": res.stats.n_engine_compiles,
                 **res.stats.__dict__,
             }
         rows.append(row)
-    print_table("Table III analogue: tile geometry + queue granularity",
-                ["dataset", "K"] + [n for n, _ in SWEEP], rows)
+    print_table(
+        f"Table III analogue: tile geometry + queue granularity "
+        f"(backend={backend})",
+        ["dataset", "K"] + [n for n, _ in sweep], rows)
     save("table3_granularity", rec, args.out)
     # headline check: the mid tile should not be the worst anywhere
     return rec

@@ -14,6 +14,18 @@ nearest within ε.  Faithful semantics:
   * batching (§IV-B): queries stream through in fixed blocks, so peak
     memory is block × budget regardless of |Q^dense|.
 
+Two execution backends share those semantics (DESIGN.md §2.5):
+
+  * ``"ref"`` — per-query gather + broadcast-subtract (the original jnp
+    path; VPU-bound, kept as the correctness oracle);
+  * ``"pallas"`` / ``"interpret"`` — the cell-tiled MXU path: queries are
+    sorted by home cell (``grid.group_queries_by_cell``) so each tile
+    shares ONE deduplicated 3^m candidate block
+    (``grid.tile_shared_candidates``), and the distance tile is a
+    (TQ×D)·(D×TC) matmul through the fused ``pairwise_l2`` kernel with
+    the SHORTC ε² tile short-circuit.  ``"auto"`` resolves to pallas on
+    TPU and ref elsewhere.
+
 Correctness invariant (used by tests): if ``found ≥ K`` and no overflow,
 the returned K neighbors are the *exact* global KNN, because the 3^m
 neighborhood of an edge-≥ε grid covers every point within distance ε, and
@@ -28,7 +40,19 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import grid as grid_lib
+from repro.kernels.pairwise_l2 import ops as pairwise_ops
 from repro.utils import round_up
+
+BACKENDS = ("ref", "pallas", "interpret", "auto")
+
+
+def resolve_backend(backend: str) -> str:
+    """Collapse ``"auto"`` at trace time: pallas on TPU, ref elsewhere."""
+    if backend not in BACKENDS:
+        raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    return backend
 
 
 class DenseJoinResult(NamedTuple):
@@ -73,8 +97,64 @@ def _block_fn(index: grid_lib.GridIndex, points_r, eps2, k, budget):
     return fn
 
 
+def _tile_fn(index: grid_lib.GridIndex, points_r, eps2, k, budget, block_c,
+             kernel_mode):
+    """Process one cell-sorted query tile against its shared candidate
+    block (−1 = padding).  The distance tile is one MXU matmul."""
+    cand_budget = round_up(budget, block_c)
+
+    def fn(qids):
+        nq = qids.shape[0]
+        safe = jnp.clip(qids, 0, index.n_points - 1)
+        coords = index.point_coords[safe]                         # (TQ, m)
+        starts, counts = grid_lib.neighbor_ranges(index, coords)  # (TQ, R)
+        # Padding rows clip to point 0 — zero their ranges so a partial
+        # tile's shared union holds only REAL queries' neighborhoods
+        # (otherwise point 0's cells could crowd out, or overflow, the
+        # tile's budget and spuriously fail every query in it).
+        counts = jnp.where((qids >= 0)[:, None], counts, 0)
+        pos, valid, tile_total, tile_overflow = grid_lib.tile_shared_candidates(
+            index, starts, counts, cand_budget
+        )                                                          # (TC,)
+        cand_ids = jnp.where(valid, index.order[pos], -1)
+        cand_pts = index.points_sorted[pos]                        # (TC, n)
+        qpts = points_r[safe]                                      # (TQ, n)
+
+        d2 = pairwise_ops.pairwise_sq_l2(
+            qpts, cand_pts,
+            block_q=nq, block_c=block_c,
+            shortc_eps2=eps2, mode=kernel_mode,
+        )                                                          # (TQ, TC)
+
+        keep = (
+            (cand_ids[None, :] >= 0)
+            & (cand_ids[None, :] != qids[:, None])
+            & (d2 <= eps2)
+        )
+        d2m = jnp.where(keep, d2, jnp.inf)
+        neg, sel = jax.lax.top_k(-d2m, k)
+        kdists = -neg
+        kids = jnp.where(
+            jnp.isinf(kdists),
+            -1,
+            jnp.take_along_axis(
+                jnp.broadcast_to(cand_ids[None, :], d2m.shape), sel, axis=1
+            ),
+        )
+        found = jnp.sum(keep, axis=1).astype(jnp.int32)
+        # The shared block holds the tile's union, so truncation hits every
+        # query in the tile at once — a per-tile §V-E failure.
+        failed = (found < k) | tile_overflow
+        # T₂ proxy stays per-query (own 3^m total), matching the ref
+        # backend so the queue's Eq.-6 rebalance sees identical workloads.
+        own_total = jnp.sum(counts, axis=1).astype(jnp.int32)
+        return kdists, kids, found, failed, own_total
+
+    return fn
+
+
 @functools.partial(
-    jax.jit, static_argnames=("k", "budget", "query_block")
+    jax.jit, static_argnames=("k", "budget", "query_block", "block_c", "backend")
 )
 def dense_join(
     index: grid_lib.GridIndex,
@@ -85,18 +165,39 @@ def dense_join(
     k: int,
     budget: int = 1024,
     query_block: int = 128,
+    block_c: int = 128,
+    backend: str = "ref",
 ) -> DenseJoinResult:
     """Run GPU-JOIN over the given query ids.  Results are aligned with
-    ``query_ids`` (row i ↔ query_ids[i]); padding rows are failed."""
+    ``query_ids`` (row i ↔ query_ids[i]); padding rows are failed.
+
+    ``backend`` selects the execution path (module docstring); ``block_c``
+    is the candidate-tile width in the fused kernel — the paper's TDYNAMIC
+    "threads per query point" knob — and is ignored by ``"ref"``.
+    """
+    backend = resolve_backend(backend)
     qpad = round_up(query_ids.shape[0], query_block)
     qids = jnp.full((qpad,), -1, jnp.int32).at[: query_ids.shape[0]].set(query_ids)
     eps2 = jnp.asarray(epsilon, jnp.float32) ** 2
 
-    blocks = qids.reshape(-1, query_block)
-    out = jax.lax.map(_block_fn(index, points_r, eps2, k, budget), blocks)
-    kd, ki, found, failed, total = jax.tree_util.tree_map(
-        lambda x: x.reshape((qpad,) + x.shape[2:]), out
-    )
+    if backend == "ref":
+        blocks = qids.reshape(-1, query_block)
+        out = jax.lax.map(_block_fn(index, points_r, eps2, k, budget), blocks)
+        kd, ki, found, failed, total = jax.tree_util.tree_map(
+            lambda x: x.reshape((qpad,) + x.shape[2:]), out
+        )
+    else:
+        tiles, perm = grid_lib.group_queries_by_cell(index, qids, query_block)
+        out = jax.lax.map(
+            _tile_fn(index, points_r, eps2, k, budget, block_c, backend),
+            tiles,
+        )
+        kd, ki, found, failed, total = jax.tree_util.tree_map(
+            lambda x: jnp.zeros_like(x.reshape((qpad,) + x.shape[2:]))
+            .at[perm]
+            .set(x.reshape((qpad,) + x.shape[2:])),
+            out,
+        )
     n = query_ids.shape[0]
     pad_row = jnp.arange(qpad) >= n
     failed = failed | pad_row | (qids < 0)

@@ -220,6 +220,70 @@ def gather_candidates(
     return pos.astype(jnp.int32), valid, total, total > budget
 
 
+def home_cell_ids(index: GridIndex, qids: jnp.ndarray) -> jnp.ndarray:
+    """Linear home-cell id per query id; padding rows (qids < 0) get the
+    int32 sentinel so a stable sort clusters them after all real work."""
+    safe = jnp.clip(qids, 0, index.n_points - 1)
+    cid = linearize(index.point_coords[safe], index.radices)
+    return jnp.where(qids >= 0, cid, INT32_SENTINEL)
+
+
+def group_queries_by_cell(index: GridIndex, qids: jnp.ndarray, query_block: int):
+    """Cell-grouping pass for the tiled engine backend (paper §V-B/§V-D).
+
+    Sorts the padded query-id vector by home cell id and cuts it into
+    fixed-shape tiles of ``query_block`` queries.  Queries in one grid cell
+    share the same 3^m-neighborhood candidate set, so a cell-sorted tile's
+    union of candidate ranges collapses to (nearly) one cell's worth — the
+    shared-operand structure the MXU kernels need.
+
+    Returns ``(tiles, perm)``: ``tiles`` is (n_tiles, query_block) int32
+    (−1 padding), ``perm`` (Qpad,) int32 maps sorted position → original
+    position, so per-tile results flatten back via ``out.at[perm].set(r)``.
+    """
+    assert qids.shape[0] % query_block == 0, (qids.shape, query_block)
+    cid = home_cell_ids(index, qids)
+    perm = jnp.argsort(cid, stable=True).astype(jnp.int32)
+    tiles = qids[perm].reshape(-1, query_block)
+    return tiles, perm
+
+
+def tile_shared_candidates(
+    index: GridIndex,
+    starts: jnp.ndarray,    # (TQ, R) per-query 3^m ranges (neighbor_ranges)
+    counts: jnp.ndarray,    # (TQ, R)
+    budget: int,
+):
+    """Deduplicate one query tile's candidate ranges into a shared block.
+
+    Every non-empty cell owns a distinct, disjoint slice of the cell-sorted
+    order, so a range's ``start`` uniquely keys it: ranges from different
+    queries that name the same cell are exact duplicates.  Sorting the
+    tile's TQ·R ranges by start and zeroing repeats yields the exact union
+    of the per-query candidate sets — gathered ONCE per tile instead of
+    once per query.
+
+    Returns ``(pos (budget,) i32 cell-sorted positions, valid (budget,)
+    bool, tile_total () i32 union size, tile_overflow () bool)``.  On
+    overflow the union was truncated, so every query in the tile must be
+    failed (§V-E: the neighborhood was not fully examined).
+    """
+    flat_s = starts.reshape(-1)
+    flat_c = counts.reshape(-1)
+    # Empty ranges key to the sentinel: they sort last and carry count 0.
+    key = jnp.where(flat_c > 0, flat_s, INT32_SENTINEL)
+    order = jnp.argsort(key)
+    key_s = key[order]
+    dup = jnp.concatenate(
+        [jnp.zeros((1,), bool), key_s[1:] == key_s[:-1]]
+    )
+    dedup_c = jnp.where(dup, 0, flat_c[order])
+    pos, valid, total, overflow = gather_candidates(
+        index, flat_s[order][None], dedup_c[None], budget
+    )
+    return pos[0], valid[0], total[0], overflow[0]
+
+
 def reorder_by_variance(points: jnp.ndarray):
     """Paper §IV-D REORDER: permute dims by descending variance so the
     indexed prefix (m dims) has maximal discriminatory power.

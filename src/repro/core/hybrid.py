@@ -52,6 +52,8 @@ class HybridConfig:
     # dense engine (GPU-JOIN analogue)
     dense_budget: int = 1024      # candidate budget per query (batching, §IV-B)
     query_block: int = 128        # queries per streamed block (TSTATIC tile)
+    block_c: int = 128            # candidate-tile width in the fused kernel
+                                  # (TDYNAMIC, §V-G; tiled backends only)
     # work-queue scheduler (§V-A, Table III granularity)
     n_batches: int = 4            # dense batches dequeued per join
     online_rebalance: bool = True # Eq. 6-driven demotion between rounds
@@ -64,13 +66,21 @@ class HybridConfig:
     sel_factor: int = 4
     # fallback + kernels
     brute_chunk: int = 2048
-    kernel_mode: str = "auto"     # auto|pallas|interpret|ref (kernel dispatch)
+    kernel_mode: str = "auto"     # auto|pallas|interpret|ref (brute-lane kernels)
+    # engine execution backend (DESIGN.md §2.5): "ref" per-query gather
+    # oracle; "pallas"/"interpret" the cell-tiled MXU path; "auto" resolves
+    # to pallas on TPU, ref elsewhere.  Part of the AOT engine-cache key.
+    backend: str = "auto"
     seed: int = 0
 
     def __post_init__(self):
         assert 0.0 <= self.beta <= 1.0 and 0.0 <= self.gamma <= 1.0
         assert 0.0 <= self.rho <= 1.0 and self.k >= 1 and self.m >= 1
         assert self.n_batches >= 1 and self.rebalance_sync_batches >= 0
+        from repro.core.dense_join import BACKENDS
+
+        assert self.backend in BACKENDS, self.backend
+        assert self.block_c >= 1
 
 
 @dataclasses.dataclass

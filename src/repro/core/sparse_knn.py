@@ -15,6 +15,12 @@ point within cert_r(ℓ) = min_j cell_edge_ℓ_j of the query, so
 ``found ≥ K ∧ kth_dist ≤ cert_r(ℓ) ∧ ¬overflow ⇒ exact KNN``.
 Queries missing the certificate fall back to the streamed brute scan
 (core/brute.py) — the result is always exact, like EXACT-ANN in exact mode.
+
+``backend=`` selects the distance formulation (DESIGN.md §2.5): ``"ref"``
+keeps the broadcast-subtract oracle; the kernel backends compute the same
+d² as a batched MXU dot_general over the gathered per-query operands
+(candidate sets here are per-query by design, so the dense engine's
+shared-candidate Pallas tiling does not apply).
 """
 from __future__ import annotations
 
@@ -24,6 +30,7 @@ from typing import NamedTuple, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.core import dense_join as dense_lib
 from repro.core import grid as grid_lib
 from repro.utils import round_up
 
@@ -57,20 +64,37 @@ class SparseKNNResult(NamedTuple):
     total_candidates: jnp.ndarray  # (Q,) i32 — work proxy (T₁ numerator)
 
 
-def _query_level(pyr: Pyramid, points_r, qids, safe, sel, k, budget):
+def _gathered_sq_l2(qpts, cand_pts, backend):
+    """(B, n) queries vs per-query (B, C, n) candidates -> (B, C) d².
+
+    ``"ref"`` keeps the broadcast-subtract oracle.  The kernel backends use
+    the matmul identity ‖q‖² + ‖c‖² − 2·q·cᵀ as a *batched* dot_general —
+    the candidate operands differ per query (this engine exists for
+    irregular low-density work), so the shared-tile Pallas kernel does not
+    apply, but the inner product still lands on the MXU and nothing of
+    shape (B, C, n) is ever materialized."""
+    if backend == "ref":
+        diff = qpts[:, None, :] - cand_pts
+        return jnp.sum(diff * diff, axis=-1)
+    qq = jnp.sum(qpts * qpts, axis=-1)[:, None]               # (B, 1)
+    cc = jnp.sum(cand_pts * cand_pts, axis=-1)                # (B, C)
+    qc = jax.lax.dot_general(
+        qpts, cand_pts, (((1,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )                                                          # (B, C)
+    return jnp.maximum(qq + cc - 2.0 * qc, 0.0)
+
+
+def _query_level(pyr: Pyramid, points_r, orders, starts, counts, qids, safe,
+                 sel, k, budget, backend):
     """Gather + distance + top-K at per-query pyramid level ``sel`` (B,).
+
+    ``orders`` (L, |D|) and ``starts``/``counts`` (L, B, R) are hoisted by
+    the caller — both passes (and the level selection) reuse one sweep of
+    binary searches instead of recomputing the stacks three times.
 
     Returns (kd, ki, certified, overflow, total) — the certificate is
     kth ≤ cert_r(sel)² with ≥ K found and no budget truncation."""
-    starts_l, counts_l = [], []
-    for g in pyr.levels:
-        coords = g.point_coords[safe]
-        s, c = grid_lib.neighbor_ranges(g, coords)
-        starts_l.append(s)
-        counts_l.append(c)
-    starts = jnp.stack(starts_l)                # (L, B, R)
-    counts = jnp.stack(counts_l)                # (L, B, R)
-
     sel_starts = jnp.take_along_axis(starts, sel[None, :, None], axis=0)[0]
     sel_counts = jnp.take_along_axis(counts, sel[None, :, None], axis=0)[0]
 
@@ -78,13 +102,11 @@ def _query_level(pyr: Pyramid, points_r, qids, safe, sel, k, budget):
         pyr.levels[0], sel_starts, sel_counts, budget
     )                                            # positions in SELECTED level's order
 
-    orders = jnp.stack([g.order for g in pyr.levels])         # (L, |D|)
     cand_ids = orders[sel[:, None], pos]                      # (B, budget)
     cand_pts = points_r[cand_ids]                             # (B, budget, n)
     qpts = points_r[safe]
 
-    diff = qpts[:, None, :] - cand_pts
-    d2 = jnp.sum(diff * diff, axis=-1)
+    d2 = _gathered_sq_l2(qpts, cand_pts, backend)
     keep = valid & (cand_ids != qids[:, None])
     d2m = jnp.where(keep, d2, jnp.inf)
 
@@ -100,7 +122,7 @@ def _query_level(pyr: Pyramid, points_r, qids, safe, sel, k, budget):
     return kd, ki, certified, overflow, total.astype(jnp.int32)
 
 
-def _block_fn(pyr: Pyramid, points_r, k, budget, sel_factor):
+def _block_fn(pyr: Pyramid, points_r, k, budget, sel_factor, backend):
     """Two-pass adaptive level search (the TPU kd-tree descent analogue).
 
     Pass 1 picks the finest level whose *projected* 3^m-neighborhood holds
@@ -117,18 +139,28 @@ def _block_fn(pyr: Pyramid, points_r, k, budget, sel_factor):
     def fn(qids):
         safe = jnp.clip(qids, 0, npts - 1)
 
+        # All-level candidate ranges, computed ONCE per block: the level
+        # selection and both _query_level passes read these same stacks
+        # (3× fewer binary-search sweeps than per-pass recomputation).
+        starts_l, counts_l = [], []
+        for g in pyr.levels:
+            s, c = grid_lib.neighbor_ranges(g, g.point_coords[safe])
+            starts_l.append(s)
+            counts_l.append(c)
+        starts = jnp.stack(starts_l)                 # (L, B, R)
+        counts = jnp.stack(counts_l)                 # (L, B, R)
+        orders = jnp.stack([g.order for g in pyr.levels])     # (L, |D|)
+
         # Level selection by projected candidate counts (cheap, regular).
-        totals = jnp.stack([
-            jnp.sum(grid_lib.neighbor_ranges(g, g.point_coords[safe])[1], axis=-1)
-            for g in pyr.levels
-        ])                                           # (L, B)
+        totals = jnp.sum(counts, axis=-1)            # (L, B)
         target = sel_factor * (k + 1)
         enough = totals >= target
         first = jnp.argmax(enough, axis=0).astype(jnp.int32)
         sel1 = jnp.where(jnp.any(enough, axis=0), first, n_levels - 1)
 
         kd1, ki1, cert1, _, tot1 = _query_level(
-            pyr, points_r, qids, safe, sel1, k, budget
+            pyr, points_r, orders, starts, counts, qids, safe, sel1, k,
+            budget, backend
         )
 
         # Escalation level: first ℓ with cert_r(ℓ)² ≥ pass-1 kth (∞ → coarsest).
@@ -137,7 +169,8 @@ def _block_fn(pyr: Pyramid, points_r, k, budget, sel_factor):
         sel2 = jnp.clip(jnp.maximum(sel2, sel1), 0, n_levels - 1)
 
         kd2, ki2, cert2, _, tot2 = _query_level(
-            pyr, points_r, qids, safe, sel2, k, budget
+            pyr, points_r, orders, starts, counts, qids, safe, sel2, k,
+            budget, backend
         )
 
         use1 = cert1[:, None]
@@ -151,7 +184,8 @@ def _block_fn(pyr: Pyramid, points_r, k, budget, sel_factor):
 
 
 @functools.partial(
-    jax.jit, static_argnames=("k", "budget", "query_block", "sel_factor")
+    jax.jit,
+    static_argnames=("k", "budget", "query_block", "sel_factor", "backend"),
 )
 def sparse_knn(
     pyr: Pyramid,
@@ -162,11 +196,15 @@ def sparse_knn(
     budget: int = 512,
     query_block: int = 128,
     sel_factor: int = 4,
+    backend: str = "ref",
 ) -> SparseKNNResult:
+    backend = dense_lib.resolve_backend(backend)
     qpad = round_up(query_ids.shape[0], query_block)
     qids = jnp.full((qpad,), -1, jnp.int32).at[: query_ids.shape[0]].set(query_ids)
     blocks = qids.reshape(-1, query_block)
-    out = jax.lax.map(_block_fn(pyr, points_r, k, budget, sel_factor), blocks)
+    out = jax.lax.map(
+        _block_fn(pyr, points_r, k, budget, sel_factor, backend), blocks
+    )
     kd, ki, cert, lvl, total = jax.tree_util.tree_map(
         lambda x: x.reshape((qpad,) + x.shape[2:]), out
     )

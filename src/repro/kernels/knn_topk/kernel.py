@@ -28,6 +28,15 @@ _CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerPar
 
 _INF = np.float32(np.inf)
 
+# ``_tile_topk`` unrolls K serial min-passes into straight-line kernel code.
+# Past this ceiling the unrolled loop stops being a win: compile time and
+# kernel size grow linearly while the per-pass VPU reductions dominate the
+# MXU matmul they amortize.  ``ops.knn_topk`` falls back to the jnp ref
+# (full distance tile + native top_k merge) instead of silently compiling
+# a huge kernel; calling the kernel directly with k above the ceiling is a
+# usage error.
+MAX_UNROLLED_K = 32
+
 
 def _tile_topk(d: jnp.ndarray, k: int):
     """K-smallest per row of d (TQ, TC) -> (vals (TQ, k), cols (TQ, k))."""
@@ -87,6 +96,12 @@ def knn_tile_topk(
     Returns (distances (nC, Q, k) f32, indices (nC, Q, k) i32) where
     nC = C // block_c; a log-depth merge in ops.py reduces axis 0.
     """
+    if k > MAX_UNROLLED_K:
+        raise ValueError(
+            f"knn_tile_topk unrolls k min-passes; k={k} exceeds the "
+            f"MAX_UNROLLED_K={MAX_UNROLLED_K} ceiling — use "
+            "ops.knn_topk, which falls back to the ref merge path"
+        )
     q_n, d = queries.shape
     c_n, _ = candidates.shape
     assert q_n % block_q == 0 and c_n % block_c == 0

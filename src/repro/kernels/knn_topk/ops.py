@@ -36,7 +36,9 @@ def knn_topk(
 
     Returns (dists (Q, k) f32 ascending — squared L2 — and ids (Q, k) i32,
     −1 where fewer than k candidates exist)."""
-    if not _use_pallas(mode):
+    # Oversized K: the kernel's unrolled min-pass extraction stops paying
+    # for itself (see kernel.MAX_UNROLLED_K) — take the ref merge path.
+    if not _use_pallas(mode) or k > _kernel.MAX_UNROLLED_K:
         return _ref.knn_topk_ref(queries, candidates, query_ids, cand_ids, k=k)
 
     q_n, d = queries.shape

@@ -29,7 +29,12 @@ from jax.experimental.pallas import tpu as pltpu
 _CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
 
 
-def _pairwise_kernel(q_ref, c_ref, out_ref, *, shortc_eps2: float | None):
+def _pairwise_kernel(*refs, shortc_eps2: float | None, shortc_dynamic: bool):
+    if shortc_dynamic:
+        eps_ref, q_ref, c_ref, out_ref = refs
+        shortc_eps2 = eps_ref[0, 0]
+    else:
+        q_ref, c_ref, out_ref = refs
     kd = pl.program_id(2)
 
     @pl.when(kd == 0)
@@ -46,7 +51,7 @@ def _pairwise_kernel(q_ref, c_ref, out_ref, *, shortc_eps2: float | None):
         )                                                  # (TQ, TC) on the MXU
         out_ref[...] += qq + cc - 2.0 * qc
 
-    if shortc_eps2 is None:
+    if shortc_eps2 is None and not shortc_dynamic:
         _accumulate()
     else:
         # Tile-level SHORTC: partial sums are monotone non-decreasing, so if
@@ -72,24 +77,67 @@ def pairwise_sq_l2(
 ) -> jnp.ndarray:
     """Squared L2 distances (Q, C) in float32.  Inputs must be pre-padded
     to tile multiples (see ops.py for the padding wrapper)."""
+    return _pallas_pairwise(
+        queries, candidates, None,
+        block_q=block_q, block_c=block_c, block_d=block_d,
+        shortc_eps2=shortc_eps2, interpret=interpret,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_q", "block_c", "block_d", "interpret"),
+)
+def pairwise_sq_l2_dyn_shortc(
+    queries: jnp.ndarray,
+    candidates: jnp.ndarray,
+    shortc_eps2: jnp.ndarray,     # () f32 — traced ε² (no recompile per ε)
+    *,
+    block_q: int = 128,
+    block_c: int = 128,
+    block_d: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """SHORTC variant taking ε² as a runtime operand: the cutoff rides in a
+    (1, 1) block the kernel reads, so sweeping ε never forces a recompile
+    (the engines trace ε as a device scalar)."""
+    return _pallas_pairwise(
+        queries, candidates, jnp.reshape(shortc_eps2, (1, 1)).astype(jnp.float32),
+        block_q=block_q, block_c=block_c, block_d=block_d,
+        shortc_eps2=None, interpret=interpret,
+    )
+
+
+def _pallas_pairwise(
+    queries, candidates, eps2_arr, *, block_q, block_c, block_d,
+    shortc_eps2, interpret,
+):
     q_n, d = queries.shape
     c_n, d2 = candidates.shape
     assert d == d2, (d, d2)
     assert q_n % block_q == 0 and c_n % block_c == 0 and d % block_d == 0
 
+    dynamic = eps2_arr is not None
     grid = (q_n // block_q, c_n // block_c, d // block_d)
-    kernel = functools.partial(_pairwise_kernel, shortc_eps2=shortc_eps2)
+    kernel = functools.partial(
+        _pairwise_kernel, shortc_eps2=shortc_eps2, shortc_dynamic=dynamic
+    )
+    in_specs = [
+        pl.BlockSpec((block_q, block_d), lambda i, j, k: (i, k)),
+        pl.BlockSpec((block_c, block_d), lambda i, j, k: (j, k)),
+    ]
+    operands = [queries, candidates]
+    if dynamic:
+        in_specs.insert(0, pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)))
+        operands.insert(0, eps2_arr)
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_q, block_d), lambda i, j, k: (i, k)),
-            pl.BlockSpec((block_c, block_d), lambda i, j, k: (j, k)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((block_q, block_c), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((q_n, c_n), jnp.float32),
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(queries, candidates)
+    )(*operands)

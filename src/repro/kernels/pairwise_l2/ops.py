@@ -24,10 +24,6 @@ def _use_pallas(mode: str) -> bool:
     return mode in ("pallas", "interpret")
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("block_q", "block_c", "block_d", "shortc_eps2", "mode"),
-)
 def pairwise_sq_l2(
     queries: jnp.ndarray,
     candidates: jnp.ndarray,
@@ -35,28 +31,78 @@ def pairwise_sq_l2(
     block_q: int = 128,
     block_c: int = 128,
     block_d: int = 128,
-    shortc_eps2: float | None = None,
+    shortc_eps2=None,
     mode: str = "auto",
 ) -> jnp.ndarray:
     """Squared L2 distances (Q, C) float32 for arbitrary (unpadded) shapes.
 
     Padded query/candidate rows never reach the caller (sliced off); padded
     feature columns are zero so they contribute nothing to distances.
+
+    ``shortc_eps2`` may be a Python float (baked into the kernel as a
+    compile-time constant) or a traced jax scalar (passed as a runtime
+    operand, so ε sweeps reuse one executable).  This outer function is a
+    trace-time dispatcher; the per-path workers below carry the jit caches.
     """
+    if shortc_eps2 is None or isinstance(shortc_eps2, (int, float)):
+        return _pairwise_static(
+            queries, candidates, block_q=block_q, block_c=block_c,
+            block_d=block_d, shortc_eps2=shortc_eps2, mode=mode,
+        )
+    return _pairwise_dynamic(
+        queries, candidates, shortc_eps2, block_q=block_q, block_c=block_c,
+        block_d=block_d, mode=mode,
+    )
+
+
+def _pad_operands(queries, candidates, block_q, block_c, block_d):
     q_n, d = queries.shape
     c_n, _ = candidates.shape
-    if not _use_pallas(mode):
-        return _ref.pairwise_sq_l2_ref(queries, candidates)
-
     qp = round_up(max(q_n, 1), block_q)
     cp = round_up(max(c_n, 1), block_c)
     dp = round_up(max(d, 1), block_d)
     q = jnp.zeros((qp, dp), queries.dtype).at[:q_n, :d].set(queries)
     c = jnp.zeros((cp, dp), candidates.dtype).at[:c_n, :d].set(candidates)
+    return q, c
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_q", "block_c", "block_d", "shortc_eps2", "mode"),
+)
+def _pairwise_static(
+    queries, candidates, *, block_q, block_c, block_d, shortc_eps2, mode,
+):
+    q_n, _ = queries.shape
+    c_n, _ = candidates.shape
+    if not _use_pallas(mode):
+        return _ref.pairwise_sq_l2_ref(queries, candidates)
+    q, c = _pad_operands(queries, candidates, block_q, block_c, block_d)
     out = _kernel.pairwise_sq_l2(
         q, c,
         block_q=block_q, block_c=block_c, block_d=block_d,
         shortc_eps2=shortc_eps2,
+        interpret=(mode == "interpret"),
+    )
+    return out[:q_n, :c_n]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_q", "block_c", "block_d", "mode")
+)
+def _pairwise_dynamic(
+    queries, candidates, shortc_eps2, *, block_q, block_c, block_d, mode,
+):
+    q_n, _ = queries.shape
+    c_n, _ = candidates.shape
+    if not _use_pallas(mode):
+        # The ref oracle computes exact distances; SHORTC only ever clamps
+        # values already above the cutoff, so exact is a valid refinement.
+        return _ref.pairwise_sq_l2_ref(queries, candidates)
+    q, c = _pad_operands(queries, candidates, block_q, block_c, block_d)
+    out = _kernel.pairwise_sq_l2_dyn_shortc(
+        q, c, shortc_eps2,
+        block_q=block_q, block_c=block_c, block_d=block_d,
         interpret=(mode == "interpret"),
     )
     return out[:q_n, :c_n]

@@ -95,6 +95,9 @@ class JoinSession:
 
     def __init__(self, config: "hybrid_lib.HybridConfig"):
         self.config = config
+        # Resolve "auto" once on the host so the cache key names the path
+        # actually compiled (pallas on TPU, ref elsewhere).
+        self.backend = dense_lib.resolve_backend(config.backend)
         self.compile_counts: Dict[str, int] = {
             "dense": 0, "sparse": 0, "brute": 0,
         }
@@ -194,6 +197,7 @@ class JoinSession:
             args = (prep.index, prep.points_r, qp, eps2_arg)
             kwargs = dict(
                 k=cfg.k, budget=cfg.dense_budget, query_block=cfg.query_block,
+                block_c=cfg.block_c, backend=self.backend,
             )
             ex = self._engine("dense", dense_lib.dense_join, args, kwargs)
             t0 = time.perf_counter()
@@ -218,6 +222,7 @@ class JoinSession:
             kwargs = dict(
                 k=cfg.k, budget=cfg.sparse_budget,
                 query_block=cfg.query_block, sel_factor=cfg.sel_factor,
+                backend=self.backend,
             )
             ex = self._engine("sparse", sparse_lib.sparse_knn, args, kwargs)
             raw = ex(*args)     # async dispatch: returns un-blocked arrays

@@ -144,3 +144,49 @@ def test_pairwise_l2_shortc_tile_skip_matches():
     below = np.asarray(base) <= eps2
     np.testing.assert_allclose(np.asarray(sc)[below],
                                np.asarray(base)[below], rtol=1e-5)
+
+
+def test_pairwise_l2_shortc_dynamic_eps_operand():
+    """Traced ε² (runtime operand) must behave like the static constant —
+    this is what lets the engines sweep ε without recompiling."""
+    qa, ca = _data(48, 96, 32, jnp.float32, seed=7)
+    base = pl_ops.pairwise_sq_l2(qa, ca, mode="interpret")
+    eps2 = float(jnp.median(base))
+
+    @jax.jit
+    def dyn(q, c, e2):
+        return pl_ops.pairwise_sq_l2(q, c, shortc_eps2=e2, mode="interpret")
+
+    sc = dyn(qa, ca, jnp.float32(eps2))
+    below = np.asarray(base) <= eps2
+    np.testing.assert_allclose(np.asarray(sc)[below],
+                               np.asarray(base)[below], rtol=1e-5)
+    # exactness below the cutoff holds for a different ε on the SAME
+    # executable (no retrace, the point of the dynamic operand)
+    eps2_b = float(np.quantile(np.asarray(base), 0.9))
+    sc_b = dyn(qa, ca, jnp.float32(eps2_b))
+    below_b = np.asarray(base) <= eps2_b
+    np.testing.assert_allclose(np.asarray(sc_b)[below_b],
+                               np.asarray(base)[below_b], rtol=1e-5)
+
+
+def test_knn_topk_oversized_k_falls_back_to_ref():
+    """k beyond the kernel's unroll ceiling silently takes the ref merge
+    path (same results), and the raw kernel refuses it loudly."""
+    from repro.kernels.knn_topk import kernel as kt_kernel
+
+    q, c, d = 16, 80, 6
+    qa, ca = _data(q, c, d, jnp.float32, seed=8)
+    qids = jnp.arange(q, dtype=jnp.int32)
+    cids = jnp.arange(c, dtype=jnp.int32)
+    k = kt_kernel.MAX_UNROLLED_K + 3
+    gd, gi = kt_ops.knn_topk(qa, ca, qids, cids, k=k, mode="interpret")
+    wd, wi = kt_ref.knn_topk_ref(qa, ca, qids, cids, k=k)
+    np.testing.assert_allclose(np.asarray(gd), np.asarray(wd),
+                               rtol=1e-4, atol=1e-4)
+    assert (np.asarray(gi) == np.asarray(wi)).all()
+    with pytest.raises(ValueError, match="MAX_UNROLLED_K"):
+        kt_kernel.knn_tile_topk(
+            jnp.zeros((128, 8)), jnp.zeros((256, 8)),
+            jnp.zeros((128,), jnp.int32), jnp.zeros((256,), jnp.int32),
+            k=k, interpret=True)
