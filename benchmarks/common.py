@@ -33,11 +33,18 @@ def parser(name: str) -> argparse.ArgumentParser:
     ap.add_argument("--datasets", nargs="*", default=list(DATASETS))
     ap.add_argument("--trials", type=int, default=1)
     ap.add_argument("--out", default=RESULTS_DIR)
-    from repro.core.dense_join import BACKENDS
+    from repro.core.dense_join import BACKENDS, resolve_backend
 
-    ap.add_argument("--backend", default="auto", choices=sorted(BACKENDS),
-                    help="engine execution backend (DESIGN.md §2.5): the "
-                         "cell-tiled MXU path vs the per-query jnp oracle")
+    # type=resolve_backend collapses "auto" (and the REPRO_BACKEND env
+    # override) ONCE at parse time — argparse also passes the string
+    # default through type, so every benchmark sees a concrete backend
+    # and nothing downstream re-resolves per call site.
+    ap.add_argument("--backend", default="auto", type=resolve_backend,
+                    choices=sorted(BACKENDS),
+                    help="engine execution backend (DESIGN.md §2.5/§2.6): "
+                         "fused streaming engine, cell-tiled MXU path, or "
+                         "the per-query jnp oracle; auto resolves here, "
+                         "once (REPRO_BACKEND env overrides auto)")
     return ap
 
 
@@ -71,6 +78,46 @@ def save(name: str, record: Dict, out_dir: str = RESULTS_DIR) -> str:
     with open(path, "w") as f:
         json.dump(record, f, indent=1, default=float)
     print(f"[bench] wrote {path}")
+    return path
+
+
+def emit_bench_json(path: str, tag: str, backend: str, tables: Dict) -> str:
+    """Write the machine-readable BENCH_<tag>.json perf-trajectory record.
+
+    ``tables`` maps table name -> {variant: record}; every variant
+    record that carries the standard fields (``wall_s`` /
+    ``response_s`` / ``queries_per_s`` / ``n_engine_compiles`` /
+    ``memory``) is surfaced in a flat ``variants`` index so cross-PR
+    tooling never needs per-table knowledge."""
+    import jax
+
+    variants = {}
+    for tname, rec in tables.items():
+        if not isinstance(rec, dict):
+            continue
+        for vname, r in rec.items():
+            if not isinstance(r, dict):
+                continue
+            variants[f"{tname}/{vname}"] = {
+                key: r[key]
+                for key in ("wall_s", "response_s", "queries_per_s",
+                            "n_engine_compiles", "n_points", "backend",
+                            "memory")
+                if key in r
+            }
+    record = {
+        "tag": tag,
+        "created_unix": time.time(),
+        "jax_version": jax.__version__,
+        "jax_platform": jax.default_backend(),
+        "backend": backend,
+        "variants": variants,
+        "tables": tables,
+    }
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1, default=float)
+    print(f"[bench] wrote {path} ({len(variants)} variants)")
     return path
 
 

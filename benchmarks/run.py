@@ -25,8 +25,18 @@ def main():
                     help="tiny datasets (CI smoke)")
     ap.add_argument("--smoke", action="store_true",
                     help="kernel-path CI smoke: one tiny dataset, Table III "
-                         "only — pair with --backend interpret so the tiled "
-                         "Pallas path runs end-to-end on CPU")
+                         "only — pair with --backend interpret|fused so the "
+                         "Pallas kernel paths run end-to-end on CPU")
+    ap.add_argument("--json", nargs="?", const="", default=None,
+                    metavar="PATH",
+                    help="emit the machine-readable BENCH_<tag>.json "
+                         "perf-trajectory record (per-variant wall time, "
+                         "queries/s, compile counts, peak-HBM memory "
+                         "analysis).  With no PATH, writes "
+                         "results/bench/BENCH_<tag>.json")
+    ap.add_argument("--tag", default=None,
+                    help="tag for the BENCH json (default: backend name, "
+                         "prefixed smoke- under --smoke)")
     args = ap.parse_args()
     if args.quick:
         args.scale = 0.08
@@ -43,6 +53,7 @@ def main():
         # (zero-compile steady state is asserted by the test suite under a
         # deterministic scheduler; online rebalance makes it timing-
         # dependent here, so the smoke only gates on the runs completing)
+        _emit_json(args, {"table3": rec})
         print(f"[bench] smoke ok ({time.time() - t0:.0f}s, "
               f"{len(rec)} configs)")
         return
@@ -89,8 +100,19 @@ def main():
     with open(os.path.join(common.RESULTS_DIR, "summary.json"), "w") as f:
         json.dump({"claims": [(d, g, bool(o)) for d, g, o in claims],
                    "wall_s": time.time() - t0}, f, indent=1)
+    _emit_json(args, results)
     print(f"\n[bench] total {time.time() - t0:.0f}s; "
           f"results in {common.RESULTS_DIR}")
+
+
+def _emit_json(args, tables):
+    """--json: write the BENCH_<tag>.json trajectory record."""
+    if args.json is None:
+        return
+    tag = args.tag or (f"smoke-{args.backend}" if args.smoke
+                       else args.backend)
+    path = args.json or os.path.join(args.out, f"BENCH_{tag}.json")
+    common.emit_bench_json(path, tag, args.backend, tables)
 
 
 if __name__ == "__main__":

@@ -10,10 +10,11 @@ into two knobs here —
     the dense assignment is dequeued in, which bounds terminal load
     imbalance to one batch at the cost of more dispatches.
 
-  * kernel candidate-tile width: ``block_c`` (TDYNAMIC §V-G) on the
-    tiled MXU backend — pass ``--backend pallas`` (TPU) or
-    ``--backend interpret`` (CPU kernel body) to sweep it on the fused
-    kernel that actually runs; the default ``auto`` resolves per host.
+  * kernel candidate-tile width: ``block_c`` (TDYNAMIC §V-G) on every
+    non-ref backend — the tiled MXU path's candidate-tile width and the
+    streaming engine's sub-block width alike.  ``--backend fused``
+    (interpret on CPU, compiled on TPU), ``pallas``, or ``interpret``
+    all sweep it; the default ``auto`` resolves once at parse time.
 
 We sweep all of them and report response time, reproducing the paper's finding
 that a moderate setting beats both extremes, and that past the
@@ -29,26 +30,32 @@ from repro.runtime import JoinSession
 from benchmarks.common import (PAPER_K, load_dataset, parser, print_table, save,
                     timed_trials)
 
+# Re-swept for the streaming engine (ISSUE 3): with no (block, budget)
+# distance tile the budget stops being the memory cap, so the grid now
+# brackets the raised defaults (dense_budget=2048, n_batches=2).
 TILE_SWEEP = [
     ("block32", dict(query_block=32, dense_budget=512)),
     ("block128", dict(query_block=128, dense_budget=1024)),
-    ("block512", dict(query_block=512, dense_budget=1024)),
+    ("default", dict(query_block=128, dense_budget=2048)),
+    ("block512", dict(query_block=512, dense_budget=2048)),
     ("budget256", dict(query_block=128, dense_budget=256)),
     ("budget4096", dict(query_block=128, dense_budget=4096)),
 ]
 
 # block_c is TDYNAMIC (§V-G) on the kernel that actually runs: the
-# candidate-tile width of the fused dense kernel.  Only the tiled
-# backends (--backend pallas|interpret) exercise it; ref ignores it.
+# candidate-tile width of the tiled path and the streaming sub-block
+# width of the fused engine.  Every backend except ref exercises it.
 BLOCKC_SWEEP = [
     ("blockc64", dict(block_c=64)),
     ("blockc128", dict(block_c=128)),
     ("blockc256", dict(block_c=256)),
 ]
 
-# §V-A queue granularity: 1 batch == the old monolithic dispatch.
+# §V-A queue granularity: 1 batch == the old monolithic dispatch;
+# nb2 is the new default (larger batches, the paper's opt. i).
 QUEUE_SWEEP = [
     ("nb1", dict(n_batches=1)),
+    ("nb2", dict(n_batches=2)),
     ("nb4", dict(n_batches=4)),
     ("nb16", dict(n_batches=16)),
 ]
@@ -56,10 +63,9 @@ QUEUE_SWEEP = [
 def active_sweep(backend: str):
     """The ref backend ignores block_c — sweeping it there would just
     re-run identical joins, so TDYNAMIC only joins the sweep on the
-    tiled backends."""
-    from repro.core.dense_join import resolve_backend
-
-    tdynamic = BLOCKC_SWEEP if resolve_backend(backend) != "ref" else []
+    tiled/fused backends.  ``backend`` arrives already resolved (the
+    common parser collapses auto exactly once)."""
+    tdynamic = BLOCKC_SWEEP if backend != "ref" else []
     return TILE_SWEEP + tdynamic + QUEUE_SWEEP
 
 
@@ -84,6 +90,10 @@ def run(args):
             rec[f"{ds}/{name}"] = {
                 "response_s": resp, "wall_s": t, "backend": session.backend,
                 "n_engine_compiles_steady": res.stats.n_engine_compiles,
+                "n_points": len(pts),
+                "queries_per_s": len(pts) / resp if resp > 0 else 0.0,
+                "n_engine_compiles_total": session.total_compiles,
+                "memory": session.memory_analysis(),
                 **res.stats.__dict__,
             }
         rows.append(row)

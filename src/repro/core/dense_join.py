@@ -14,7 +14,7 @@ nearest within ε.  Faithful semantics:
   * batching (§IV-B): queries stream through in fixed blocks, so peak
     memory is block × budget regardless of |Q^dense|.
 
-Two execution backends share those semantics (DESIGN.md §2.5):
+Three execution backends share those semantics (DESIGN.md §2.5, §2.6):
 
   * ``"ref"`` — per-query gather + broadcast-subtract (the original jnp
     path; VPU-bound, kept as the correctness oracle);
@@ -23,8 +23,19 @@ Two execution backends share those semantics (DESIGN.md §2.5):
     shares ONE deduplicated 3^m candidate block
     (``grid.tile_shared_candidates``), and the distance tile is a
     (TQ×D)·(D×TC) matmul through the fused ``pairwise_l2`` kernel with
-    the SHORTC ε² tile short-circuit.  ``"auto"`` resolves to pallas on
-    TPU and ref elsewhere.
+    the SHORTC ε² tile short-circuit, followed by a second top-K pass
+    over the materialized (TQ, TC) tile;
+  * ``"fused"`` — the streaming one-pass engine (``kernels/knn_stream``):
+    same cell-tiled shared candidate block, but the candidate axis is an
+    inner kernel grid dimension — each (TQ×D)·(D×TCsub) distance
+    sub-tile merges into a per-query running top-K carried in VMEM
+    scratch, with ε/found bookkeeping folded into the same pass, so no
+    (block, budget) distance tile ever exists in HBM.  Runs the Pallas
+    kernel compiled on TPU and in interpret mode elsewhere (CPU CI).
+
+``"auto"`` resolves once per process state to fused on TPU and ref
+elsewhere; the ``REPRO_BACKEND`` env var overrides the auto resolution
+for benchmarking without code edits.
 
 Correctness invariant (used by tests): if ``found ≥ K`` and no overflow,
 the returned K neighbors are the *exact* global KNN, because the 3^m
@@ -34,25 +45,52 @@ all K reported neighbors lie within ε.
 from __future__ import annotations
 
 import functools
+import os
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import grid as grid_lib
+from repro.kernels.knn_stream import ops as stream_ops
 from repro.kernels.pairwise_l2 import ops as pairwise_ops
 from repro.utils import round_up
 
-BACKENDS = ("ref", "pallas", "interpret", "auto")
+BACKENDS = ("ref", "pallas", "interpret", "fused", "auto")
 
 
 def resolve_backend(backend: str) -> str:
-    """Collapse ``"auto"`` at trace time: pallas on TPU, ref elsewhere."""
+    """Collapse ``"auto"`` on the host: the streaming fused engine on
+    TPU, ref elsewhere.  The ``REPRO_BACKEND`` env var overrides the
+    auto resolution (benchmark sweeps without code edits); an explicit
+    non-auto ``backend`` always wins over the env.
+
+    Resolution always happens OUTSIDE the jit boundary (the public
+    ``dense_join``/``sparse_knn`` wrappers resolve before calling their
+    ``*_jit`` bodies), so the executable cache is keyed on the concrete
+    path and a changed env can never silently hit a stale ``"auto"``
+    trace.  Callers that dispatch repeatedly (sessions, benchmark
+    drivers) still resolve ONCE up front so one run never mixes paths.
+    """
     if backend not in BACKENDS:
         raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
     if backend == "auto":
-        return "pallas" if jax.default_backend() == "tpu" else "ref"
+        env = os.environ.get("REPRO_BACKEND", "").strip().lower()
+        if env:
+            if env not in BACKENDS or env == "auto":
+                raise ValueError(
+                    f"REPRO_BACKEND must be one of {tuple(b for b in BACKENDS if b != 'auto')}, "
+                    f"got {env!r}"
+                )
+            return env
+        return "fused" if jax.default_backend() == "tpu" else "ref"
     return backend
+
+
+def _stream_kernel_mode() -> str:
+    """The fused backend's kernel execution mode: compiled Pallas on
+    TPU, interpret elsewhere (the CPU CI path)."""
+    return "pallas" if jax.default_backend() == "tpu" else "interpret"
 
 
 class DenseJoinResult(NamedTuple):
@@ -97,6 +135,30 @@ def _block_fn(index: grid_lib.GridIndex, points_r, eps2, k, budget):
     return fn
 
 
+def _shared_tile_candidates(index: grid_lib.GridIndex, points_r, qids,
+                            cand_budget):
+    """The cell-tiled backends' common gather: one deduplicated shared
+    candidate block per query tile (−1 = padding row)."""
+    safe = jnp.clip(qids, 0, index.n_points - 1)
+    coords = index.point_coords[safe]                         # (TQ, m)
+    starts, counts = grid_lib.neighbor_ranges(index, coords)  # (TQ, R)
+    # Padding rows clip to point 0 — zero their ranges so a partial
+    # tile's shared union holds only REAL queries' neighborhoods
+    # (otherwise point 0's cells could crowd out, or overflow, the
+    # tile's budget and spuriously fail every query in it).
+    counts = jnp.where((qids >= 0)[:, None], counts, 0)
+    pos, valid, _, tile_overflow = grid_lib.tile_shared_candidates(
+        index, starts, counts, cand_budget
+    )                                                          # (TC,)
+    cand_ids = jnp.where(valid, index.order[pos], -1)
+    cand_pts = index.points_sorted[pos]                        # (TC, n)
+    qpts = points_r[safe]                                      # (TQ, n)
+    # T₂ proxy stays per-query (own 3^m total), matching the ref
+    # backend so the queue's Eq.-6 rebalance sees identical workloads.
+    own_total = jnp.sum(counts, axis=1).astype(jnp.int32)
+    return qpts, cand_ids, cand_pts, own_total, tile_overflow
+
+
 def _tile_fn(index: grid_lib.GridIndex, points_r, eps2, k, budget, block_c,
              kernel_mode):
     """Process one cell-sorted query tile against its shared candidate
@@ -105,20 +167,9 @@ def _tile_fn(index: grid_lib.GridIndex, points_r, eps2, k, budget, block_c,
 
     def fn(qids):
         nq = qids.shape[0]
-        safe = jnp.clip(qids, 0, index.n_points - 1)
-        coords = index.point_coords[safe]                         # (TQ, m)
-        starts, counts = grid_lib.neighbor_ranges(index, coords)  # (TQ, R)
-        # Padding rows clip to point 0 — zero their ranges so a partial
-        # tile's shared union holds only REAL queries' neighborhoods
-        # (otherwise point 0's cells could crowd out, or overflow, the
-        # tile's budget and spuriously fail every query in it).
-        counts = jnp.where((qids >= 0)[:, None], counts, 0)
-        pos, valid, tile_total, tile_overflow = grid_lib.tile_shared_candidates(
-            index, starts, counts, cand_budget
-        )                                                          # (TC,)
-        cand_ids = jnp.where(valid, index.order[pos], -1)
-        cand_pts = index.points_sorted[pos]                        # (TC, n)
-        qpts = points_r[safe]                                      # (TQ, n)
+        qpts, cand_ids, cand_pts, own_total, tile_overflow = (
+            _shared_tile_candidates(index, points_r, qids, cand_budget)
+        )
 
         d2 = pairwise_ops.pairwise_sq_l2(
             qpts, cand_pts,
@@ -145,18 +196,64 @@ def _tile_fn(index: grid_lib.GridIndex, points_r, eps2, k, budget, block_c,
         # The shared block holds the tile's union, so truncation hits every
         # query in the tile at once — a per-tile §V-E failure.
         failed = (found < k) | tile_overflow
-        # T₂ proxy stays per-query (own 3^m total), matching the ref
-        # backend so the queue's Eq.-6 rebalance sees identical workloads.
-        own_total = jnp.sum(counts, axis=1).astype(jnp.int32)
         return kdists, kids, found, failed, own_total
 
     return fn
 
 
+def _fused_tile_fn(index: grid_lib.GridIndex, points_r, eps2, k, budget,
+                   block_c, kernel_mode):
+    """Streaming one-pass tile processor (DESIGN.md §2.6): the shared
+    candidate block streams through the fused kernel in ``block_c``
+    sub-blocks; distance, ε filter, top-K, and ``found`` all happen in
+    one kernel pass — no (TQ, TC) distance tile is ever materialized."""
+    cand_budget = round_up(budget, block_c)
+
+    def fn(qids):
+        nq = qids.shape[0]
+        qpts, cand_ids, cand_pts, own_total, tile_overflow = (
+            _shared_tile_candidates(index, points_r, qids, cand_budget)
+        )
+        kdists, kids, found = stream_ops.knn_stream_topk(
+            qpts, cand_pts, qids, cand_ids, eps2,
+            k=k, block_q=nq, block_c=block_c, mode=kernel_mode,
+        )
+        # Same per-tile §V-E overflow semantics as the two-pass tiled path.
+        failed = (found < k) | tile_overflow
+        return kdists, kids, found, failed, own_total
+
+    return fn
+
+
+def dense_join(
+    index: grid_lib.GridIndex,
+    points_r: jnp.ndarray,
+    query_ids: jnp.ndarray,
+    epsilon: jnp.ndarray,
+    *,
+    k: int,
+    budget: int = 1024,
+    query_block: int = 128,
+    block_c: int = 128,
+    backend: str = "ref",
+) -> DenseJoinResult:
+    """Run GPU-JOIN over the given query ids (see ``dense_join_jit``).
+
+    Resolves ``backend`` OUTSIDE the jit boundary so the executable
+    cache is keyed on the concrete path: ``"auto"`` (and a changed
+    ``REPRO_BACKEND``) can never silently hit a stale entry traced
+    under a different resolution."""
+    return dense_join_jit(
+        index, points_r, query_ids, epsilon,
+        k=k, budget=budget, query_block=query_block, block_c=block_c,
+        backend=resolve_backend(backend),
+    )
+
+
 @functools.partial(
     jax.jit, static_argnames=("k", "budget", "query_block", "block_c", "backend")
 )
-def dense_join(
+def dense_join_jit(
     index: grid_lib.GridIndex,
     points_r: jnp.ndarray,     # (|D|, n) variance-reordered database
     query_ids: jnp.ndarray,    # (Qpad,) i32, −1 padding — Q^dense, compacted
@@ -171,10 +268,21 @@ def dense_join(
     """Run GPU-JOIN over the given query ids.  Results are aligned with
     ``query_ids`` (row i ↔ query_ids[i]); padding rows are failed.
 
-    ``backend`` selects the execution path (module docstring); ``block_c``
-    is the candidate-tile width in the fused kernel — the paper's TDYNAMIC
+    ``backend`` must be a concrete (already-resolved) execution path
+    (module docstring) — AOT callers (``JoinSession``) lower this
+    directly with their session-resolved backend; everyone else goes
+    through the resolving ``dense_join`` wrapper.  ``block_c`` is the
+    candidate-tile width in the fused kernels — the paper's TDYNAMIC
     "threads per query point" knob — and is ignored by ``"ref"``.
     """
+    if backend == "auto":
+        # Re-resolving here would key the executable cache on the
+        # literal "auto" and freeze whatever REPRO_BACKEND said at
+        # trace time — the exact staleness the wrapper exists to avoid.
+        raise ValueError(
+            "dense_join_jit requires a concrete backend; resolve "
+            "\"auto\" first (use dense_join or resolve_backend)"
+        )
     backend = resolve_backend(backend)
     qpad = round_up(query_ids.shape[0], query_block)
     qids = jnp.full((qpad,), -1, jnp.int32).at[: query_ids.shape[0]].set(query_ids)
@@ -187,11 +295,17 @@ def dense_join(
             lambda x: x.reshape((qpad,) + x.shape[2:]), out
         )
     else:
+        if backend == "fused":
+            tile_fn = _fused_tile_fn(
+                index, points_r, eps2, k, budget, block_c,
+                _stream_kernel_mode(),
+            )
+        else:
+            tile_fn = _tile_fn(
+                index, points_r, eps2, k, budget, block_c, backend
+            )
         tiles, perm = grid_lib.group_queries_by_cell(index, qids, query_block)
-        out = jax.lax.map(
-            _tile_fn(index, points_r, eps2, k, budget, block_c, backend),
-            tiles,
-        )
+        out = jax.lax.map(tile_fn, tiles)
         kd, ki, found, failed, total = jax.tree_util.tree_map(
             lambda x: jnp.zeros_like(x.reshape((qpad,) + x.shape[2:]))
             .at[perm]

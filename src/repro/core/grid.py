@@ -167,10 +167,15 @@ def lookup_cells(index: GridIndex, ids: jnp.ndarray):
     return starts, counts
 
 
-def neighbor_ranges(index: GridIndex, coords: jnp.ndarray):
+def neighbor_ranges(index: GridIndex, coords: jnp.ndarray, offs=None):
     """For query cell coords (Q, m) return candidate ranges over the 3^m
-    adjacent cells: (starts, counts), both (Q, 3^m) int32."""
-    offs = jnp.asarray(neighbor_offsets(index.m))                   # (R, m)
+    adjacent cells: (starts, counts), both (Q, 3^m) int32.
+
+    ``offs`` lets a caller that sweeps many grids of the same ``m``
+    (the sparse pyramid) hoist the 3^m offset constant once instead of
+    re-materializing it per level."""
+    if offs is None:
+        offs = jnp.asarray(neighbor_offsets(index.m))               # (R, m)
     ncoords = coords[:, None, :] + offs[None, :, :]                 # (Q, R, m)
     valid = jnp.all(
         (ncoords >= 0) & (ncoords < index.cells_per_dim[None, None, :]), axis=-1

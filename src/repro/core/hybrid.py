@@ -49,13 +49,18 @@ class HybridConfig:
     n_bins: int = 256
     n_query_sample: int = 256
     n_pair_sample: int = 4096
-    # dense engine (GPU-JOIN analogue)
-    dense_budget: int = 1024      # candidate budget per query (batching, §IV-B)
+    # dense engine (GPU-JOIN analogue).  Defaults sized for the fused
+    # streaming backend (DESIGN.md §2.6): with no (block, budget)
+    # distance tile in HBM the candidate budget stops being the memory
+    # cap, so the default budget doubles and the dense assignment is
+    # dequeued in fewer, larger batches (the paper's opt. i — maximize
+    # accelerator batch size).  Re-swept in benchmarks/table3.
+    dense_budget: int = 2048      # candidate budget per query (batching, §IV-B)
     query_block: int = 128        # queries per streamed block (TSTATIC tile)
     block_c: int = 128            # candidate-tile width in the fused kernel
                                   # (TDYNAMIC, §V-G; tiled backends only)
     # work-queue scheduler (§V-A, Table III granularity)
-    n_batches: int = 4            # dense batches dequeued per join
+    n_batches: int = 2            # dense batches dequeued per join
     online_rebalance: bool = True # Eq. 6-driven demotion between rounds
     rebalance_sync_batches: int = 1  # force a T₁ harvest after this many
                                      # dense batches (0: poll only)
@@ -67,9 +72,12 @@ class HybridConfig:
     # fallback + kernels
     brute_chunk: int = 2048
     kernel_mode: str = "auto"     # auto|pallas|interpret|ref (brute-lane kernels)
-    # engine execution backend (DESIGN.md §2.5): "ref" per-query gather
-    # oracle; "pallas"/"interpret" the cell-tiled MXU path; "auto" resolves
-    # to pallas on TPU, ref elsewhere.  Part of the AOT engine-cache key.
+    # engine execution backend (DESIGN.md §2.5, §2.6): "ref" per-query
+    # gather oracle; "pallas"/"interpret" the cell-tiled two-pass MXU
+    # path; "fused" the streaming one-pass distance+top-K engine; "auto"
+    # resolves to fused on TPU, ref elsewhere (REPRO_BACKEND env
+    # overrides).  Part of the AOT engine-cache key; resolved ONCE per
+    # session (dense_join.resolve_backend).
     backend: str = "auto"
     seed: int = 0
 

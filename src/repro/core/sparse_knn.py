@@ -16,11 +16,16 @@ point within cert_r(ℓ) = min_j cell_edge_ℓ_j of the query, so
 Queries missing the certificate fall back to the streamed brute scan
 (core/brute.py) — the result is always exact, like EXACT-ANN in exact mode.
 
-``backend=`` selects the distance formulation (DESIGN.md §2.5): ``"ref"``
-keeps the broadcast-subtract oracle; the kernel backends compute the same
-d² as a batched MXU dot_general over the gathered per-query operands
-(candidate sets here are per-query by design, so the dense engine's
-shared-candidate Pallas tiling does not apply).
+``backend=`` selects the distance formulation (DESIGN.md §2.5, §2.6):
+``"ref"`` keeps the broadcast-subtract oracle; the ``"pallas"`` /
+``"interpret"`` backends compute the same d² as a batched MXU
+dot_general over the gathered per-query operands (candidate sets here
+are per-query by design, so the dense engine's shared-candidate Pallas
+tiling does not apply); ``"fused"`` streams the candidate budget in
+chunks through a scan that carries a per-query running top-K (the
+``knn_topk`` merge helper), so neither the (B, budget, n) gathered
+operand nor the (B, budget) distance tile is ever materialized — the
+jnp-level analogue of the dense engine's streaming kernel.
 """
 from __future__ import annotations
 
@@ -32,7 +37,11 @@ import jax.numpy as jnp
 
 from repro.core import dense_join as dense_lib
 from repro.core import grid as grid_lib
+from repro.kernels.knn_topk import ops as topk_ops
 from repro.utils import round_up
+
+# Candidate-chunk width of the fused streaming scan (lane-aligned).
+STREAM_CHUNK = 128
 
 
 class Pyramid(NamedTuple):
@@ -85,6 +94,40 @@ def _gathered_sq_l2(qpts, cand_pts, backend):
     return jnp.maximum(qq + cc - 2.0 * qc, 0.0)
 
 
+def _streamed_topk(points_r, qpts, cand_ids, keep, k):
+    """One-pass streaming top-K for per-query candidate sets (the
+    ``"fused"`` sparse path): scan the budget in ``STREAM_CHUNK``-wide
+    chunks, gathering / computing / merging per chunk.  The carry is the
+    (B, k) running top-K (``knn_topk.merge_running_topk``), so peak
+    intermediates are O(B·chunk·n) instead of O(B·budget·n) and no
+    (B, budget) distance tile exists in the jaxpr."""
+    b, budget = cand_ids.shape
+    cpad = round_up(budget, STREAM_CHUNK)
+    ids_p = jnp.zeros((b, cpad), cand_ids.dtype).at[:, :budget].set(cand_ids)
+    keep_p = jnp.zeros((b, cpad), bool).at[:, :budget].set(keep)
+    # (n_chunks, B, chunk) scan layout.
+    ids_s = jnp.moveaxis(ids_p.reshape(b, -1, STREAM_CHUNK), 1, 0)
+    keep_s = jnp.moveaxis(keep_p.reshape(b, -1, STREAM_CHUNK), 1, 0)
+
+    def step(carry, xs):
+        run_d, run_i = carry
+        ids_c, keep_c = xs                                     # (B, chunk)
+        pts_c = points_r[ids_c]                                # (B, chunk, n)
+        d2 = _gathered_sq_l2(qpts, pts_c, "interpret")         # batched MXU
+        d2m = jnp.where(keep_c, d2, jnp.inf)
+        idm = jnp.where(keep_c, ids_c, -1)
+        return topk_ops.merge_running_topk(
+            run_d, run_i, d2m, idm, k=k
+        ), None
+
+    init = (
+        jnp.full((b, k), jnp.inf, jnp.float32),
+        jnp.full((b, k), -1, jnp.int32),
+    )
+    (kd, ki), _ = jax.lax.scan(step, init, (ids_s, keep_s))
+    return kd, jnp.where(jnp.isinf(kd), -1, ki)
+
+
 def _query_level(pyr: Pyramid, points_r, orders, starts, counts, qids, safe,
                  sel, k, budget, backend):
     """Gather + distance + top-K at per-query pyramid level ``sel`` (B,).
@@ -103,16 +146,20 @@ def _query_level(pyr: Pyramid, points_r, orders, starts, counts, qids, safe,
     )                                            # positions in SELECTED level's order
 
     cand_ids = orders[sel[:, None], pos]                      # (B, budget)
-    cand_pts = points_r[cand_ids]                             # (B, budget, n)
     qpts = points_r[safe]
-
-    d2 = _gathered_sq_l2(qpts, cand_pts, backend)
     keep = valid & (cand_ids != qids[:, None])
-    d2m = jnp.where(keep, d2, jnp.inf)
 
-    neg, selk = jax.lax.top_k(-d2m, k)
-    kd = -neg
-    ki = jnp.where(jnp.isinf(kd), -1, jnp.take_along_axis(cand_ids, selk, axis=1))
+    if backend == "fused":
+        kd, ki = _streamed_topk(points_r, qpts, cand_ids, keep, k)
+    else:
+        cand_pts = points_r[cand_ids]                         # (B, budget, n)
+        d2 = _gathered_sq_l2(qpts, cand_pts, backend)
+        d2m = jnp.where(keep, d2, jnp.inf)
+        neg, selk = jax.lax.top_k(-d2m, k)
+        kd = -neg
+        ki = jnp.where(
+            jnp.isinf(kd), -1, jnp.take_along_axis(cand_ids, selk, axis=1)
+        )
 
     found = jnp.sum(jnp.isfinite(kd), axis=1)
     cert_r = pyr.cert_radii[sel]
@@ -134,7 +181,15 @@ def _block_fn(pyr: Pyramid, points_r, k, budget, sel_factor, backend):
     """
     n_levels = len(pyr.levels)
     npts = pyr.levels[0].n_points
+    # Hoisted per-level constants: everything below is loop-invariant
+    # across the lax.map over query blocks, so computing it inside
+    # ``fn`` would re-broadcast it every block (and, for the 3^m offset
+    # table, once more per level).  The closure keeps it out of the
+    # scan body entirely.
     cert_r2 = pyr.cert_radii**2                     # (L,) ascending
+    orders = jnp.stack([g.order for g in pyr.levels])         # (L, |D|)
+    offs = jnp.asarray(grid_lib.neighbor_offsets(pyr.levels[0].m))
+    target = sel_factor * (k + 1)                   # selectivity constant
 
     def fn(qids):
         safe = jnp.clip(qids, 0, npts - 1)
@@ -144,16 +199,14 @@ def _block_fn(pyr: Pyramid, points_r, k, budget, sel_factor, backend):
         # (3× fewer binary-search sweeps than per-pass recomputation).
         starts_l, counts_l = [], []
         for g in pyr.levels:
-            s, c = grid_lib.neighbor_ranges(g, g.point_coords[safe])
+            s, c = grid_lib.neighbor_ranges(g, g.point_coords[safe], offs)
             starts_l.append(s)
             counts_l.append(c)
         starts = jnp.stack(starts_l)                 # (L, B, R)
         counts = jnp.stack(counts_l)                 # (L, B, R)
-        orders = jnp.stack([g.order for g in pyr.levels])     # (L, |D|)
 
         # Level selection by projected candidate counts (cheap, regular).
         totals = jnp.sum(counts, axis=-1)            # (L, B)
-        target = sel_factor * (k + 1)
         enough = totals >= target
         first = jnp.argmax(enough, axis=0).astype(jnp.int32)
         sel1 = jnp.where(jnp.any(enough, axis=0), first, n_levels - 1)
@@ -183,11 +236,32 @@ def _block_fn(pyr: Pyramid, points_r, k, budget, sel_factor, backend):
     return fn
 
 
+def sparse_knn(
+    pyr: Pyramid,
+    points_r: jnp.ndarray,
+    query_ids: jnp.ndarray,
+    *,
+    k: int,
+    budget: int = 512,
+    query_block: int = 128,
+    sel_factor: int = 4,
+    backend: str = "ref",
+) -> SparseKNNResult:
+    """Resolving wrapper (see ``dense_join.dense_join``): collapses
+    ``backend`` outside the jit boundary so the executable cache is
+    keyed on the concrete path."""
+    return sparse_knn_jit(
+        pyr, points_r, query_ids,
+        k=k, budget=budget, query_block=query_block, sel_factor=sel_factor,
+        backend=dense_lib.resolve_backend(backend),
+    )
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("k", "budget", "query_block", "sel_factor", "backend"),
 )
-def sparse_knn(
+def sparse_knn_jit(
     pyr: Pyramid,
     points_r: jnp.ndarray,
     query_ids: jnp.ndarray,   # (Qpad,) i32, −1 padding
@@ -198,6 +272,13 @@ def sparse_knn(
     sel_factor: int = 4,
     backend: str = "ref",
 ) -> SparseKNNResult:
+    if backend == "auto":
+        # Same staleness guard as dense_join_jit: "auto" in the jit
+        # cache key would freeze the trace-time REPRO_BACKEND reading.
+        raise ValueError(
+            "sparse_knn_jit requires a concrete backend; resolve "
+            "\"auto\" first (use sparse_knn or resolve_backend)"
+        )
     backend = dense_lib.resolve_backend(backend)
     qpad = round_up(query_ids.shape[0], query_block)
     qids = jnp.full((qpad,), -1, jnp.int32).at[: query_ids.shape[0]].set(query_ids)

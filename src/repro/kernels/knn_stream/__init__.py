@@ -1,0 +1,2 @@
+"""Fused streaming distance + top-K engine kernel (DESIGN.md §2.6)."""
+from repro.kernels.knn_stream.ops import knn_stream_topk  # noqa: F401

@@ -1,0 +1,192 @@
+"""Pallas TPU kernel: fused one-pass streaming distance + running top-K.
+
+This is the dense engine's streaming backend (DESIGN.md §2.6).  The
+cell-tiled path (`pairwise_l2` + `lax.top_k`) materializes the full
+`(TQ, C)` distance tile in HBM and then runs top-K as a *second* pass
+over it — exactly the materialize-then-sort structure whose memory wall
+caps the batch size (ISSUE 3 motivation; Garcia et al.'s GPU brute
+force).  Here the candidate axis is an *inner grid dimension* instead:
+
+  grid = (query tiles, candidate sub-blocks), semantics ("parallel",
+  "arbitrary") — for a fixed query tile the candidate axis iterates
+  sequentially, so VMEM scratch persists across steps and Pallas's
+  pipeline machinery double-buffers the next candidate sub-block's DMA
+  behind the current step's compute (the FlashAttention streaming
+  structure).
+
+Each step computes one `(TQ×D)·(D×TCsub)` MXU distance sub-tile into
+VMEM and merges it into a per-query running top-K — distances *and*
+candidate ids — carried in VMEM scratch.  Nothing of shape `(TQ, C)`
+ever exists in any memory: HBM traffic is O(Q·D + C·D + Q·K) and the
+candidate budget stops being a peak-memory knob.
+
+Folded into the same pass (no second sweep over distances):
+  * SHORTC ε² as a *runtime operand* — a (1, 1) block the kernel reads,
+    so ε sweeps never recompile (paper §IV-E).  Candidates beyond ε²
+    are masked to +inf before the merge, and a sub-block contributing
+    no in-range candidate skips its merge network entirely (the
+    tile-level short circuit: masked minima only ever grow);
+  * `found` bookkeeping — the per-query count of in-range candidates
+    (self excluded) accumulates in scratch, so the dense engine's §V-E
+    failure test (`found < K`) needs no second distance sweep.
+
+The running merge is the same branch-free K min-passes as
+``knn_topk._tile_topk`` (min, first-argmin via min-iota, one-hot
+knockout) applied to the running buffer concatenated with the fresh
+sub-tile along lanes — no in-kernel sort/top_k primitives.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.knn_topk.kernel import MAX_UNROLLED_K  # shared ceiling
+
+# jax renamed TPUCompilerParams -> CompilerParams; support both.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+_INF = np.float32(np.inf)
+
+
+def _merge_topk(d: jnp.ndarray, ids: jnp.ndarray, k: int):
+    """K smallest per row of ``d`` (TQ, M) with their ids: K passes of
+    (min, first-argmin-via-min-iota, one-hot knockout).  Ids are gathered
+    by one-hot sum — branch-free, no take_along_axis inside the kernel."""
+    tq, m = d.shape
+    col = jax.lax.broadcasted_iota(jnp.int32, (tq, m), 1)
+    vals, outs = [], []
+    for _ in range(k):
+        mn = jnp.min(d, axis=1)                                    # (TQ,)
+        amn = jnp.min(jnp.where(d == mn[:, None], col, m), axis=1)
+        hit = col == amn[:, None]
+        vals.append(mn)
+        outs.append(jnp.sum(jnp.where(hit, ids, 0), axis=1).astype(jnp.int32))
+        d = jnp.where(hit, _INF, d)
+    return jnp.stack(vals, axis=1), jnp.stack(outs, axis=1)
+
+
+def _stream_kernel(
+    eps_ref, q_ref, c_ref, qid_ref, cid_ref,
+    outd_ref, outi_ref, outf_ref,
+    run_d, run_i, run_f,
+    *, k: int,
+):
+    j = pl.program_id(1)
+    nj = pl.num_programs(1)
+    eps2 = eps_ref[0, 0]
+
+    @pl.when(j == 0)
+    def _init():
+        run_d[...] = jnp.full(run_d.shape, _INF, jnp.float32)
+        run_i[...] = jnp.full(run_i.shape, -1, jnp.int32)
+        run_f[...] = jnp.zeros(run_f.shape, jnp.int32)
+
+    q = q_ref[...].astype(jnp.float32)                             # (TQ, D)
+    c = c_ref[...].astype(jnp.float32)                             # (TC, D)
+    qq = jnp.sum(q * q, axis=1, keepdims=True)                     # (TQ, 1)
+    cc = jnp.sum(c * c, axis=1, keepdims=True).T                   # (1, TC)
+    qc = jax.lax.dot_general(
+        q, c, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                                              # MXU
+    d = jnp.maximum(qq + cc - 2.0 * qc, 0.0)                       # (TQ, TC)
+
+    qids = qid_ref[...]                                            # (TQ, 1)
+    cids = cid_ref[...]                                            # (1, TC)
+    keep = (cids >= 0) & (qids != cids) & (d <= eps2)
+    run_f[...] += jnp.sum(keep, axis=1, keepdims=True).astype(jnp.int32)
+    d = jnp.where(keep, d, _INF)
+
+    # Tile-level SHORTC: a sub-block with no in-range candidate cannot
+    # change the running minima — skip its merge network entirely.
+    @pl.when(jnp.any(keep))
+    def _merge():
+        alld = jnp.concatenate([run_d[...], d], axis=1)            # (TQ, k+TC)
+        alli = jnp.concatenate(
+            [run_i[...], jnp.broadcast_to(cids, d.shape)], axis=1
+        )
+        vals, ids = _merge_topk(alld, alli, k)
+        run_d[...] = vals
+        run_i[...] = ids
+
+    @pl.when(j == nj - 1)
+    def _flush():
+        vals = run_d[...]
+        outd_ref[...] = vals
+        outi_ref[...] = jnp.where(jnp.isinf(vals), -1, run_i[...])
+        outf_ref[...] = run_f[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "block_q", "block_c", "interpret")
+)
+def knn_stream_topk_padded(
+    queries: jnp.ndarray,      # (Q, D) padded: Q % block_q == 0
+    candidates: jnp.ndarray,   # (C, D) padded: C % block_c == 0
+    query_ids: jnp.ndarray,    # (Q,) i32 (−1 for padding rows)
+    cand_ids: jnp.ndarray,     # (C,) i32 (−1 for padding rows)
+    eps2: jnp.ndarray,         # () f32 — traced ε² (runtime operand)
+    *,
+    k: int,
+    block_q: int = 128,
+    block_c: int = 128,
+    interpret: bool = False,
+):
+    """One-pass streaming ε-filtered top-K (pre-padded operands).
+
+    Returns (dists (Q, k) f32 ascending inf-padded, ids (Q, k) i32
+    −1-padded, found (Q,) i32 in-range candidate count, self excluded).
+    """
+    if k > MAX_UNROLLED_K:
+        raise ValueError(
+            f"knn_stream_topk_padded unrolls k merge passes; k={k} exceeds "
+            f"MAX_UNROLLED_K={MAX_UNROLLED_K} — use ops.knn_stream_topk, "
+            "which falls back to the ref oracle"
+        )
+    q_n, dim = queries.shape
+    c_n, _ = candidates.shape
+    assert q_n % block_q == 0 and c_n % block_c == 0
+    grid = (q_n // block_q, c_n // block_c)
+
+    kernel = functools.partial(_stream_kernel, k=k)
+    outd, outi, outf = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((block_q, dim), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_c, dim), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_q, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, block_c), lambda i, j: (0, j)),
+        ],
+        # Output blocks are revisited across j (index maps ignore j) and
+        # written once at the final candidate step.
+        out_specs=[
+            pl.BlockSpec((block_q, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_q, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_q, 1), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q_n, k), jnp.float32),
+            jax.ShapeDtypeStruct((q_n, k), jnp.int32),
+            jax.ShapeDtypeStruct((q_n, 1), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, k), jnp.float32),    # running top-K dists
+            pltpu.VMEM((block_q, k), jnp.int32),      # running top-K ids
+            pltpu.VMEM((block_q, 1), jnp.int32),      # running found count
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(
+        jnp.reshape(eps2, (1, 1)).astype(jnp.float32),
+        queries, candidates,
+        query_ids[:, None], cand_ids[None, :],
+    )
+    return outd, outi, outf[:, 0]

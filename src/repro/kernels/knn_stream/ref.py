@@ -1,0 +1,45 @@
+"""Pure-jnp oracle for the fused streaming distance+top-K engine.
+
+Deliberately materialize-then-sort: the full (Q, C) distance matrix via
+the broadcast-subtract formulation (same rounding as the dense engine's
+``"ref"`` backend), ε-masked, then one native ``top_k``.  The streaming
+kernel must agree with this modulo last-ulp ε²-boundary rounding between
+the two distance formulations (DESIGN.md §2.5 boundary caveat).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def knn_stream_topk_ref(
+    queries: jnp.ndarray,     # (Q, D)
+    candidates: jnp.ndarray,  # (C, D)
+    query_ids: jnp.ndarray,   # (Q,) i32
+    cand_ids: jnp.ndarray,    # (C,) i32, −1 = invalid
+    eps2: jnp.ndarray,        # () f32
+    *,
+    k: int,
+):
+    """ε-filtered exact K nearest candidates per query.
+
+    Returns (dists (Q, k) f32 ascending inf-padded, ids (Q, k) i32
+    −1-padded, found (Q,) i32)."""
+    q = queries.astype(jnp.float32)
+    c = candidates.astype(jnp.float32)
+    diff = q[:, None, :] - c[None, :, :]
+    d = jnp.sum(diff * diff, axis=-1)                          # (Q, C)
+    keep = (
+        (cand_ids[None, :] >= 0)
+        & (query_ids[:, None] != cand_ids[None, :])
+        & (d <= eps2)
+    )
+    dm = jnp.where(keep, d, jnp.inf)
+    neg, sel = jax.lax.top_k(-dm, k)
+    kd = -neg
+    ki = jnp.where(jnp.isinf(kd), -1, cand_ids[sel])
+    found = jnp.sum(keep, axis=1).astype(jnp.int32)
+    return kd, ki, found

@@ -101,6 +101,9 @@ class JoinSession:
         self.compile_counts: Dict[str, int] = {
             "dense": 0, "sparse": 0, "brute": 0,
         }
+        # Last executable dispatched per engine kind (cache hits
+        # included) — the benchmark JSON reads memory_analysis() off it.
+        self.executables: Dict[str, object] = {}
         self._prepared: Optional[_Prepared] = None
 
     # -- engine cache ------------------------------------------------------
@@ -119,7 +122,30 @@ class JoinSession:
             ex = jitted.lower(*args, **kwargs).compile()
             _ENGINE_CACHE[key] = ex
             self.compile_counts[kind] += 1
+        self.executables[kind] = ex
         return ex
+
+    def memory_analysis(self) -> Dict[str, Optional[Dict[str, int]]]:
+        """Compiler memory analysis per engine kind (bytes), for the
+        benchmark JSON's peak-HBM trajectory.  ``None`` where the
+        backend's ``Compiled.memory_analysis()`` is unavailable (e.g.
+        some CPU builds)."""
+        out: Dict[str, Optional[Dict[str, int]]] = {}
+        fields = (
+            "temp_size_in_bytes", "argument_size_in_bytes",
+            "output_size_in_bytes", "generated_code_size_in_bytes",
+        )
+        for kind, ex in self.executables.items():
+            try:
+                ma = ex.memory_analysis()
+                rec = {
+                    f: int(getattr(ma, f))
+                    for f in fields if hasattr(ma, f)
+                }
+                out[kind] = rec or None
+            except Exception:
+                out[kind] = None
+        return out
 
     # -- pipeline ----------------------------------------------------------
 
@@ -199,7 +225,9 @@ class JoinSession:
                 k=cfg.k, budget=cfg.dense_budget, query_block=cfg.query_block,
                 block_c=cfg.block_c, backend=self.backend,
             )
-            ex = self._engine("dense", dense_lib.dense_join, args, kwargs)
+            # The _jit handle: the session resolved the backend once in
+            # __init__, so lowering bypasses the resolving wrapper.
+            ex = self._engine("dense", dense_lib.dense_join_jit, args, kwargs)
             t0 = time.perf_counter()
             res = jax.block_until_ready(ex(*args))
             dt = time.perf_counter() - t0
@@ -224,7 +252,7 @@ class JoinSession:
                 query_block=cfg.query_block, sel_factor=cfg.sel_factor,
                 backend=self.backend,
             )
-            ex = self._engine("sparse", sparse_lib.sparse_knn, args, kwargs)
+            ex = self._engine("sparse", sparse_lib.sparse_knn_jit, args, kwargs)
             raw = ex(*args)     # async dispatch: returns un-blocked arrays
             n = len(ids)
 

@@ -133,8 +133,9 @@ def test_dense_tiled_partial_tile_ignores_padding_neighborhoods():
         np.asarray(ref.dists), np.asarray(til.dists), rtol=1e-4, atol=1e-4)
 
 
-def test_dense_backend_auto_resolves_off_tpu():
-    assert dense_lib.resolve_backend("auto") in ("ref", "pallas")
+def test_dense_backend_auto_resolves_off_tpu(monkeypatch):
+    monkeypatch.delenv("REPRO_BACKEND", raising=False)
+    assert dense_lib.resolve_backend("auto") in ("ref", "fused")
     if jax.default_backend() != "tpu":
         assert dense_lib.resolve_backend("auto") == "ref"
     with pytest.raises(ValueError, match="backend"):
