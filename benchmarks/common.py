@@ -81,14 +81,19 @@ def save(name: str, record: Dict, out_dir: str = RESULTS_DIR) -> str:
     return path
 
 
-def emit_bench_json(path: str, tag: str, backend: str, tables: Dict) -> str:
+def emit_bench_json(path: str, tag: str, backend: str, tables: Dict,
+                    config: Dict = None) -> str:
     """Write the machine-readable BENCH_<tag>.json perf-trajectory record.
 
     ``tables`` maps table name -> {variant: record}; every variant
     record that carries the standard fields (``wall_s`` /
     ``response_s`` / ``queries_per_s`` / ``n_engine_compiles`` /
-    ``memory``) is surfaced in a flat ``variants`` index so cross-PR
-    tooling never needs per-table knowledge."""
+    ``config`` / ``memory``) is surfaced in a flat ``variants`` index so
+    cross-PR tooling never needs per-table knowledge.  The per-variant
+    ``config`` embeds are what tie each number back to the exact knobs
+    that produced it; ``config`` optionally records a genuinely
+    run-wide ``HybridConfig`` dict when the caller has one (it is None
+    for multi-table runs, where every benchmark builds its own)."""
     import jax
 
     variants = {}
@@ -102,7 +107,7 @@ def emit_bench_json(path: str, tag: str, backend: str, tables: Dict) -> str:
                 key: r[key]
                 for key in ("wall_s", "response_s", "queries_per_s",
                             "n_engine_compiles", "n_points", "backend",
-                            "memory")
+                            "config", "memory")
                 if key in r
             }
     record = {
@@ -111,6 +116,7 @@ def emit_bench_json(path: str, tag: str, backend: str, tables: Dict) -> str:
         "jax_version": jax.__version__,
         "jax_platform": jax.default_backend(),
         "backend": backend,
+        "config": config,
         "variants": variants,
         "tables": tables,
     }

@@ -15,8 +15,9 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 from benchmarks import common  # noqa: E402
 from benchmarks import (  # noqa: E402
-    fig6_refimpl_scaling, fig7_brute, fig11_vs_k, table3_granularity,
-    table4_param_grid, table5_rho_model, table6_sampled_params)
+    fig6_refimpl_scaling, fig7_brute, fig11_vs_k, serving,
+    table3_granularity, table4_param_grid, table5_rho_model,
+    table6_sampled_params)
 
 
 def main():
@@ -27,6 +28,10 @@ def main():
                     help="kernel-path CI smoke: one tiny dataset, Table III "
                          "only — pair with --backend interpret|fused so the "
                          "Pallas kernel paths run end-to-end on CPU")
+    ap.add_argument("--serving", action="store_true",
+                    help="serving mode only: steady-state index.query "
+                         "batches against a built KNNIndex (R≠S path; "
+                         "asserts zero steady-state compiles)")
     ap.add_argument("--json", nargs="?", const="", default=None,
                     metavar="PATH",
                     help="emit the machine-readable BENCH_<tag>.json "
@@ -41,6 +46,24 @@ def main():
     if args.quick:
         args.scale = 0.08
     t0 = time.time()
+
+    if args.serving:
+        # Serving default is smaller than the table default (CI path);
+        # an explicit --scale always wins.
+        scale_explicit = any(
+            a == "--scale" or a.startswith("--scale=") for a in sys.argv
+        )
+        if not scale_explicit:
+            args.scale = 0.1
+        print(f"[bench] SERVING backend={args.backend} "
+              f"datasets={args.datasets} scale={args.scale}")
+        rec = serving.run(args)
+        assert rec, "serving mode produced no records"
+        _emit_json(args, {"serving": rec},
+                   tag_default=f"serving-{args.backend}")
+        print(f"[bench] serving ok ({time.time() - t0:.0f}s, "
+              f"{len(rec)} datasets)")
+        return
 
     if args.smoke:
         args.scale = 0.05
@@ -60,6 +83,7 @@ def main():
 
     print(f"[bench] datasets={args.datasets} scale={args.scale}")
     results = {}
+    results["serving"] = serving.run(args)
     results["table3"] = table3_granularity.run(args)
     results["table4"] = table4_param_grid.run(args)
     results["table5"] = table5_rho_model.run(args)
@@ -105,12 +129,16 @@ def main():
           f"results in {common.RESULTS_DIR}")
 
 
-def _emit_json(args, tables):
-    """--json: write the BENCH_<tag>.json trajectory record."""
+def _emit_json(args, tables, tag_default=None):
+    """--json: write the BENCH_<tag>.json trajectory record.  The knobs
+    that produced each number live in the per-variant ``config`` embeds
+    (every benchmark builds its own HybridConfig, so there is no honest
+    run-wide config beyond the resolved backend, which rides at the
+    record's top level)."""
     if args.json is None:
         return
-    tag = args.tag or (f"smoke-{args.backend}" if args.smoke
-                       else args.backend)
+    tag = args.tag or tag_default or (
+        f"smoke-{args.backend}" if args.smoke else args.backend)
     path = args.json or os.path.join(args.out, f"BENCH_{tag}.json")
     common.emit_bench_json(path, tag, args.backend, tables)
 

@@ -24,6 +24,8 @@ once per configuration, matching the paper's exclusion of one-time
 setup."""
 from __future__ import annotations
 
+import dataclasses
+
 from repro.core import HybridConfig
 from repro.runtime import JoinSession
 
@@ -89,6 +91,8 @@ def run(args):
             row.append(f"{resp:.3f}s")
             rec[f"{ds}/{name}"] = {
                 "response_s": resp, "wall_s": t, "backend": session.backend,
+                # full knob record: the JSON ties back to what produced it
+                "config": dataclasses.asdict(cfg),
                 "n_engine_compiles_steady": res.stats.n_engine_compiles,
                 "n_points": len(pts),
                 "queries_per_s": len(pts) / resp if resp > 0 else 0.0,

@@ -12,7 +12,11 @@ nearest within ε.  Faithful semantics:
     not fully examined ⇒ exactness cannot be certified), folding the
     paper's buffer-management concern into the same mechanism;
   * batching (§IV-B): queries stream through in fixed blocks, so peak
-    memory is block × budget regardless of |Q^dense|.
+    memory is block × budget regardless of |Q^dense|;
+  * foreign (R≠S) queries (DESIGN.md §3): ``queries_r`` decouples the
+    query cloud from the indexed one — ids then index query rows, home
+    cells are computed against the reference grid on the fly, and
+    ``exclude_self`` controls the positional-identity exclusion.
 
 Three execution backends share those semantics (DESIGN.md §2.5, §2.6):
 
@@ -101,25 +105,42 @@ class DenseJoinResult(NamedTuple):
     total_candidates: jnp.ndarray  # (Q,) i32 — filtering workload (T₂ proxy)
 
 
-def _block_fn(index: grid_lib.GridIndex, points_r, eps2, k, budget):
-    """Process one block of query ids (−1 = padding)."""
+def _exclusion_ids(qids, exclude_self: bool):
+    """Reference id each query must not match.  Self-join exclusion
+    compares against the query id itself (Q = R shares one id space);
+    with ``exclude_self=False`` the constant −2 never matches a real
+    candidate id (≥ 0) nor the −1 invalid marker, so nothing is
+    excluded and no kernel needs a flag."""
+    return qids if exclude_self else jnp.full_like(qids, -2)
+
+
+def _block_fn(index: grid_lib.GridIndex, points_r, eps2, k, budget,
+              queries_r=None, qcoords=None, exclude_self=True):
+    """Process one block of query ids (−1 = padding).
+
+    ``queries_r`` decouples the query cloud from the indexed one (R≠S):
+    ids then index ``queries_r`` rows and ``qcoords`` — the query
+    cloud's reference-grid cell coords — replaces the build-time
+    ``point_coords`` cache.  Defaults keep the self-join fast path."""
+    queries = points_r if queries_r is None else queries_r
+    coords_all = index.point_coords if qcoords is None else qcoords
 
     def fn(qids):
         nq = qids.shape[0]
-        safe = jnp.clip(qids, 0, index.n_points - 1)
-        coords = index.point_coords[safe]                         # (B, m)
+        safe = jnp.clip(qids, 0, queries.shape[0] - 1)
+        coords = coords_all[safe]                                 # (B, m)
         starts, counts = grid_lib.neighbor_ranges(index, coords)  # (B, R)
         pos, valid, total, overflow = grid_lib.gather_candidates(
             index, starts, counts, budget
         )                                                          # (B, budget)
         cand_ids = index.order[pos]                                # original ids
         cand_pts = index.points_sorted[pos]                        # (B, budget, n)
-        qpts = points_r[safe]                                      # (B, n)
+        qpts = queries[safe]                                       # (B, n)
 
         diff = qpts[:, None, :] - cand_pts
         d2 = jnp.sum(diff * diff, axis=-1)                         # (B, budget)
 
-        self_pair = cand_ids == qids[:, None]
+        self_pair = cand_ids == _exclusion_ids(qids, exclude_self)[:, None]
         keep = valid & ~self_pair & (d2 <= eps2)
         d2m = jnp.where(keep, d2, jnp.inf)
 
@@ -136,11 +157,16 @@ def _block_fn(index: grid_lib.GridIndex, points_r, eps2, k, budget):
 
 
 def _shared_tile_candidates(index: grid_lib.GridIndex, points_r, qids,
-                            cand_budget):
+                            cand_budget, queries_r=None, qcoords=None):
     """The cell-tiled backends' common gather: one deduplicated shared
-    candidate block per query tile (−1 = padding row)."""
-    safe = jnp.clip(qids, 0, index.n_points - 1)
-    coords = index.point_coords[safe]                         # (TQ, m)
+    candidate block per query tile (−1 = padding row).  ``queries_r`` /
+    ``qcoords`` carry the foreign query cloud and its reference-grid
+    cell coords (see ``_block_fn``); candidate ranges always come from
+    the reference index."""
+    queries = points_r if queries_r is None else queries_r
+    coords_all = index.point_coords if qcoords is None else qcoords
+    safe = jnp.clip(qids, 0, queries.shape[0] - 1)
+    coords = coords_all[safe]                                 # (TQ, m)
     starts, counts = grid_lib.neighbor_ranges(index, coords)  # (TQ, R)
     # Padding rows clip to point 0 — zero their ranges so a partial
     # tile's shared union holds only REAL queries' neighborhoods
@@ -152,7 +178,7 @@ def _shared_tile_candidates(index: grid_lib.GridIndex, points_r, qids,
     )                                                          # (TC,)
     cand_ids = jnp.where(valid, index.order[pos], -1)
     cand_pts = index.points_sorted[pos]                        # (TC, n)
-    qpts = points_r[safe]                                      # (TQ, n)
+    qpts = queries[safe]                                       # (TQ, n)
     # T₂ proxy stays per-query (own 3^m total), matching the ref
     # backend so the queue's Eq.-6 rebalance sees identical workloads.
     own_total = jnp.sum(counts, axis=1).astype(jnp.int32)
@@ -160,7 +186,7 @@ def _shared_tile_candidates(index: grid_lib.GridIndex, points_r, qids,
 
 
 def _tile_fn(index: grid_lib.GridIndex, points_r, eps2, k, budget, block_c,
-             kernel_mode):
+             kernel_mode, queries_r=None, qcoords=None, exclude_self=True):
     """Process one cell-sorted query tile against its shared candidate
     block (−1 = padding).  The distance tile is one MXU matmul."""
     cand_budget = round_up(budget, block_c)
@@ -168,7 +194,8 @@ def _tile_fn(index: grid_lib.GridIndex, points_r, eps2, k, budget, block_c,
     def fn(qids):
         nq = qids.shape[0]
         qpts, cand_ids, cand_pts, own_total, tile_overflow = (
-            _shared_tile_candidates(index, points_r, qids, cand_budget)
+            _shared_tile_candidates(index, points_r, qids, cand_budget,
+                                    queries_r, qcoords)
         )
 
         d2 = pairwise_ops.pairwise_sq_l2(
@@ -177,9 +204,10 @@ def _tile_fn(index: grid_lib.GridIndex, points_r, eps2, k, budget, block_c,
             shortc_eps2=eps2, mode=kernel_mode,
         )                                                          # (TQ, TC)
 
+        excl = _exclusion_ids(qids, exclude_self)
         keep = (
             (cand_ids[None, :] >= 0)
-            & (cand_ids[None, :] != qids[:, None])
+            & (cand_ids[None, :] != excl[:, None])
             & (d2 <= eps2)
         )
         d2m = jnp.where(keep, d2, jnp.inf)
@@ -202,7 +230,8 @@ def _tile_fn(index: grid_lib.GridIndex, points_r, eps2, k, budget, block_c,
 
 
 def _fused_tile_fn(index: grid_lib.GridIndex, points_r, eps2, k, budget,
-                   block_c, kernel_mode):
+                   block_c, kernel_mode, queries_r=None, qcoords=None,
+                   exclude_self=True):
     """Streaming one-pass tile processor (DESIGN.md §2.6): the shared
     candidate block streams through the fused kernel in ``block_c``
     sub-blocks; distance, ε filter, top-K, and ``found`` all happen in
@@ -212,11 +241,15 @@ def _fused_tile_fn(index: grid_lib.GridIndex, points_r, eps2, k, budget,
     def fn(qids):
         nq = qids.shape[0]
         qpts, cand_ids, cand_pts, own_total, tile_overflow = (
-            _shared_tile_candidates(index, points_r, qids, cand_budget)
+            _shared_tile_candidates(index, points_r, qids, cand_budget,
+                                    queries_r, qcoords)
         )
+        # The kernel's "query id" operand exists solely for the id
+        # inequality test, so the exclusion ids ride in its place —
+        # R≠S needs no kernel change.
         kdists, kids, found = stream_ops.knn_stream_topk(
-            qpts, cand_pts, qids, cand_ids, eps2,
-            k=k, block_q=nq, block_c=block_c, mode=kernel_mode,
+            qpts, cand_pts, _exclusion_ids(qids, exclude_self), cand_ids,
+            eps2, k=k, block_q=nq, block_c=block_c, mode=kernel_mode,
         )
         # Same per-tile §V-E overflow semantics as the two-pass tiled path.
         failed = (found < k) | tile_overflow
@@ -230,12 +263,14 @@ def dense_join(
     points_r: jnp.ndarray,
     query_ids: jnp.ndarray,
     epsilon: jnp.ndarray,
+    queries_r: jnp.ndarray = None,
     *,
     k: int,
     budget: int = 1024,
     query_block: int = 128,
     block_c: int = 128,
     backend: str = "ref",
+    exclude_self: bool = True,
 ) -> DenseJoinResult:
     """Run GPU-JOIN over the given query ids (see ``dense_join_jit``).
 
@@ -244,36 +279,50 @@ def dense_join(
     ``REPRO_BACKEND``) can never silently hit a stale entry traced
     under a different resolution."""
     return dense_join_jit(
-        index, points_r, query_ids, epsilon,
+        index, points_r, query_ids, epsilon, queries_r,
         k=k, budget=budget, query_block=query_block, block_c=block_c,
-        backend=resolve_backend(backend),
+        backend=resolve_backend(backend), exclude_self=exclude_self,
     )
 
 
 @functools.partial(
-    jax.jit, static_argnames=("k", "budget", "query_block", "block_c", "backend")
+    jax.jit,
+    static_argnames=(
+        "k", "budget", "query_block", "block_c", "backend", "exclude_self"
+    ),
 )
 def dense_join_jit(
     index: grid_lib.GridIndex,
     points_r: jnp.ndarray,     # (|D|, n) variance-reordered database
     query_ids: jnp.ndarray,    # (Qpad,) i32, −1 padding — Q^dense, compacted
     epsilon: jnp.ndarray,      # () f32 — range-query radius (= grid target edge)
+    queries_r: jnp.ndarray = None,  # (|Q|, n) foreign query cloud (R≠S), in
+                                    # the reference's reordered space; None ⇒
+                                    # queries ARE the indexed points
     *,
     k: int,
     budget: int = 1024,
     query_block: int = 128,
     block_c: int = 128,
     backend: str = "ref",
+    exclude_self: bool = True,
 ) -> DenseJoinResult:
     """Run GPU-JOIN over the given query ids.  Results are aligned with
     ``query_ids`` (row i ↔ query_ids[i]); padding rows are failed.
 
     ``backend`` must be a concrete (already-resolved) execution path
-    (module docstring) — AOT callers (``JoinSession``) lower this
-    directly with their session-resolved backend; everyone else goes
-    through the resolving ``dense_join`` wrapper.  ``block_c`` is the
-    candidate-tile width in the fused kernels — the paper's TDYNAMIC
-    "threads per query point" knob — and is ignored by ``"ref"``.
+    (module docstring) — AOT callers (``KNNIndex``/``JoinSession``)
+    lower this directly with their session-resolved backend; everyone
+    else goes through the resolving ``dense_join`` wrapper.  ``block_c``
+    is the candidate-tile width in the fused kernels — the paper's
+    TDYNAMIC "threads per query point" knob — and is ignored by
+    ``"ref"``.
+
+    With ``queries_r`` the join is a foreign (R≠S) join: ids index
+    ``queries_r`` rows, home cells are computed on the fly against the
+    reference grid, and ``exclude_self`` decides whether query i may
+    report reference point i (positional identity — only meaningful
+    when the query cloud aliases the indexed one).
     """
     if backend == "auto":
         # Re-resolving here would key the executable cache on the
@@ -287,10 +336,20 @@ def dense_join_jit(
     qpad = round_up(query_ids.shape[0], query_block)
     qids = jnp.full((qpad,), -1, jnp.int32).at[: query_ids.shape[0]].set(query_ids)
     eps2 = jnp.asarray(epsilon, jnp.float32) ** 2
+    # Foreign queries carry no build-time coords cache — compute the
+    # whole cloud's reference-grid cell coords once (a floor + clip).
+    qcoords = (
+        None if queries_r is None
+        else grid_lib.compute_cell_coords(index, queries_r[:, : index.m])
+    )
 
     if backend == "ref":
         blocks = qids.reshape(-1, query_block)
-        out = jax.lax.map(_block_fn(index, points_r, eps2, k, budget), blocks)
+        out = jax.lax.map(
+            _block_fn(index, points_r, eps2, k, budget,
+                      queries_r, qcoords, exclude_self),
+            blocks,
+        )
         kd, ki, found, failed, total = jax.tree_util.tree_map(
             lambda x: x.reshape((qpad,) + x.shape[2:]), out
         )
@@ -298,13 +357,16 @@ def dense_join_jit(
         if backend == "fused":
             tile_fn = _fused_tile_fn(
                 index, points_r, eps2, k, budget, block_c,
-                _stream_kernel_mode(),
+                _stream_kernel_mode(), queries_r, qcoords, exclude_self,
             )
         else:
             tile_fn = _tile_fn(
-                index, points_r, eps2, k, budget, block_c, backend
+                index, points_r, eps2, k, budget, block_c, backend,
+                queries_r, qcoords, exclude_self,
             )
-        tiles, perm = grid_lib.group_queries_by_cell(index, qids, query_block)
+        tiles, perm = grid_lib.group_queries_by_cell(
+            index, qids, query_block, qcoords
+        )
         out = jax.lax.map(tile_fn, tiles)
         kd, ki, found, failed, total = jax.tree_util.tree_map(
             lambda x: jnp.zeros_like(x.reshape((qpad,) + x.shape[2:]))

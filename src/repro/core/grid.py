@@ -225,15 +225,24 @@ def gather_candidates(
     return pos.astype(jnp.int32), valid, total, total > budget
 
 
-def home_cell_ids(index: GridIndex, qids: jnp.ndarray) -> jnp.ndarray:
+def home_cell_ids(index: GridIndex, qids: jnp.ndarray,
+                  coords: jnp.ndarray | None = None) -> jnp.ndarray:
     """Linear home-cell id per query id; padding rows (qids < 0) get the
-    int32 sentinel so a stable sort clusters them after all real work."""
-    safe = jnp.clip(qids, 0, index.n_points - 1)
-    cid = linearize(index.point_coords[safe], index.radices)
+    int32 sentinel so a stable sort clusters them after all real work.
+
+    ``coords`` supplies the query cloud's cell coords for foreign (R≠S)
+    queries — (|Q|, m) int32 from ``compute_cell_coords`` — indexed by
+    ``qids``.  Without it the queries ARE the indexed points and the
+    build-time ``point_coords`` cache is used."""
+    if coords is None:
+        coords = index.point_coords
+    safe = jnp.clip(qids, 0, coords.shape[0] - 1)
+    cid = linearize(coords[safe], index.radices)
     return jnp.where(qids >= 0, cid, INT32_SENTINEL)
 
 
-def group_queries_by_cell(index: GridIndex, qids: jnp.ndarray, query_block: int):
+def group_queries_by_cell(index: GridIndex, qids: jnp.ndarray, query_block: int,
+                          coords: jnp.ndarray | None = None):
     """Cell-grouping pass for the tiled engine backend (paper §V-B/§V-D).
 
     Sorts the padded query-id vector by home cell id and cuts it into
@@ -245,9 +254,13 @@ def group_queries_by_cell(index: GridIndex, qids: jnp.ndarray, query_block: int)
     Returns ``(tiles, perm)``: ``tiles`` is (n_tiles, query_block) int32
     (−1 padding), ``perm`` (Qpad,) int32 maps sorted position → original
     position, so per-tile results flatten back via ``out.at[perm].set(r)``.
+
+    ``coords`` carries foreign-query cell coords (see ``home_cell_ids``);
+    home cells are then looked up in THIS index's geometry, so an R≠S
+    query tile still clusters around one reference-grid cell.
     """
     assert qids.shape[0] % query_block == 0, (qids.shape, query_block)
-    cid = home_cell_ids(index, qids)
+    cid = home_cell_ids(index, qids, coords)
     perm = jnp.argsort(cid, stable=True).astype(jnp.int32)
     tiles = qids[perm].reshape(-1, query_block)
     return tiles, perm

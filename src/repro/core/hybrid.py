@@ -17,10 +17,12 @@ fallback lane:
   8.  brute-certify the residue                (exactness backstop)
   9.  merge + report T₁/T₂ and ρ^Model         (§VI-E2, Eq. 6)
 
-Execution lives in ``repro.runtime.session.JoinSession`` (index ownership
-+ compiled-engine caching) driving ``repro.core.queue`` (the multi-round
-work-queue scheduler); ``HybridKNNJoin`` is kept as the thin, stable
-entry point.  The per-engine wall times recorded here are what the paper
+Execution lives in ``repro.runtime.knn_index.KNNIndex`` (build-once
+index + compiled-engine caching; ``query()`` serves arbitrary R≠S query
+sets) driving ``repro.core.queue`` (the multi-round work-queue
+scheduler); ``repro.runtime.session.JoinSession`` owns index reuse
+across joins and ``HybridKNNJoin`` is kept as the thin, stable
+self-join entry point.  The per-engine wall times recorded here are what the paper
 calls T₁ and T₂; ``stats.rho_model`` reproduces Table V's analytic
 load-balance point.
 """
@@ -32,7 +34,7 @@ from typing import List, Optional
 import jax.numpy as jnp
 import numpy as np
 
-from repro.utils import round_up
+from repro.utils import pow2_bucket
 
 
 @dataclasses.dataclass(frozen=True)
@@ -142,11 +144,7 @@ class KNNResult:
 def _pad_ids(ids: np.ndarray, block: int) -> jnp.ndarray:
     """Pad a query-id list to a pow2 multiple of ``block`` (bounds the
     number of distinct compiled shapes across parameter sweeps)."""
-    n = max(len(ids), 1)
-    target = block
-    while target < n:
-        target *= 2
-    out = np.full((round_up(target, block),), -1, np.int32)
+    out = np.full((pow2_bucket(len(ids), block),), -1, np.int32)
     out[: len(ids)] = ids
     return jnp.asarray(out)
 
@@ -154,9 +152,13 @@ def _pad_ids(ids: np.ndarray, block: int) -> jnp.ndarray:
 class HybridKNNJoin:
     """Reusable joiner: ``HybridKNNJoin(cfg).join(points)``.
 
-    Thin compatibility wrapper over ``repro.runtime.session.JoinSession``
-    — the session API exposes the same joins plus the compile-count
-    probe and engine cache introspection."""
+    Thin self-join compatibility wrapper over the index/query API
+    (DESIGN.md §3): ``join(points)`` is exactly
+    ``KNNIndex.build(points, cfg).query(exclude_self=True)``, routed
+    through ``repro.runtime.session.JoinSession`` so repeated joins
+    reuse the built index and compiled engines.  Serving workloads
+    (foreign R≠S query batches against a static database) should hold
+    the ``KNNIndex`` directly."""
 
     def __init__(self, config: HybridConfig):
         self.config = config

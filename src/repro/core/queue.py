@@ -183,7 +183,13 @@ def run_work_queue(
 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, QueueReport]:
     """Drive one join through the multi-round queue.
 
-    Engine contract (all ids are original point ids, no padding):
+    The scheduler is id-space agnostic: ids are *query* ids — indices
+    into whatever query set the engines were closed over (the indexed
+    cloud itself for a self-join, an arbitrary R≠S query batch for
+    ``KNNIndex.query``) — and ``npts`` is |Q|, the size of that query
+    set (the result arrays' first axis).
+
+    Engine contract (all ids are query ids, no padding):
       ``dense_fn(ids) -> (dists (n,K), nids (n,K), failed (n,) bool,
           elapsed_s)`` — blocking; ``elapsed_s`` is the engine-measured
           execution time excluding one-time compilation, so T₂ isn't

@@ -16,6 +16,11 @@ point within cert_r(ℓ) = min_j cell_edge_ℓ_j of the query, so
 Queries missing the certificate fall back to the streamed brute scan
 (core/brute.py) — the result is always exact, like EXACT-ANN in exact mode.
 
+The engine serves self-joins and foreign (R≠S) queries alike: with
+``queries_r`` the ids index an arbitrary query cloud (reference-
+reordered), per-level cell coords are computed on the fly, and
+candidates always gather from the indexed reference (DESIGN.md §3).
+
 ``backend=`` selects the distance formulation (DESIGN.md §2.5, §2.6):
 ``"ref"`` keeps the broadcast-subtract oracle; the ``"pallas"`` /
 ``"interpret"`` backends compute the same d² as a batched MXU
@@ -128,13 +133,17 @@ def _streamed_topk(points_r, qpts, cand_ids, keep, k):
     return kd, jnp.where(jnp.isinf(kd), -1, ki)
 
 
-def _query_level(pyr: Pyramid, points_r, orders, starts, counts, qids, safe,
-                 sel, k, budget, backend):
+def _query_level(pyr: Pyramid, points_r, queries, orders, starts, counts,
+                 qids, excl, safe, sel, k, budget, backend):
     """Gather + distance + top-K at per-query pyramid level ``sel`` (B,).
 
     ``orders`` (L, |D|) and ``starts``/``counts`` (L, B, R) are hoisted by
     the caller — both passes (and the level selection) reuse one sweep of
     binary searches instead of recomputing the stacks three times.
+    ``queries`` is the cloud the ids index (the indexed points for a
+    self-join, the foreign R cloud otherwise); candidates always gather
+    from ``points_r``.  ``excl`` is the per-query excluded reference id
+    (−2 ⇒ none — see ``dense_join._exclusion_ids``).
 
     Returns (kd, ki, certified, overflow, total) — the certificate is
     kth ≤ cert_r(sel)² with ≥ K found and no budget truncation."""
@@ -146,8 +155,8 @@ def _query_level(pyr: Pyramid, points_r, orders, starts, counts, qids, safe,
     )                                            # positions in SELECTED level's order
 
     cand_ids = orders[sel[:, None], pos]                      # (B, budget)
-    qpts = points_r[safe]
-    keep = valid & (cand_ids != qids[:, None])
+    qpts = queries[safe]
+    keep = valid & (cand_ids != excl[:, None])
 
     if backend == "fused":
         kd, ki = _streamed_topk(points_r, qpts, cand_ids, keep, k)
@@ -169,7 +178,8 @@ def _query_level(pyr: Pyramid, points_r, orders, starts, counts, qids, safe,
     return kd, ki, certified, overflow, total.astype(jnp.int32)
 
 
-def _block_fn(pyr: Pyramid, points_r, k, budget, sel_factor, backend):
+def _block_fn(pyr: Pyramid, points_r, k, budget, sel_factor, backend,
+              queries_r=None, exclude_self=True):
     """Two-pass adaptive level search (the TPU kd-tree descent analogue).
 
     Pass 1 picks the finest level whose *projected* 3^m-neighborhood holds
@@ -178,9 +188,15 @@ def _block_fn(pyr: Pyramid, points_r, k, budget, sel_factor, backend):
     pass-1 kth distance upper-bounds the true kth, and the first level
     whose certified radius exceeds it provably contains the exact KNN —
     one extra gather certifies it (absent budget overflow).
+
+    ``queries_r`` decouples the query cloud from the indexed one (R≠S):
+    per-level cell coords are then computed on the fly against each
+    pyramid level's geometry instead of read from the build-time
+    ``point_coords`` caches.
     """
     n_levels = len(pyr.levels)
     npts = pyr.levels[0].n_points
+    queries = points_r if queries_r is None else queries_r
     # Hoisted per-level constants: everything below is loop-invariant
     # across the lax.map over query blocks, so computing it inside
     # ``fn`` would re-broadcast it every block (and, for the 3^m offset
@@ -192,14 +208,20 @@ def _block_fn(pyr: Pyramid, points_r, k, budget, sel_factor, backend):
     target = sel_factor * (k + 1)                   # selectivity constant
 
     def fn(qids):
-        safe = jnp.clip(qids, 0, npts - 1)
+        safe = jnp.clip(qids, 0, queries.shape[0] - 1)
+        excl = dense_lib._exclusion_ids(qids, exclude_self)
+        qproj = None if queries_r is None else queries[safe][:, : pyr.levels[0].m]
 
         # All-level candidate ranges, computed ONCE per block: the level
         # selection and both _query_level passes read these same stacks
         # (3× fewer binary-search sweeps than per-pass recomputation).
         starts_l, counts_l = [], []
         for g in pyr.levels:
-            s, c = grid_lib.neighbor_ranges(g, g.point_coords[safe], offs)
+            coords = (
+                g.point_coords[safe] if qproj is None
+                else grid_lib.compute_cell_coords(g, qproj)
+            )
+            s, c = grid_lib.neighbor_ranges(g, coords, offs)
             starts_l.append(s)
             counts_l.append(c)
         starts = jnp.stack(starts_l)                 # (L, B, R)
@@ -212,8 +234,8 @@ def _block_fn(pyr: Pyramid, points_r, k, budget, sel_factor, backend):
         sel1 = jnp.where(jnp.any(enough, axis=0), first, n_levels - 1)
 
         kd1, ki1, cert1, _, tot1 = _query_level(
-            pyr, points_r, orders, starts, counts, qids, safe, sel1, k,
-            budget, backend
+            pyr, points_r, queries, orders, starts, counts, qids, excl,
+            safe, sel1, k, budget, backend
         )
 
         # Escalation level: first ℓ with cert_r(ℓ)² ≥ pass-1 kth (∞ → coarsest).
@@ -222,8 +244,8 @@ def _block_fn(pyr: Pyramid, points_r, k, budget, sel_factor, backend):
         sel2 = jnp.clip(jnp.maximum(sel2, sel1), 0, n_levels - 1)
 
         kd2, ki2, cert2, _, tot2 = _query_level(
-            pyr, points_r, orders, starts, counts, qids, safe, sel2, k,
-            budget, backend
+            pyr, points_r, queries, orders, starts, counts, qids, excl,
+            safe, sel2, k, budget, backend
         )
 
         use1 = cert1[:, None]
@@ -240,37 +262,44 @@ def sparse_knn(
     pyr: Pyramid,
     points_r: jnp.ndarray,
     query_ids: jnp.ndarray,
+    queries_r: jnp.ndarray = None,
     *,
     k: int,
     budget: int = 512,
     query_block: int = 128,
     sel_factor: int = 4,
     backend: str = "ref",
+    exclude_self: bool = True,
 ) -> SparseKNNResult:
     """Resolving wrapper (see ``dense_join.dense_join``): collapses
     ``backend`` outside the jit boundary so the executable cache is
     keyed on the concrete path."""
     return sparse_knn_jit(
-        pyr, points_r, query_ids,
+        pyr, points_r, query_ids, queries_r,
         k=k, budget=budget, query_block=query_block, sel_factor=sel_factor,
-        backend=dense_lib.resolve_backend(backend),
+        backend=dense_lib.resolve_backend(backend), exclude_self=exclude_self,
     )
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("k", "budget", "query_block", "sel_factor", "backend"),
+    static_argnames=(
+        "k", "budget", "query_block", "sel_factor", "backend", "exclude_self"
+    ),
 )
 def sparse_knn_jit(
     pyr: Pyramid,
     points_r: jnp.ndarray,
     query_ids: jnp.ndarray,   # (Qpad,) i32, −1 padding
+    queries_r: jnp.ndarray = None,  # foreign (R≠S) query cloud, reference-
+                                    # reordered; None ⇒ self-join
     *,
     k: int,
     budget: int = 512,
     query_block: int = 128,
     sel_factor: int = 4,
     backend: str = "ref",
+    exclude_self: bool = True,
 ) -> SparseKNNResult:
     if backend == "auto":
         # Same staleness guard as dense_join_jit: "auto" in the jit
@@ -284,7 +313,9 @@ def sparse_knn_jit(
     qids = jnp.full((qpad,), -1, jnp.int32).at[: query_ids.shape[0]].set(query_ids)
     blocks = qids.reshape(-1, query_block)
     out = jax.lax.map(
-        _block_fn(pyr, points_r, k, budget, sel_factor, backend), blocks
+        _block_fn(pyr, points_r, k, budget, sel_factor, backend,
+                  queries_r, exclude_self),
+        blocks,
     )
     kd, ki, cert, lvl, total = jax.tree_util.tree_map(
         lambda x: x.reshape((qpad,) + x.shape[2:]), out

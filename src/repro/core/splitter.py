@@ -46,35 +46,37 @@ def rho_model(t_sparse: float, t_dense: float) -> float:
 
 
 class WorkSplit(NamedTuple):
-    to_dense: jnp.ndarray      # (|D|,) bool — query goes to the dense engine
-    home_counts: jnp.ndarray   # (|D|,) i32 — population of each query's home cell
+    to_dense: jnp.ndarray      # (|Q|,) bool — query goes to the dense engine
+    home_counts: jnp.ndarray   # (|Q|,) i32 — population of each query's home cell
     n_dense: jnp.ndarray       # () i32
     n_sparse: jnp.ndarray      # () i32
     threshold: jnp.ndarray     # () f32 — n_thresh actually applied
 
 
-def split_work(
-    index: grid_lib.GridIndex,
+def split_from_counts(
+    home_counts: jnp.ndarray,
     k: int,
+    m: int,
     gamma: float,
     rho: float,
 ) -> WorkSplit:
-    """Assign every query point to the dense or sparse engine.
+    """Engine assignment from per-query home-cell populations.
 
     1. density rule: dense iff |home cell| ≥ n_thresh(K, m, γ);
-    2. ρ floor (paper §V-F): if |Q^sparse| < ρ|D|, demote dense queries
-       from the least-populated cells until |Q^sparse| ≥ ρ|D| — exactly
+    2. ρ floor (paper §V-F): if |Q^sparse| < ρ|Q|, demote dense queries
+       from the least-populated cells until |Q^sparse| ≥ ρ|Q| — exactly
        the paper's "cells with the least number of points" rule.
 
     Fully jittable: the demotion is a rank-threshold on home-cell counts
-    rather than a data-dependent loop.
+    rather than a data-dependent loop.  ``home_counts`` may describe the
+    indexed cloud itself (self-join, ``split_work``) or an arbitrary
+    query set scored against the reference grid (``split_queries``).
     """
-    npts = index.n_points
-    home_counts = index.cell_counts[index.point_cell_pos]       # (|D|,)
-    thresh = jnp.asarray(n_thresh(k, index.m, gamma), jnp.float32)
+    nq = home_counts.shape[0]
+    thresh = jnp.asarray(n_thresh(k, m, gamma), jnp.float32)
     dense0 = home_counts.astype(jnp.float32) >= thresh
 
-    min_sparse = jnp.asarray(int(math.ceil(rho * npts)), jnp.int32)
+    min_sparse = jnp.asarray(int(math.ceil(rho * nq)), jnp.int32)
     n_sparse0 = jnp.sum(~dense0).astype(jnp.int32)
     deficit = jnp.maximum(min_sparse - n_sparse0, 0)            # how many to demote
 
@@ -83,8 +85,8 @@ def split_work(
     # sort-position threshold so shapes stay static.
     sort_key = jnp.where(dense0, home_counts, jnp.iinfo(jnp.int32).max)
     order = jnp.argsort(sort_key, stable=True)
-    rank = jnp.zeros((npts,), jnp.int32).at[order].set(
-        jnp.arange(npts, dtype=jnp.int32)
+    rank = jnp.zeros((nq,), jnp.int32).at[order].set(
+        jnp.arange(nq, dtype=jnp.int32)
     )
     demote = dense0 & (rank < deficit)
     to_dense = dense0 & ~demote
@@ -93,6 +95,38 @@ def split_work(
         to_dense=to_dense,
         home_counts=home_counts,
         n_dense=jnp.sum(to_dense).astype(jnp.int32),
-        n_sparse=(npts - jnp.sum(to_dense)).astype(jnp.int32),
+        n_sparse=(nq - jnp.sum(to_dense)).astype(jnp.int32),
         threshold=thresh,
     )
+
+
+def split_work(
+    index: grid_lib.GridIndex,
+    k: int,
+    gamma: float,
+    rho: float,
+) -> WorkSplit:
+    """Self-join split: every indexed point is a query, and its home-cell
+    population is already cached on the index (``point_cell_pos``)."""
+    home_counts = index.cell_counts[index.point_cell_pos]       # (|D|,)
+    return split_from_counts(home_counts, k, index.m, gamma, rho)
+
+
+def split_queries(
+    index: grid_lib.GridIndex,
+    q_coords: jnp.ndarray,
+    k: int,
+    gamma: float,
+    rho: float,
+) -> WorkSplit:
+    """Foreign-query (R≠S) split: classify an arbitrary query set by the
+    *reference-grid* density around each query.
+
+    ``q_coords`` is (|Q|, m) int32 from ``grid.compute_cell_coords`` on
+    the reference grid.  A query's "home cell" is the reference cell it
+    lands in; queries landing in empty (unindexed) reference cells count
+    0 and therefore always route to the sparse engine — exactly the
+    low-density work the pyramid exists for."""
+    ids = grid_lib.linearize(q_coords, index.radices)
+    _, home_counts = grid_lib.lookup_cells(index, ids)
+    return split_from_counts(home_counts, k, index.m, gamma, rho)

@@ -1,10 +1,12 @@
-"""Runtime substrate: sessions, fault tolerance, straggler mitigation."""
-from repro.runtime.session import JoinSession, clear_engine_cache
+"""Runtime substrate: index/query serving, sessions, fault tolerance,
+straggler mitigation."""
+from repro.runtime.knn_index import KNNIndex, clear_engine_cache
+from repro.runtime.session import JoinSession
 from repro.runtime.stragglers import StragglerConfig, StragglerDetector, suggest_rho
 from repro.runtime.supervisor import RunReport, Supervisor, SupervisorConfig
 
 __all__ = [
-    "JoinSession", "clear_engine_cache",
+    "KNNIndex", "JoinSession", "clear_engine_cache",
     "StragglerConfig", "StragglerDetector", "suggest_rho",
     "RunReport", "Supervisor", "SupervisorConfig",
 ]

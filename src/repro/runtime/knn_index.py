@@ -1,0 +1,503 @@
+"""Index/query serving API (DESIGN.md §3): build once, query many.
+
+``HybridKNNJoin.join`` fuses index construction and query execution
+into one monolithic self-join — the right shape for the paper's batch
+experiments, the wrong one for the serving workloads the ROADMAP
+targets (many query batches against a static database, foreign R≠S
+query sets).  ``KNNIndex`` splits Algorithm 1 at its natural seam:
+
+  * ``KNNIndex.build(points, config)`` runs the *per-database* steps
+    once — REORDER by variance (§IV-D), ε selection (§V-C), ε-grid +
+    pyramid construction (§IV-A, DESIGN.md §2.2) — and owns the AOT
+    engine-executable cache;
+  * ``index.query(queries, k=None, exclude_self=False)`` runs the
+    hybrid dense/sparse/brute pipeline (§V-D split by *reference-grid*
+    density, §V-A work queue, §V-E failure reassignment, brute
+    certification) for an arbitrary query set against the indexed
+    reference cloud.  The classic self-join is the special case
+    ``index.query(exclude_self=True)`` (or passing the indexed array
+    itself), which is exactly what ``JoinSession.join`` now does.
+
+Buffer k-d trees (Gieseke et al.) and Garcia et al.'s GPU brute force
+expose the same build-once/query-many shape; here both engines serve
+it from one index.
+
+Engine-cache keys and the query-shape bucket: executables are lowered
+per (pytree structure, leaf avals, static params).  Query-id vectors
+are pow2-padded (``hybrid._pad_ids``) and foreign query *arrays* are
+row-padded to pow2 multiples of ``query_block`` (``pad_rows_pow2``),
+so a stream of variable-sized query batches collapses onto a handful
+of cache keys — steady-state ``index.query`` calls in one bucket
+compile **zero** new engines (the probe tests assert this).
+
+The executable cache is process-global (indexes with identical configs
+and shapes share compilations, like jit's internal cache); each index
+counts only the misses it caused, into a counter dict a ``JoinSession``
+may share across the indexes it builds.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+import time
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.core.hybrid as hybrid_lib
+from repro.core import brute as brute_lib
+from repro.core import dense_join as dense_lib
+from repro.core import epsilon as eps_lib
+from repro.core import grid as grid_lib
+from repro.core import queue as queue_lib
+from repro.core import sparse_knn as sparse_lib
+from repro.core import splitter as split_lib
+from repro.utils import pad_to, pow2_bucket
+
+# Process-global AOT executable cache: key -> jax.stages.Compiled.
+_ENGINE_CACHE: Dict[tuple, object] = {}
+
+
+def clear_engine_cache() -> None:
+    """Drop all cached executables (tests / memory pressure)."""
+    _ENGINE_CACHE.clear()
+
+
+def _engine_key(kind: str, args: tuple, kwargs: dict) -> tuple:
+    """Cache key: pytree structure (static fields ride in the treedef),
+    leaf avals (shape, dtype), and the static kwargs."""
+    leaves, treedef = jax.tree_util.tree_flatten(args)
+    avals = tuple(
+        (tuple(np.shape(leaf)), str(jnp.result_type(leaf))) for leaf in leaves
+    )
+    return (kind, treedef, avals, tuple(sorted(kwargs.items())))
+
+
+def pad_rows_pow2(arr: jnp.ndarray, block: int) -> jnp.ndarray:
+    """Pad an array's leading axis to a pow2 multiple of ``block`` (zero
+    fill) — the query-shape bucket: engine-cache keys see the padded
+    aval, so variable-sized query batches share compiled executables.
+    Uses the same ``utils.pow2_bucket`` rounding as ``hybrid._pad_ids``."""
+    return pad_to(arr, pow2_bucket(arr.shape[0], block))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "corpus_chunk", "kernel_mode", "exclude_self"),
+)
+def _brute_engine(points_r, query_ids, queries_r=None, *, k, corpus_chunk,
+                  kernel_mode, exclude_self=True):
+    """Brute lane with the query gather fused in, so the AOT signature is
+    (corpus, padded ids[, padded foreign queries]) only."""
+    queries = points_r if queries_r is None else queries_r
+    safe = jnp.clip(query_ids, 0, queries.shape[0] - 1)
+    return brute_lib.brute_knn(
+        points_r, queries[safe],
+        dense_lib._exclusion_ids(query_ids, exclude_self),
+        k=k, corpus_chunk=corpus_chunk, kernel_mode=kernel_mode,
+    )
+
+
+class KNNIndex:
+    """A built reference cloud plus everything needed to serve queries.
+
+    >>> index = KNNIndex.build(db_points, HybridConfig(k=10))
+    >>> r = index.query(batch)                     # R≠S join, k=10
+    >>> r = index.query(batch, k=3)                # per-call k override
+    >>> r = index.query(exclude_self=True)         # the classic self-join
+    >>> index.compile_counts                       # AOT cache misses so far
+
+    ``exclude_self`` masks, for query row i, the reference point at the
+    same position i — meaningful when the query set aliases (a prefix
+    of) the indexed cloud.  Without it, a point queried against its own
+    index reports itself at distance 0 as its first neighbor.
+    """
+
+    def __init__(
+        self,
+        config: "hybrid_lib.HybridConfig",
+        *,
+        backend: str,
+        points_ref: object,
+        points_r: jnp.ndarray,
+        dim_perm: Optional[jnp.ndarray],
+        eps: float,
+        eps_beta: float,
+        grid: grid_lib.GridIndex,
+        pyramid: sparse_lib.Pyramid,
+        home_counts: np.ndarray,
+        t_select_eps: float = 0.0,
+        t_build: float = 0.0,
+        compile_counts: Optional[Dict[str, int]] = None,
+        executables: Optional[Dict[str, object]] = None,
+    ):
+        self.config = config
+        self.backend = backend
+        self.points_ref = points_ref
+        self.points_r = points_r
+        self.dim_perm = dim_perm
+        self.eps = eps
+        self.eps_beta = eps_beta
+        self.grid = grid
+        self.pyramid = pyramid
+        self.home_counts = home_counts          # (|D|,) self-cloud densities
+        self.t_select_eps = t_select_eps
+        self.t_build = t_build
+        # Shared with the owning session when one exists, so serving
+        # dashboards see one counter across index rebuilds.
+        self.compile_counts = (
+            compile_counts if compile_counts is not None
+            else {"dense": 0, "sparse": 0, "brute": 0}
+        )
+        self.executables = executables if executables is not None else {}
+        # Self-split cache per k: (dense_ids, sparse_ids, threshold).
+        self._self_splits: Dict[int, Tuple[np.ndarray, np.ndarray, float]] = {}
+
+    # -- construction ------------------------------------------------------
+
+    @classmethod
+    def build(
+        cls,
+        points,
+        config: "hybrid_lib.HybridConfig",
+        epsilon: Optional[float] = None,
+        *,
+        backend: Optional[str] = None,
+        compile_counts: Optional[Dict[str, int]] = None,
+        executables: Optional[Dict[str, object]] = None,
+    ) -> "KNNIndex":
+        """Steps 1–3 of Algorithm 1, once per database: REORDER,
+        ε selection (skipped when the caller pins ``epsilon``), grid +
+        pyramid construction.  ``backend``/counter kwargs let a
+        ``JoinSession`` share its resolved backend and compile
+        accounting; standalone callers omit them."""
+        cfg = config
+        pts = jnp.asarray(points, jnp.float32)
+        npts, ndim = pts.shape
+        assert cfg.k < npts, "K must be smaller than |D|"
+        m = min(cfg.m, ndim)
+        key = jax.random.PRNGKey(cfg.seed)
+
+        # (1) REORDER — distances are dim-permutation invariant (§IV-D).
+        if cfg.reorder:
+            points_r, dim_perm = grid_lib.reorder_by_variance(pts)
+        else:
+            points_r, dim_perm = pts, None
+
+        # (2) ε selection (§V-C2) — skipped when the caller pins ε.
+        t0 = time.perf_counter()
+        if epsilon is None:
+            sel = eps_lib.select_epsilon(
+                points_r, key, cfg.k, cfg.beta,
+                n_query_sample=min(cfg.n_query_sample, npts),
+                n_bins=cfg.n_bins,
+                n_pair_sample=cfg.n_pair_sample,
+            )
+            eps = float(jax.block_until_ready(sel.epsilon))
+            eps_beta = float(sel.epsilon_beta)
+        else:
+            eps, eps_beta = float(epsilon), float(epsilon) / 2.0
+        t_select = time.perf_counter() - t0
+
+        # (3) grid + pyramid indices (owned by this object).
+        t0 = time.perf_counter()
+        grid = grid_lib.build_grid(points_r, jnp.float32(eps), m)
+        pyramid = sparse_lib.build_pyramid(
+            points_r, jnp.float32(eps), m,
+            n_levels=cfg.n_levels, level_scale=cfg.level_scale,
+        )
+        jax.block_until_ready(grid.unique_cells)
+        t_build = time.perf_counter() - t0
+
+        home_counts = np.asarray(grid.cell_counts[grid.point_cell_pos])
+        return cls(
+            cfg,
+            backend=(backend if backend is not None
+                     else dense_lib.resolve_backend(cfg.backend)),
+            points_ref=points,
+            points_r=points_r,
+            dim_perm=dim_perm,
+            eps=eps,
+            eps_beta=eps_beta,
+            grid=grid,
+            pyramid=pyramid,
+            home_counts=home_counts,
+            t_select_eps=t_select,
+            t_build=t_build,
+            compile_counts=compile_counts,
+            executables=executables,
+        )
+
+    # -- introspection -----------------------------------------------------
+
+    @property
+    def points(self):
+        """The indexed reference cloud as passed to ``build`` (original
+        dim order).  ``index.query(index.points, exclude_self=True)`` is
+        the classic self-join."""
+        return self.points_ref
+
+    @property
+    def n_points(self) -> int:
+        return int(self.points_r.shape[0])
+
+    @property
+    def n_dims(self) -> int:
+        return int(self.points_r.shape[1])
+
+    @property
+    def total_compiles(self) -> int:
+        return sum(self.compile_counts.values())
+
+    def cache_info(self) -> Dict[str, int]:
+        return {"global_entries": len(_ENGINE_CACHE), **self.compile_counts}
+
+    def memory_analysis(self) -> Dict[str, Optional[Dict[str, int]]]:
+        """Compiler memory analysis per engine kind (bytes), for the
+        benchmark JSON's peak-HBM trajectory.  ``None`` where the
+        backend's ``Compiled.memory_analysis()`` is unavailable (e.g.
+        some CPU builds)."""
+        out: Dict[str, Optional[Dict[str, int]]] = {}
+        fields = (
+            "temp_size_in_bytes", "argument_size_in_bytes",
+            "output_size_in_bytes", "generated_code_size_in_bytes",
+        )
+        for kind, ex in self.executables.items():
+            try:
+                ma = ex.memory_analysis()
+                rec = {
+                    f: int(getattr(ma, f))
+                    for f in fields if hasattr(ma, f)
+                }
+                out[kind] = rec or None
+            except Exception:
+                out[kind] = None
+        return out
+
+    # -- engine cache ------------------------------------------------------
+
+    def _engine(self, kind: str, jitted, args: tuple, kwargs: dict):
+        key = _engine_key(kind, args, kwargs)
+        ex = _ENGINE_CACHE.get(key)
+        if ex is None:
+            ex = jitted.lower(*args, **kwargs).compile()
+            _ENGINE_CACHE[key] = ex
+            self.compile_counts[kind] += 1
+        self.executables[kind] = ex
+        return ex
+
+    # -- engine callables for the work queue -------------------------------
+
+    def _dense_fn(self, k: int, queries_rp, exclude_self: bool):
+        cfg = self.config
+        eps_arg = jnp.float32(self.eps)
+
+        def dense_fn(ids: np.ndarray):
+            qp = hybrid_lib._pad_ids(ids, cfg.query_block)
+            args = (self.grid, self.points_r, qp, eps_arg)
+            if queries_rp is not None:
+                args = args + (queries_rp,)
+            kwargs = dict(
+                k=k, budget=cfg.dense_budget, query_block=cfg.query_block,
+                block_c=cfg.block_c, backend=self.backend,
+                exclude_self=exclude_self,
+            )
+            ex = self._engine("dense", dense_lib.dense_join_jit, args, kwargs)
+            t0 = time.perf_counter()
+            res = jax.block_until_ready(ex(*args))
+            dt = time.perf_counter() - t0
+            n = len(ids)
+            return (
+                np.asarray(res.dists[:n]),
+                np.asarray(res.ids[:n]),
+                np.asarray(res.failed[:n]),
+                dt,
+            )
+
+        return dense_fn
+
+    def _sparse_fn(self, k: int, queries_rp, exclude_self: bool):
+        cfg = self.config
+
+        def sparse_fn(ids: np.ndarray) -> queue_lib.AsyncEngineCall:
+            qp = hybrid_lib._pad_ids(ids, cfg.query_block)
+            args = (self.pyramid, self.points_r, qp)
+            if queries_rp is not None:
+                args = args + (queries_rp,)
+            kwargs = dict(
+                k=k, budget=cfg.sparse_budget,
+                query_block=cfg.query_block, sel_factor=cfg.sel_factor,
+                backend=self.backend, exclude_self=exclude_self,
+            )
+            ex = self._engine("sparse", sparse_lib.sparse_knn_jit, args, kwargs)
+            raw = ex(*args)     # async dispatch: returns un-blocked arrays
+            n = len(ids)
+
+            def finalize(r):
+                return (
+                    np.asarray(r.dists[:n]),
+                    np.asarray(r.ids[:n]),
+                    np.asarray(r.certified[:n]),
+                )
+
+            return queue_lib.AsyncEngineCall(raw, finalize)
+
+        return sparse_fn
+
+    def _brute_fn(self, k: int, queries_rp, exclude_self: bool):
+        cfg = self.config
+
+        def brute_fn(ids: np.ndarray):
+            qp = hybrid_lib._pad_ids(ids, cfg.query_block)
+            args = (self.points_r, qp)
+            if queries_rp is not None:
+                args = args + (queries_rp,)
+            kwargs = dict(
+                k=k, corpus_chunk=cfg.brute_chunk,
+                kernel_mode=cfg.kernel_mode, exclude_self=exclude_self,
+            )
+            ex = self._engine("brute", _brute_engine, args, kwargs)
+            d, i = jax.block_until_ready(ex(*args))
+            n = len(ids)
+            return np.asarray(d[:n]), np.asarray(i[:n])
+
+        return brute_fn
+
+    # -- work split --------------------------------------------------------
+
+    def _self_split(self, k: int) -> Tuple[np.ndarray, np.ndarray, float]:
+        """Dense/sparse assignment of the indexed cloud itself (cached
+        per k — home-cell densities never change after build)."""
+        hit = self._self_splits.get(k)
+        if hit is not None:
+            return hit
+        cfg = self.config
+        split = split_lib.split_from_counts(
+            jnp.asarray(self.home_counts), k, self.grid.m, cfg.gamma, cfg.rho
+        )
+        to_dense = np.asarray(split.to_dense)
+        out = (
+            np.nonzero(to_dense)[0].astype(np.int32),
+            np.nonzero(~to_dense)[0].astype(np.int32),
+            float(split.threshold),
+        )
+        self._self_splits[k] = out
+        return out
+
+    # -- the query pipeline ------------------------------------------------
+
+    def query(
+        self,
+        queries=None,
+        k: Optional[int] = None,
+        exclude_self: bool = False,
+    ) -> "hybrid_lib.KNNResult":
+        """Hybrid KNN of ``queries`` against the indexed reference cloud.
+
+        ``queries`` is an (|Q|, n) array in the reference cloud's
+        original dim order (REORDER is applied internally with the
+        reference permutation); ``None`` — or the indexed array object
+        itself — selects the self-join fast path, which reuses the
+        build-time coordinate caches.  ``k`` overrides the config's K
+        for this call.  ``exclude_self`` masks reference point i for
+        query row i (positional identity).
+
+        Steps 4–9 of Algorithm 1 run per call: the §V-D density split
+        classifies queries by the *reference grid's* population around
+        them, the §V-A work queue drains both engines, §V-E failures
+        reassign, and the brute lane certifies the residue — results
+        are exact for arbitrary R≠S query sets.
+        """
+        cfg = self.config
+        kq = cfg.k if k is None else int(k)
+        assert kq >= 1
+        compiles_before = self.total_compiles
+        npts_ref = self.n_points
+        max_k = npts_ref - 1 if exclude_self else npts_ref
+        assert kq <= max_k, (
+            f"k={kq} exceeds the {max_k} reference points available"
+            f"{' after self-exclusion' if exclude_self else ''}"
+        )
+
+        is_self = queries is None or queries is self.points_ref
+        if is_self:
+            n_q = npts_ref
+            queries_rp = None
+            dense_ids, sparse_ids, threshold = self._self_split(kq)
+            home_counts = self.home_counts
+        else:
+            q = jnp.asarray(queries, jnp.float32)
+            assert q.ndim == 2 and q.shape[1] == self.n_dims, (
+                f"queries must be (|Q|, {self.n_dims}), got {q.shape}"
+            )
+            n_q = int(q.shape[0])
+            queries_r = q[:, self.dim_perm] if self.dim_perm is not None else q
+            # The query-shape bucket: engine-cache keys see this padded
+            # aval, so variable batch sizes share executables.
+            queries_rp = pad_rows_pow2(queries_r, cfg.query_block)
+            q_coords = grid_lib.compute_cell_coords(
+                self.grid, queries_r[:, : self.grid.m]
+            )
+            split = split_lib.split_queries(
+                self.grid, q_coords, kq, cfg.gamma, cfg.rho
+            )
+            to_dense = np.asarray(split.to_dense)
+            dense_ids = np.nonzero(to_dense)[0].astype(np.int32)
+            sparse_ids = np.nonzero(~to_dense)[0].astype(np.int32)
+            home_counts = np.asarray(split.home_counts)
+            threshold = float(split.threshold)
+
+        min_sparse = int(math.ceil(cfg.rho * n_q))
+        final_d, final_i, source, report = queue_lib.run_work_queue(
+            npts=n_q,
+            k=kq,
+            dense_ids=dense_ids,
+            sparse_ids=sparse_ids,
+            home_counts=home_counts,
+            dense_fn=self._dense_fn(kq, queries_rp, exclude_self),
+            sparse_fn=self._sparse_fn(kq, queries_rp, exclude_self),
+            brute_fn=self._brute_fn(kq, queries_rp, exclude_self),
+            n_batches=cfg.n_batches,
+            online_rebalance=cfg.online_rebalance,
+            sync_t1_after=cfg.rebalance_sync_batches,
+            min_sparse=min_sparse,
+            demote_quantum=cfg.query_block,
+        )
+
+        stats = hybrid_lib.JoinStats(
+            epsilon=self.eps,
+            epsilon_beta=self.eps_beta,
+            n_dense=len(dense_ids),
+            n_sparse=len(sparse_ids),
+            n_failed=report.n_failed,
+            n_uncertified=report.n_uncertified,
+            n_thresh=threshold,
+            t_select_eps=0.0,
+            t_build=0.0,
+            t_dense=report.t_dense,
+            t_sparse=report.t_sparse,
+            t_brute=report.t_brute,
+            t_wall=report.t_wall,
+            t1_per_query=report.t1_per_query,
+            t2_per_query=report.t2_per_query,
+            rho_model=split_lib.rho_model(
+                report.t1_per_query, report.t2_per_query
+            ),
+            n_batches=report.n_dense_batches,
+            batch_sizes=list(report.batch_sizes),
+            t_dense_batches=list(report.t_batches),
+            n_rebalanced=report.n_rebalanced,
+            n_sparse_rounds=report.n_sparse_rounds,
+            n_sparse_engine_total=report.n_sparse_engine_total,
+            rho_online=report.rho_online,
+            n_engine_compiles=self.total_compiles - compiles_before,
+        )
+        return hybrid_lib.KNNResult(
+            dists=np.sqrt(np.maximum(final_d, 0.0)),
+            ids=final_i,
+            source=source,
+            stats=stats,
+        )

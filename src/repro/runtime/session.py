@@ -3,84 +3,40 @@
 ``HybridKNNJoin.join`` used to re-enter every jitted engine through the
 tracing path on each call; for serving-style workloads (many joins over
 same-shaped point clouds) the retrace/compile check is pure overhead on
-the response-time path.  ``JoinSession`` owns the whole Algorithm 1
-pipeline instead:
+the response-time path.  ``JoinSession`` holds the serving state
+instead, built on the index/query split of ``runtime.knn_index``
+(DESIGN.md §3):
 
+  * each ``join(points)`` builds — or reuses, when the same array
+    object is joined again with an unchanged ε argument — a
+    ``KNNIndex`` (REORDER, ε selection, grid + pyramid) and runs the
+    self-join as ``index.query(exclude_self=True)``;
   * engine executables (dense tile-join, sparse pyramid search, brute
     backstop) are lowered and compiled ahead-of-time ONCE per distinct
-    signature and cached, keyed on the pow2-padded query shapes produced
-    by ``_pad_ids`` plus the static engine parameters — the pow2 padding
+    signature and cached process-globally, keyed on the pow2-padded
+    query shapes plus the static engine parameters — the pow2 padding
     is what bounds the number of distinct keys across a sweep;
-  * ``compile_counts`` exposes a compile-count probe: it increments only
-    when a cache miss forces a fresh lowering, so tests can assert that
-    a steady-state ``join()`` performs zero new engine compilations;
-  * the grid/pyramid indices built for a point cloud are reused when the
-    same array object is joined again (epsilon unchanged), so repeated
-    queries against a static database skip the build phase entirely
-    (callers must not mutate a joined array in place);
+  * ``compile_counts`` exposes a compile-count probe shared with every
+    index this session builds: it increments only when a cache miss
+    forces a fresh lowering, so tests can assert that a steady-state
+    ``join()`` (or ``index.query()``) performs zero new compilations;
   * per-join work is dispatched through the multi-round work queue
     (``repro.core.queue``), which drains the sparse engine concurrently
     and re-demotes dense work online from measured T₁/T₂ (Eq. 6).
 
-The executable cache is process-global (sessions with identical configs
-and shapes share compilations, like jit's internal cache); each session
-counts only the misses it caused.
+Callers must not mutate a joined array in place (index reuse is keyed
+on object identity).  For foreign (R≠S) query serving, hold the
+``KNNIndex`` directly: ``session.index_for(points).query(batch)``.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-import math
-import time
 from typing import Dict, Optional, Tuple
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
 import repro.core.hybrid as hybrid_lib
-from repro.core import brute as brute_lib
 from repro.core import dense_join as dense_lib
-from repro.core import epsilon as eps_lib
-from repro.core import grid as grid_lib
-from repro.core import queue as queue_lib
-from repro.core import sparse_knn as sparse_lib
-from repro.core import splitter as split_lib
-
-# Process-global AOT executable cache: key -> jax.stages.Compiled.
-_ENGINE_CACHE: Dict[tuple, object] = {}
-
-
-def clear_engine_cache() -> None:
-    """Drop all cached executables (tests / memory pressure)."""
-    _ENGINE_CACHE.clear()
-
-
-def _engine_key(kind: str, args: tuple, kwargs: dict) -> tuple:
-    """Cache key: pytree structure (static fields ride in the treedef),
-    leaf avals (shape, dtype), and the static kwargs."""
-    leaves, treedef = jax.tree_util.tree_flatten(args)
-    avals = tuple(
-        (tuple(np.shape(leaf)), str(jnp.result_type(leaf))) for leaf in leaves
-    )
-    return (kind, treedef, avals, tuple(sorted(kwargs.items())))
-
-
-@dataclasses.dataclass
-class _Prepared:
-    """Index state reusable across joins on the same point cloud."""
-
-    points_ref: object
-    epsilon_arg: Optional[float]
-    points_r: jnp.ndarray
-    eps: float
-    eps_beta: float
-    index: grid_lib.GridIndex
-    pyramid: sparse_lib.Pyramid
-    dense_ids: np.ndarray
-    sparse_ids: np.ndarray
-    home_counts: np.ndarray
-    threshold: float
+from repro.runtime.knn_index import (  # noqa: F401  (re-exported API)
+    KNNIndex, _ENGINE_CACHE, clear_engine_cache,
+)
 
 
 class JoinSession:
@@ -96,15 +52,18 @@ class JoinSession:
     def __init__(self, config: "hybrid_lib.HybridConfig"):
         self.config = config
         # Resolve "auto" once on the host so the cache key names the path
-        # actually compiled (pallas on TPU, ref elsewhere).
+        # actually compiled (fused on TPU, ref elsewhere).
         self.backend = dense_lib.resolve_backend(config.backend)
+        # Shared with every KNNIndex this session builds: one counter
+        # stream across index rebuilds.
         self.compile_counts: Dict[str, int] = {
             "dense": 0, "sparse": 0, "brute": 0,
         }
         # Last executable dispatched per engine kind (cache hits
         # included) — the benchmark JSON reads memory_analysis() off it.
         self.executables: Dict[str, object] = {}
-        self._prepared: Optional[_Prepared] = None
+        self._index: Optional[KNNIndex] = None
+        self._index_eps_arg: Optional[float] = None
 
     # -- engine cache ------------------------------------------------------
 
@@ -113,246 +72,57 @@ class JoinSession:
         return sum(self.compile_counts.values())
 
     def cache_info(self) -> Dict[str, int]:
+        # Same shape as KNNIndex.cache_info, over the session-shared
+        # counters (one stream across every index this session built).
         return {"global_entries": len(_ENGINE_CACHE), **self.compile_counts}
 
-    def _engine(self, kind: str, jitted, args: tuple, kwargs: dict):
-        key = _engine_key(kind, args, kwargs)
-        ex = _ENGINE_CACHE.get(key)
-        if ex is None:
-            ex = jitted.lower(*args, **kwargs).compile()
-            _ENGINE_CACHE[key] = ex
-            self.compile_counts[kind] += 1
-        self.executables[kind] = ex
-        return ex
+    def memory_analysis(self):
+        """Compiler memory analysis per engine kind (bytes) — delegates
+        to the current index's executables (see ``KNNIndex``)."""
+        if self._index is None:
+            return {}
+        return self._index.memory_analysis()
 
-    def memory_analysis(self) -> Dict[str, Optional[Dict[str, int]]]:
-        """Compiler memory analysis per engine kind (bytes), for the
-        benchmark JSON's peak-HBM trajectory.  ``None`` where the
-        backend's ``Compiled.memory_analysis()`` is unavailable (e.g.
-        some CPU builds)."""
-        out: Dict[str, Optional[Dict[str, int]]] = {}
-        fields = (
-            "temp_size_in_bytes", "argument_size_in_bytes",
-            "output_size_in_bytes", "generated_code_size_in_bytes",
+    # -- index ownership ---------------------------------------------------
+
+    def index_for(self, points, epsilon: Optional[float] = None) -> KNNIndex:
+        """The session's ``KNNIndex`` for this point cloud — built on
+        first sight, reused when the same array object (and ε argument)
+        comes back.  This is the serving entry point for foreign (R≠S)
+        queries: ``session.index_for(db).query(batch)``."""
+        return self._get_index(points, epsilon)[0]
+
+    def _get_index(
+        self, points, epsilon: Optional[float]
+    ) -> Tuple[KNNIndex, bool]:
+        idx = self._index
+        if (
+            idx is not None
+            and idx.points_ref is points
+            and self._index_eps_arg == epsilon
+        ):
+            return idx, False
+        idx = KNNIndex.build(
+            points, self.config, epsilon,
+            backend=self.backend,
+            compile_counts=self.compile_counts,
+            executables=self.executables,
         )
-        for kind, ex in self.executables.items():
-            try:
-                ma = ex.memory_analysis()
-                rec = {
-                    f: int(getattr(ma, f))
-                    for f in fields if hasattr(ma, f)
-                }
-                out[kind] = rec or None
-            except Exception:
-                out[kind] = None
-        return out
+        self._index = idx
+        self._index_eps_arg = epsilon
+        return idx, True
 
     # -- pipeline ----------------------------------------------------------
 
-    def _prepare(self, points, epsilon: Optional[float]) -> Tuple[_Prepared, float, float]:
-        """Steps 1–4 of Algorithm 1: reorder, ε, index build, work split.
-        Returns (prepared, t_select, t_build); cached per points object."""
-        cfg = self.config
-        prep = self._prepared
-        if (
-            prep is not None
-            and prep.points_ref is points
-            and prep.epsilon_arg == epsilon
-        ):
-            return prep, 0.0, 0.0
-
-        pts = jnp.asarray(points, jnp.float32)
-        npts, ndim = pts.shape
-        assert cfg.k < npts, "K must be smaller than |D|"
-        m = min(cfg.m, ndim)
-        key = jax.random.PRNGKey(cfg.seed)
-
-        # (1) REORDER — distances are dim-permutation invariant (§IV-D).
-        points_r = grid_lib.reorder_by_variance(pts)[0] if cfg.reorder else pts
-
-        # (2) ε selection (§V-C2) — skipped when the caller pins ε.
-        t0 = time.perf_counter()
-        if epsilon is None:
-            sel = eps_lib.select_epsilon(
-                points_r, key, cfg.k, cfg.beta,
-                n_query_sample=min(cfg.n_query_sample, npts),
-                n_bins=cfg.n_bins,
-                n_pair_sample=cfg.n_pair_sample,
-            )
-            eps = float(jax.block_until_ready(sel.epsilon))
-            eps_beta = float(sel.epsilon_beta)
-        else:
-            eps, eps_beta = float(epsilon), float(epsilon) / 2.0
-        t_select = time.perf_counter() - t0
-
-        # (3) grid + pyramid indices (owned by the session).
-        t0 = time.perf_counter()
-        index = grid_lib.build_grid(points_r, jnp.float32(eps), m)
-        pyramid = sparse_lib.build_pyramid(
-            points_r, jnp.float32(eps), m,
-            n_levels=cfg.n_levels, level_scale=cfg.level_scale,
-        )
-        jax.block_until_ready(index.unique_cells)
-        t_build = time.perf_counter() - t0
-
-        # (4) density + ρ-floor split (§V-D, §V-F).
-        split = split_lib.split_work(index, cfg.k, cfg.gamma, cfg.rho)
-        to_dense = np.asarray(split.to_dense)
-        prep = _Prepared(
-            points_ref=points,
-            epsilon_arg=epsilon,
-            points_r=points_r,
-            eps=eps,
-            eps_beta=eps_beta,
-            index=index,
-            pyramid=pyramid,
-            dense_ids=np.nonzero(to_dense)[0].astype(np.int32),
-            sparse_ids=np.nonzero(~to_dense)[0].astype(np.int32),
-            home_counts=np.asarray(split.home_counts),
-            threshold=float(split.threshold),
-        )
-        self._prepared = prep
-        return prep, t_select, t_build
-
-    def _dense_fn(self, prep: _Prepared):
-        cfg = self.config
-        eps2_arg = jnp.float32(prep.eps)
-
-        def dense_fn(ids: np.ndarray):
-            qp = hybrid_lib._pad_ids(ids, cfg.query_block)
-            args = (prep.index, prep.points_r, qp, eps2_arg)
-            kwargs = dict(
-                k=cfg.k, budget=cfg.dense_budget, query_block=cfg.query_block,
-                block_c=cfg.block_c, backend=self.backend,
-            )
-            # The _jit handle: the session resolved the backend once in
-            # __init__, so lowering bypasses the resolving wrapper.
-            ex = self._engine("dense", dense_lib.dense_join_jit, args, kwargs)
-            t0 = time.perf_counter()
-            res = jax.block_until_ready(ex(*args))
-            dt = time.perf_counter() - t0
-            n = len(ids)
-            return (
-                np.asarray(res.dists[:n]),
-                np.asarray(res.ids[:n]),
-                np.asarray(res.failed[:n]),
-                dt,
-            )
-
-        return dense_fn
-
-    def _sparse_fn(self, prep: _Prepared):
-        cfg = self.config
-
-        def sparse_fn(ids: np.ndarray) -> queue_lib.AsyncEngineCall:
-            qp = hybrid_lib._pad_ids(ids, cfg.query_block)
-            args = (prep.pyramid, prep.points_r, qp)
-            kwargs = dict(
-                k=cfg.k, budget=cfg.sparse_budget,
-                query_block=cfg.query_block, sel_factor=cfg.sel_factor,
-                backend=self.backend,
-            )
-            ex = self._engine("sparse", sparse_lib.sparse_knn_jit, args, kwargs)
-            raw = ex(*args)     # async dispatch: returns un-blocked arrays
-            n = len(ids)
-
-            def finalize(r):
-                return (
-                    np.asarray(r.dists[:n]),
-                    np.asarray(r.ids[:n]),
-                    np.asarray(r.certified[:n]),
-                )
-
-            return queue_lib.AsyncEngineCall(raw, finalize)
-
-        return sparse_fn
-
-    def _brute_fn(self, prep: _Prepared):
-        cfg = self.config
-
-        def brute_fn(ids: np.ndarray):
-            qp = hybrid_lib._pad_ids(ids, cfg.query_block)
-            args = (prep.points_r, qp)
-            kwargs = dict(
-                k=cfg.k, corpus_chunk=cfg.brute_chunk,
-                kernel_mode=cfg.kernel_mode,
-            )
-            ex = self._engine("brute", _brute_engine, args, kwargs)
-            d, i = jax.block_until_ready(ex(*args))
-            n = len(ids)
-            return np.asarray(d[:n]), np.asarray(i[:n])
-
-        return brute_fn
-
     def join(self, points, epsilon: Optional[float] = None) -> "hybrid_lib.KNNResult":
-        """Algorithm 1 through the work queue.  Same contract as
-        ``HybridKNNJoin.join`` (which now delegates here)."""
-        cfg = self.config
-        compiles_before = self.total_compiles
-        prep, t_select, t_build = self._prepare(points, epsilon)
-        npts = prep.points_r.shape[0]
-
-        min_sparse = int(math.ceil(cfg.rho * npts))
-        final_d, final_i, source, report = queue_lib.run_work_queue(
-            npts=npts,
-            k=cfg.k,
-            dense_ids=prep.dense_ids,
-            sparse_ids=prep.sparse_ids,
-            home_counts=prep.home_counts,
-            dense_fn=self._dense_fn(prep),
-            sparse_fn=self._sparse_fn(prep),
-            brute_fn=self._brute_fn(prep),
-            n_batches=cfg.n_batches,
-            online_rebalance=cfg.online_rebalance,
-            sync_t1_after=cfg.rebalance_sync_batches,
-            min_sparse=min_sparse,
-            demote_quantum=cfg.query_block,
-        )
-
-        stats = hybrid_lib.JoinStats(
-            epsilon=prep.eps,
-            epsilon_beta=prep.eps_beta,
-            n_dense=len(prep.dense_ids),
-            n_sparse=len(prep.sparse_ids),
-            n_failed=report.n_failed,
-            n_uncertified=report.n_uncertified,
-            n_thresh=prep.threshold,
-            t_select_eps=t_select,
-            t_build=t_build,
-            t_dense=report.t_dense,
-            t_sparse=report.t_sparse,
-            t_brute=report.t_brute,
-            t_wall=report.t_wall,
-            t1_per_query=report.t1_per_query,
-            t2_per_query=report.t2_per_query,
-            rho_model=split_lib.rho_model(
-                report.t1_per_query, report.t2_per_query
-            ),
-            n_batches=report.n_dense_batches,
-            batch_sizes=list(report.batch_sizes),
-            t_dense_batches=list(report.t_batches),
-            n_rebalanced=report.n_rebalanced,
-            n_sparse_rounds=report.n_sparse_rounds,
-            n_sparse_engine_total=report.n_sparse_engine_total,
-            rho_online=report.rho_online,
-            n_engine_compiles=self.total_compiles - compiles_before,
-        )
-        return hybrid_lib.KNNResult(
-            dists=np.sqrt(np.maximum(final_d, 0.0)),
-            ids=final_i,
-            source=source,
-            stats=stats,
-        )
-
-
-@functools.partial(
-    jax.jit, static_argnames=("k", "corpus_chunk", "kernel_mode")
-)
-def _brute_engine(points_r, query_ids, *, k, corpus_chunk, kernel_mode):
-    """Brute lane with the query gather fused in, so the AOT signature is
-    (corpus, padded ids) only."""
-    safe = jnp.clip(query_ids, 0, points_r.shape[0] - 1)
-    return brute_lib.brute_knn(
-        points_r, points_r[safe], query_ids,
-        k=k, corpus_chunk=corpus_chunk, kernel_mode=kernel_mode,
-    )
+        """Algorithm 1 through the work queue: the self-join special
+        case of ``KNNIndex.query`` (same contract as
+        ``HybridKNNJoin.join``, which delegates here)."""
+        index, fresh = self._get_index(points, epsilon)
+        result = index.query(exclude_self=True)
+        if fresh:
+            # Build cost is reported on the join that paid it; cached
+            # joins report 0.0 (the pre-index-API contract).
+            result.stats.t_select_eps = index.t_select_eps
+            result.stats.t_build = index.t_build
+        return result

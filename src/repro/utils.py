@@ -70,6 +70,18 @@ def round_up(a: int, b: int) -> int:
     return cdiv(a, b) * b
 
 
+def pow2_bucket(n: int, block: int) -> int:
+    """Smallest pow2 multiple of ``block`` that holds ``n`` rows — THE
+    shape bucket for engine-cache keys (query-id vectors and foreign
+    query arrays must round identically, or the zero-compile
+    steady-state guarantee silently breaks)."""
+    n = max(int(n), 1)
+    target = block
+    while target < n:
+        target *= 2
+    return round_up(target, block)
+
+
 def pad_to(x: jnp.ndarray, size: int, axis: int = 0, value=0):
     """Pad ``x`` along ``axis`` up to ``size`` with ``value``."""
     cur = x.shape[axis]
