@@ -45,6 +45,12 @@ def parser(name: str) -> argparse.ArgumentParser:
                          "fused streaming engine, cell-tiled MXU path, or "
                          "the per-query jnp oracle; auto resolves here, "
                          "once (REPRO_BACKEND env overrides auto)")
+    ap.add_argument("--mesh", type=int, default=0,
+                    help="shard the serving index over an N-device 1-D "
+                         "mesh (DESIGN.md §5; needs ≥N jax devices — on "
+                         "CPU set XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=N before launch).  0/1 = "
+                         "single-device index")
     return ap
 
 
@@ -107,7 +113,7 @@ def emit_bench_json(path: str, tag: str, backend: str, tables: Dict,
                 key: r[key]
                 for key in ("wall_s", "response_s", "queries_per_s",
                             "n_engine_compiles", "n_points", "backend",
-                            "config", "memory")
+                            "mesh_shape", "config", "memory")
                 if key in r
             }
     record = {

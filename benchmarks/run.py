@@ -55,12 +55,13 @@ def main():
         )
         if not scale_explicit:
             args.scale = 0.1
-        print(f"[bench] SERVING backend={args.backend} "
+        mesh_part = f"mesh{args.mesh}-" if args.mesh and args.mesh > 1 else ""
+        print(f"[bench] SERVING backend={args.backend} mesh={args.mesh or 1} "
               f"datasets={args.datasets} scale={args.scale}")
         rec = serving.run(args)
         assert rec, "serving mode produced no records"
         _emit_json(args, {"serving": rec},
-                   tag_default=f"serving-{args.backend}")
+                   tag_default=f"serving-{mesh_part}{args.backend}")
         print(f"[bench] serving ok ({time.time() - t0:.0f}s, "
               f"{len(rec)} datasets)")
         return

@@ -12,6 +12,12 @@ measures exactly that seam:
   * steady-state queries/s over same-bucket batches, the serving
     headline number.
 
+``--mesh N`` serves the same workload from a sharded index
+(``KNNIndex.build(..., mesh=...)``, DESIGN.md §5): per-shard hybrid
+pipelines plus the collective top-K merge.  Every record carries a
+``mesh_shape`` field so the perf trajectory distinguishes shard counts
+([1] for the single-device index).
+
 Each record embeds the resolved backend and the full ``HybridConfig``
 dict so the JSON ties back to the knobs that produced it.
 """
@@ -48,6 +54,13 @@ def _query_batches(pts: np.ndarray, n_batches: int, batch: int, seed: int = 0):
 
 def run(args):
     backend = getattr(args, "backend", "auto")
+    n_mesh = int(getattr(args, "mesh", 0) or 0)
+    mesh = None
+    if n_mesh > 1:
+        from repro.launch.mesh import make_serving_mesh
+
+        mesh = make_serving_mesh(n_mesh)
+    mesh_shape = [n_mesh] if mesh is not None else [1]
     batch = max(64, int(BATCH_SIZE * min(args.scale * 4, 1.0)))
     rows = []
     rec = {}
@@ -58,7 +71,7 @@ def run(args):
                            n_batches=2, backend=backend,
                            online_rebalance=False)
         t0 = time.perf_counter()
-        index = KNNIndex.build(pts, cfg)
+        index = KNNIndex.build(pts, cfg, mesh=mesh)
         t_build = time.perf_counter() - t0
 
         batches = _query_batches(pts, N_BATCHES, batch)
@@ -87,6 +100,7 @@ def run(args):
                      f"{steady_s:.3f}s", f"{qps:.0f}"])
         rec[ds] = {
             "backend": index.backend,
+            "mesh_shape": mesh_shape,
             "config": dataclasses.asdict(cfg),
             "n_points": len(pts),
             "batch_size": batch,
@@ -103,7 +117,7 @@ def run(args):
         }
     print_table(
         f"Serving: steady-state index.query batches "
-        f"(backend={backend}, batch={batch})",
+        f"(backend={backend}, mesh={mesh_shape}, batch={batch})",
         ["dataset", "K", "build", "cold batch", "steady batch", "queries/s"],
         rows)
     save("serving", rec, args.out)

@@ -5,11 +5,16 @@ Public API:
   refimpl_knn                              — REFIMPL baseline (§VI-C)
   self_join_brute                          — GPU-JOINLINEAR baseline (§VI-D)
   ring_self_join, hybrid_join_spmd         — distributed joins (§VII future work)
+  collective_topk_merge, build_shard_indices — the sharded index's
+                                             placement layer (DESIGN.md §5)
 """
 from repro.core.hybrid import HybridConfig, HybridKNNJoin, JoinStats, KNNResult
 from repro.core.refimpl import refimpl_knn
 from repro.core.brute import brute_knn, self_join_brute
-from repro.core.distributed import hybrid_join_spmd, ring_self_join
+from repro.core.distributed import (
+    build_shard_indices, collective_topk_merge, hybrid_join_spmd,
+    merge_strategy, ring_self_join,
+)
 from repro.core.queue import AsyncEngineCall, QueueReport, WorkQueue, run_work_queue
 from repro.core import epsilon, grid, splitter
 
@@ -17,6 +22,7 @@ __all__ = [
     "HybridConfig", "HybridKNNJoin", "JoinStats", "KNNResult",
     "refimpl_knn", "brute_knn", "self_join_brute",
     "ring_self_join", "hybrid_join_spmd",
+    "build_shard_indices", "collective_topk_merge", "merge_strategy",
     "AsyncEngineCall", "QueueReport", "WorkQueue", "run_work_queue",
     "epsilon", "grid", "splitter",
 ]

@@ -107,6 +107,7 @@ class JoinStats:
     t_dense: float = 0.0
     t_sparse: float = 0.0
     t_brute: float = 0.0
+    t_merge: float = 0.0          # collective top-K merge (sharded serving)
     t_wall: float = 0.0           # scheduler wall time (engines overlap)
     t1_per_query: float = 0.0     # paper T₁ (sparse engine, per query)
     t2_per_query: float = 0.0     # paper T₂ (dense engine, per query)

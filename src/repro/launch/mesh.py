@@ -41,5 +41,22 @@ def make_host_mesh(model: int = 1) -> Mesh:
     return jax.make_mesh((data, model), ("data", "model"), **_axis_kw(2))
 
 
+def make_serving_mesh(n_shards: int | None = None, axis: str = "shard") -> Mesh:
+    """1-D mesh for the sharded ``KNNIndex`` (DESIGN.md §5): ``n_shards``
+    devices along one ``axis`` (default: every local device).  On a CPU
+    host, fake devices come from
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` set before
+    the first jax import."""
+    devs = jax.devices()
+    n = len(devs) if n_shards is None else int(n_shards)
+    if n > len(devs):
+        raise ValueError(
+            f"serving mesh wants {n} devices but only {len(devs)} exist "
+            "(set XLA_FLAGS=--xla_force_host_platform_device_count "
+            "before the first jax import to fake more on CPU)"
+        )
+    return jax.make_mesh((n,), (axis,), **_axis_kw(1))
+
+
 def mesh_chip_count(mesh: Mesh) -> int:
     return int(np.prod(list(mesh.shape.values())))

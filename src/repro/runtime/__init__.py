@@ -2,11 +2,12 @@
 straggler mitigation."""
 from repro.runtime.knn_index import KNNIndex, clear_engine_cache
 from repro.runtime.session import JoinSession
+from repro.runtime.sharded_index import ShardedKNNIndex
 from repro.runtime.stragglers import StragglerConfig, StragglerDetector, suggest_rho
 from repro.runtime.supervisor import RunReport, Supervisor, SupervisorConfig
 
 __all__ = [
-    "KNNIndex", "JoinSession", "clear_engine_cache",
+    "KNNIndex", "ShardedKNNIndex", "JoinSession", "clear_engine_cache",
     "StragglerConfig", "StragglerDetector", "suggest_rho",
     "RunReport", "Supervisor", "SupervisorConfig",
 ]

@@ -84,6 +84,48 @@ def pad_rows_pow2(arr: jnp.ndarray, block: int) -> jnp.ndarray:
     return pad_to(arr, pow2_bucket(arr.shape[0], block))
 
 
+def select_epsilon(points_r, cfg, epsilon, npts):
+    """Step 2 of Algorithm 1 (§V-C2), shared by the single-device and
+    sharded builds: returns ``(eps, eps_beta, t_select)``, skipping the
+    sampling sweep when the caller pins ``epsilon``."""
+    t0 = time.perf_counter()
+    if epsilon is None:
+        sel = eps_lib.select_epsilon(
+            points_r, jax.random.PRNGKey(cfg.seed), cfg.k, cfg.beta,
+            n_query_sample=min(cfg.n_query_sample, npts),
+            n_bins=cfg.n_bins,
+            n_pair_sample=cfg.n_pair_sample,
+        )
+        eps = float(jax.block_until_ready(sel.epsilon))
+        eps_beta = float(sel.epsilon_beta)
+    else:
+        eps, eps_beta = float(epsilon), float(epsilon) / 2.0
+    return eps, eps_beta, time.perf_counter() - t0
+
+
+def executable_memory_analysis(executables: Dict[str, object]):
+    """Compiler memory analysis per engine kind (bytes), for the
+    benchmark JSON's peak-HBM trajectory.  ``None`` where the backend's
+    ``Compiled.memory_analysis()`` is unavailable (e.g. some CPU
+    builds)."""
+    out: Dict[str, Optional[Dict[str, int]]] = {}
+    fields = (
+        "temp_size_in_bytes", "argument_size_in_bytes",
+        "output_size_in_bytes", "generated_code_size_in_bytes",
+    )
+    for kind, ex in executables.items():
+        try:
+            ma = ex.memory_analysis()
+            rec = {
+                f: int(getattr(ma, f))
+                for f in fields if hasattr(ma, f)
+            }
+            out[kind] = rec or None
+        except Exception:
+            out[kind] = None
+    return out
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("k", "corpus_chunk", "kernel_mode", "exclude_self"),
@@ -168,18 +210,37 @@ class KNNIndex:
         backend: Optional[str] = None,
         compile_counts: Optional[Dict[str, int]] = None,
         executables: Optional[Dict[str, object]] = None,
-    ) -> "KNNIndex":
+        mesh=None,
+        mesh_axis=None,
+        merge: str = "auto",
+    ):
         """Steps 1–3 of Algorithm 1, once per database: REORDER,
         ε selection (skipped when the caller pins ``epsilon``), grid +
         pyramid construction.  ``backend``/counter kwargs let a
         ``JoinSession`` share its resolved backend and compile
-        accounting; standalone callers omit them."""
+        accounting; standalone callers omit them.
+
+        ``mesh`` makes placement a build parameter instead of a fork
+        (DESIGN.md §5): with a ``jax.sharding.Mesh`` the reference cloud
+        is partitioned into per-device shards and a ``ShardedKNNIndex``
+        is returned — same ``query()`` contract, shard-local hybrid
+        pipelines plus a collective top-K merge (``mesh_axis`` names
+        the shard axis/axes, default all; ``merge`` picks the collective
+        strategy, see ``core.distributed.merge_strategy``)."""
+        if mesh is not None:
+            from repro.runtime.sharded_index import ShardedKNNIndex
+
+            return ShardedKNNIndex.build(
+                points, config, epsilon,
+                mesh=mesh, mesh_axis=mesh_axis, merge=merge,
+                backend=backend, compile_counts=compile_counts,
+                executables=executables,
+            )
         cfg = config
         pts = jnp.asarray(points, jnp.float32)
         npts, ndim = pts.shape
         assert cfg.k < npts, "K must be smaller than |D|"
         m = min(cfg.m, ndim)
-        key = jax.random.PRNGKey(cfg.seed)
 
         # (1) REORDER — distances are dim-permutation invariant (§IV-D).
         if cfg.reorder:
@@ -188,19 +249,7 @@ class KNNIndex:
             points_r, dim_perm = pts, None
 
         # (2) ε selection (§V-C2) — skipped when the caller pins ε.
-        t0 = time.perf_counter()
-        if epsilon is None:
-            sel = eps_lib.select_epsilon(
-                points_r, key, cfg.k, cfg.beta,
-                n_query_sample=min(cfg.n_query_sample, npts),
-                n_bins=cfg.n_bins,
-                n_pair_sample=cfg.n_pair_sample,
-            )
-            eps = float(jax.block_until_ready(sel.epsilon))
-            eps_beta = float(sel.epsilon_beta)
-        else:
-            eps, eps_beta = float(epsilon), float(epsilon) / 2.0
-        t_select = time.perf_counter() - t0
+        eps, eps_beta, t_select = select_epsilon(points_r, cfg, epsilon, npts)
 
         # (3) grid + pyramid indices (owned by this object).
         t0 = time.perf_counter()
@@ -256,26 +305,9 @@ class KNNIndex:
         return {"global_entries": len(_ENGINE_CACHE), **self.compile_counts}
 
     def memory_analysis(self) -> Dict[str, Optional[Dict[str, int]]]:
-        """Compiler memory analysis per engine kind (bytes), for the
-        benchmark JSON's peak-HBM trajectory.  ``None`` where the
-        backend's ``Compiled.memory_analysis()`` is unavailable (e.g.
-        some CPU builds)."""
-        out: Dict[str, Optional[Dict[str, int]]] = {}
-        fields = (
-            "temp_size_in_bytes", "argument_size_in_bytes",
-            "output_size_in_bytes", "generated_code_size_in_bytes",
-        )
-        for kind, ex in self.executables.items():
-            try:
-                ma = ex.memory_analysis()
-                rec = {
-                    f: int(getattr(ma, f))
-                    for f in fields if hasattr(ma, f)
-                }
-                out[kind] = rec or None
-            except Exception:
-                out[kind] = None
-        return out
+        """Compiler memory analysis per engine kind (bytes) — see
+        ``executable_memory_analysis``."""
+        return executable_memory_analysis(self.executables)
 
     # -- engine cache ------------------------------------------------------
 

@@ -27,6 +27,13 @@ instead, built on the index/query split of ``runtime.knn_index``
 Callers must not mutate a joined array in place (index reuse is keyed
 on object identity).  For foreign (R≠S) query serving, hold the
 ``KNNIndex`` directly: ``session.index_for(points).query(batch)``.
+
+Placement (DESIGN.md §5): a session constructed with ``mesh=`` owns
+*sharded* indexes instead — ``index_for``/``join`` build a
+``ShardedKNNIndex`` over the mesh (shard-local hybrid pipelines plus
+the collective top-K merge), with the same compile-counter and
+executable sharing; the merge executable is accounted under the
+``"merge"`` engine kind.
 """
 from __future__ import annotations
 
@@ -49,8 +56,21 @@ class JoinSession:
     {'dense': 1, 'sparse': 2, 'brute': 1}
     """
 
-    def __init__(self, config: "hybrid_lib.HybridConfig"):
+    def __init__(
+        self,
+        config: "hybrid_lib.HybridConfig",
+        *,
+        mesh=None,
+        mesh_axis=None,
+        merge: str = "auto",
+    ):
         self.config = config
+        # Placement: with a mesh the session serves sharded indexes
+        # (KNNIndex.build dispatches on mesh=, so join()/index_for()
+        # need no other change).
+        self.mesh = mesh
+        self.mesh_axis = mesh_axis
+        self.merge = merge
         # Resolve "auto" once on the host so the cache key names the path
         # actually compiled (fused on TPU, ref elsewhere).
         self.backend = dense_lib.resolve_backend(config.backend)
@@ -59,6 +79,8 @@ class JoinSession:
         self.compile_counts: Dict[str, int] = {
             "dense": 0, "sparse": 0, "brute": 0,
         }
+        if mesh is not None:
+            self.compile_counts["merge"] = 0
         # Last executable dispatched per engine kind (cache hits
         # included) — the benchmark JSON reads memory_analysis() off it.
         self.executables: Dict[str, object] = {}
@@ -107,6 +129,7 @@ class JoinSession:
             backend=self.backend,
             compile_counts=self.compile_counts,
             executables=self.executables,
+            mesh=self.mesh, mesh_axis=self.mesh_axis, merge=self.merge,
         )
         self._index = idx
         self._index_eps_arg = epsilon

@@ -1,0 +1,415 @@
+"""Sharded KNNIndex: one hybrid pipeline from single chip to mesh
+(DESIGN.md §5).
+
+``KNNIndex`` (single device) and ``core.distributed`` (SPMD) used to be
+disconnected universes — the SPMD join re-implemented the ρ routing,
+bypassed the engine cache, and could not serve R≠S queries.  This
+module makes *placement* a layer instead of a fork:
+
+  * ``ShardedKNNIndex.build(points, config, mesh=...)`` partitions the
+    reference cloud into P equal per-device shards along the
+    cell-sorted order of a global ε-grid over the REORDERed points —
+    row-range shards of that order cover compact cell ranges, so each
+    shard's local grid stays dense (Gowanlock's grid-partitioned
+    self-join, applied to serving).  Shard-local grid+pyramid state is
+    built in one ``shard_map`` program (``distributed
+    .build_shard_indices`` via the ``repro.utils`` jax-0.4.x shims);
+    each shard is then a plain ``KNNIndex`` over its sub-cloud.
+
+  * ``index.query(queries, k, exclude_self)`` runs the EXISTING hybrid
+    dense/sparse/brute pipeline per shard — AOT engine cache, pow2
+    query buckets, and all four backends unchanged; because every shard
+    has the same static shapes, P shards share ONE set of compiled
+    engines — and merges the P shard-local top-K candidate sets with a
+    collective merge (``distributed.collective_topk_merge``: all-gather
+    + ``knn_topk.merge_running_topk`` fold, or the ``ppermute``
+    tree-merge for large pow2 P).  The merge executable lives in the
+    same AOT engine cache under kind ``"merge"``, so the zero-compile
+    steady-state guarantee covers the collective step too.
+
+Exactness bookkeeping: the true global KNN of a query is distributed
+over shards, so each shard answers with ``k_eff = k (+1 if
+exclude_self) (+1 if the shard count padded |D|)`` candidates —
+self-exclusion happens at merge time by global id (the engines'
+exclusion-id trick, no shard needs the query↔shard-row map), and an
+uneven |D| pads each of the first ``n_pad`` shards with ONE duplicated
+resident row whose repeated global id the merge dedups.  Either way a
+shard's block always holds its k nearest *distinct, non-excluded*
+points (or its entire sub-cloud), so the merged top-k is exact.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+import repro.core.hybrid as hybrid_lib
+from repro.core import dense_join as dense_lib
+from repro.core import distributed as dist_lib
+from repro.core import grid as grid_lib
+from repro.core import splitter as split_lib
+from repro.runtime.knn_index import (
+    _ENGINE_CACHE, KNNIndex, _engine_key, executable_memory_analysis,
+    select_epsilon,
+)
+from repro.utils import cdiv, pow2_bucket
+
+
+def _resolve_axes(mesh: Mesh, mesh_axis) -> Tuple[str, ...]:
+    if mesh_axis is None:
+        return tuple(mesh.axis_names)
+    if isinstance(mesh_axis, str):
+        return (mesh_axis,)
+    return tuple(mesh_axis)
+
+
+class ShardedKNNIndex:
+    """A reference cloud sharded over a device mesh, served by P
+    shard-local hybrid pipelines plus one collective top-K merge.
+
+    >>> mesh = make_serving_mesh(4)                  # launch.mesh
+    >>> index = KNNIndex.build(db, cfg, mesh=mesh)   # -> ShardedKNNIndex
+    >>> r = index.query(batch)                       # R≠S, exact
+    >>> r = index.query(exclude_self=True)           # sharded self-join
+    >>> index.compile_counts                         # incl. "merge"
+    """
+
+    def __init__(
+        self,
+        config: "hybrid_lib.HybridConfig",
+        *,
+        backend: str,
+        mesh: Mesh,
+        axes: Tuple[str, ...],
+        merge: str,
+        points_ref: object,
+        points_r: jnp.ndarray,
+        dim_perm: Optional[jnp.ndarray],
+        eps: float,
+        eps_beta: float,
+        shards: List[KNNIndex],
+        gids: np.ndarray,
+        n_pad: int,
+        t_select_eps: float = 0.0,
+        t_build: float = 0.0,
+        compile_counts: Optional[Dict[str, int]] = None,
+        executables: Optional[Dict[str, object]] = None,
+    ):
+        self.config = config
+        self.backend = backend
+        self.mesh = mesh
+        self.axes = axes
+        self.n_shards = len(shards)
+        self.merge = dist_lib.merge_strategy(self.n_shards, merge)
+        self.points_ref = points_ref
+        self.points_r = points_r
+        self.dim_perm = dim_perm
+        self.eps = eps
+        self.eps_beta = eps_beta
+        self.shards = shards
+        self.gids = gids                      # (P, shard_n) i32 global ids
+        self.shard_n = int(gids.shape[1])
+        self.n_pad = n_pad
+        self.t_select_eps = t_select_eps
+        self.t_build = t_build
+        if compile_counts is None:
+            compile_counts = {"dense": 0, "sparse": 0, "brute": 0}
+        compile_counts.setdefault("merge", 0)
+        self.compile_counts = compile_counts
+        self.executables = executables if executables is not None else {}
+        self._merge_jits: Dict[int, object] = {}
+
+    # -- construction ------------------------------------------------------
+
+    @classmethod
+    def build(
+        cls,
+        points,
+        config: "hybrid_lib.HybridConfig",
+        epsilon: Optional[float] = None,
+        *,
+        mesh: Mesh,
+        mesh_axis: Union[str, Sequence[str], None] = None,
+        merge: str = "auto",
+        backend: Optional[str] = None,
+        compile_counts: Optional[Dict[str, int]] = None,
+        executables: Optional[Dict[str, object]] = None,
+    ) -> "ShardedKNNIndex":
+        """Per-database steps, placement-aware: global REORDER + ε
+        selection (one geometry for every shard), cell-sorted row-range
+        partition, then the ``shard_map`` grid+pyramid build."""
+        cfg = config
+        axes = _resolve_axes(mesh, mesh_axis)
+        n_shards = int(np.prod([mesh.shape[a] for a in axes]))
+        pts = jnp.asarray(points, jnp.float32)
+        npts, ndim = pts.shape
+        assert cfg.k < npts, "K must be smaller than |D|"
+        assert n_shards >= 1
+        # The ≤1-pad-row-per-shard invariant (merge dedup + k_eff
+        # headroom) needs every shard to own at least one real point.
+        assert npts >= n_shards, (
+            f"|D|={npts} cannot shard over {n_shards} devices "
+            "(need at least one reference point per shard)"
+        )
+        m = min(cfg.m, ndim)
+
+        # (1) REORDER — once, globally: every shard shares the dim perm.
+        if cfg.reorder:
+            points_r, dim_perm = grid_lib.reorder_by_variance(pts)
+        else:
+            points_r, dim_perm = pts, None
+
+        # (2) ε selection — once, globally: one grid geometry class, so
+        # P equal-shape shards share one set of compiled engines.
+        eps, eps_beta, t_select = select_epsilon(points_r, cfg, epsilon, npts)
+
+        t0 = time.perf_counter()
+        # (3) partition: row ranges of the cell-sorted order of a global
+        # ε-grid.  Consecutive rows of that order share (adjacent) grid
+        # cells, so each shard covers a compact cell range and its local
+        # grid stays dense — the grid-partitioned self-join layout.
+        pgrid = grid_lib.build_grid(
+            points_r, jnp.float32(eps), m, materialize_points=False
+        )
+        cell_order = np.asarray(pgrid.order)
+
+        shard_n = cdiv(npts, n_shards)
+        n_pad = shard_n * n_shards - npts
+        # Uneven |D|: at most ONE duplicated row per shard — shards
+        # 0..n_pad−1 take shard_n−1 real rows and repeat their last one,
+        # so per-shard top-(k+1) still yields k distinct global ids and
+        # the collective merge dedups the repeat.
+        gids = np.empty((n_shards, shard_n), np.int32)
+        off = 0
+        for p in range(n_shards):
+            real = shard_n - (1 if p < n_pad else 0)
+            rows = cell_order[off:off + real]
+            if real < shard_n:
+                rows = np.concatenate([rows, rows[-1:]])
+            gids[p] = rows
+            off += real
+        assert off == npts
+
+        # (4) shard-local grid + pyramid, one shard_map program.
+        pts_stacked = jnp.asarray(np.asarray(points_r)[gids])  # (P, s, n)
+        grids, pyramids = dist_lib.build_shard_indices(
+            mesh, axes, pts_stacked, eps, m,
+            n_levels=cfg.n_levels, level_scale=cfg.level_scale,
+        )
+        jax.block_until_ready(grids.unique_cells)
+
+        bk = (backend if backend is not None
+              else dense_lib.resolve_backend(cfg.backend))
+        counts = (compile_counts if compile_counts is not None
+                  else {"dense": 0, "sparse": 0, "brute": 0})
+        execs = executables if executables is not None else {}
+
+        # (5) each shard is a plain KNNIndex over its sub-cloud: REORDER
+        # already applied, ε pinned, grid/pyramid prebuilt, counters and
+        # executables shared so P shards look like one serving engine.
+        shard_cfg = dataclasses.replace(cfg, reorder=False)
+        shards = []
+        for p in range(n_shards):
+            g = jax.tree_util.tree_map(lambda x, p=p: x[p], grids)
+            pyr = jax.tree_util.tree_map(lambda x, p=p: x[p], pyramids)
+            spts = pts_stacked[p]
+            shards.append(KNNIndex(
+                shard_cfg, backend=bk,
+                points_ref=spts, points_r=spts, dim_perm=None,
+                eps=eps, eps_beta=eps_beta, grid=g, pyramid=pyr,
+                home_counts=np.asarray(g.cell_counts[g.point_cell_pos]),
+                compile_counts=counts, executables=execs,
+            ))
+        t_build = time.perf_counter() - t0
+
+        return cls(
+            cfg, backend=bk, mesh=mesh, axes=axes, merge=merge,
+            points_ref=points, points_r=points_r, dim_perm=dim_perm,
+            eps=eps, eps_beta=eps_beta, shards=shards, gids=gids,
+            n_pad=n_pad, t_select_eps=t_select, t_build=t_build,
+            compile_counts=counts, executables=execs,
+        )
+
+    # -- introspection -----------------------------------------------------
+
+    @property
+    def points(self):
+        return self.points_ref
+
+    @property
+    def n_points(self) -> int:
+        return int(self.points_r.shape[0])
+
+    @property
+    def n_dims(self) -> int:
+        return int(self.points_r.shape[1])
+
+    @property
+    def mesh_shape(self) -> Tuple[int, ...]:
+        return tuple(self.mesh.shape[a] for a in self.axes)
+
+    @property
+    def total_compiles(self) -> int:
+        return sum(self.compile_counts.values())
+
+    def cache_info(self) -> Dict[str, int]:
+        return {"global_entries": len(_ENGINE_CACHE), **self.compile_counts}
+
+    def memory_analysis(self):
+        return executable_memory_analysis(self.executables)
+
+    # -- collective merge engine -------------------------------------------
+
+    def _merge(self, k_out: int, dists: np.ndarray, ids: np.ndarray,
+               excl: np.ndarray):
+        """Run the collective merge through the AOT engine cache (kind
+        ``"merge"``): same zero-compile steady-state contract as the
+        dense/sparse/brute engines."""
+        jitted = self._merge_jits.get(k_out)
+        dedup = self.n_pad > 0
+        if jitted is None:
+            jitted = dist_lib.collective_topk_merge(
+                self.mesh, self.axes, k=k_out, strategy=self.merge,
+                dedup=dedup,
+            )
+            self._merge_jits[k_out] = jitted
+        args = (dists, ids, excl)
+        kwargs = dict(k=k_out, strategy=self.merge, dedup=dedup,
+                      axes=self.axes, mesh=self.mesh)
+        key = _engine_key("merge", args, kwargs)
+        ex = _ENGINE_CACHE.get(key)
+        if ex is None:
+            ex = jitted.lower(*args).compile()
+            _ENGINE_CACHE[key] = ex
+            self.compile_counts["merge"] += 1
+        self.executables["merge"] = ex
+        return jax.block_until_ready(ex(*args))
+
+    # -- the query pipeline ------------------------------------------------
+
+    def query(
+        self,
+        queries=None,
+        k: Optional[int] = None,
+        exclude_self: bool = False,
+    ) -> "hybrid_lib.KNNResult":
+        """Hybrid KNN of ``queries`` against the sharded reference cloud
+        — the single-device ``KNNIndex.query`` contract, mesh-placed.
+
+        Every shard serves the full batch as an R≠S join against its
+        resident sub-cloud (the per-shard pipeline IS ``KNNIndex.query``
+        — density split against the shard's grid, work queue, failure
+        lanes, brute certification), then the P shard-local top-k_eff
+        candidate sets meet in the collective merge.  ``exclude_self``
+        masks global reference id i for query row i at merge time."""
+        cfg = self.config
+        kq = cfg.k if k is None else int(k)
+        assert kq >= 1
+        npts = self.n_points
+        max_k = npts - 1 if exclude_self else npts
+        assert kq <= max_k, (
+            f"k={kq} exceeds the {max_k} reference points available"
+            f"{' after self-exclusion' if exclude_self else ''}"
+        )
+        compiles_before = self.total_compiles
+
+        is_self = queries is None or queries is self.points_ref
+        if is_self:
+            queries_r = self.points_r
+            n_q = npts
+        else:
+            q = jnp.asarray(queries, jnp.float32)
+            assert q.ndim == 2 and q.shape[1] == self.n_dims, (
+                f"queries must be (|Q|, {self.n_dims}), got {q.shape}"
+            )
+            n_q = int(q.shape[0])
+            queries_r = q[:, self.dim_perm] if self.dim_perm is not None else q
+
+        # Candidate head-room: +1 when the merge masks the self id, +1
+        # when a shard may carry one duplicated pad row (module
+        # docstring) — capped at the shard size, where a shard returns
+        # its whole sub-cloud and nothing can be lost.
+        k_extra = (1 if exclude_self else 0) + (1 if self.n_pad else 0)
+        k_eff = min(kq + k_extra, self.shard_n)
+
+        # Shard-local hybrid serves: equal shapes ⇒ shard 0 compiles,
+        # shards 1..P−1 ride the same engine-cache entries.
+        shard_d = np.empty((self.n_shards, n_q, k_eff), np.float32)
+        shard_i = np.empty((self.n_shards, n_q, k_eff), np.int32)
+        sources = np.empty((self.n_shards, n_q), np.int32)
+        shard_stats = []
+        for p, shard in enumerate(self.shards):
+            res = shard.query(queries_r, k=k_eff)
+            shard_d[p] = res.dists
+            gid = self.gids[p]
+            li = res.ids
+            shard_i[p] = np.where(li >= 0, gid[np.clip(li, 0, None)], -1)
+            sources[p] = res.source
+            shard_stats.append(res.stats)
+
+        # Collective merge over the query-shape bucket (same pow2
+        # rounding as the per-shard engines, so batch-size sweeps share
+        # merge executables too).
+        excl = (np.arange(n_q, dtype=np.int32) if exclude_self
+                else np.full((n_q,), -2, np.int32))
+        qb = pow2_bucket(n_q, cfg.query_block)
+        dpad = np.full((self.n_shards, qb, k_eff), np.inf, np.float32)
+        ipad = np.full((self.n_shards, qb, k_eff), -1, np.int32)
+        epad = np.full((qb,), -2, np.int32)
+        dpad[:, :n_q] = shard_d
+        ipad[:, :n_q] = shard_i
+        epad[:n_q] = excl
+
+        t0 = time.perf_counter()
+        md, mi = self._merge(kq, dpad, ipad, epad)
+        t_merge = time.perf_counter() - t0
+        md = np.asarray(md)[:n_q]
+        mi = np.asarray(mi)[:n_q]
+
+        t1 = float(np.mean([s.t1_per_query for s in shard_stats]))
+        t2 = float(np.mean([s.t2_per_query for s in shard_stats]))
+        stats = hybrid_lib.JoinStats(
+            epsilon=self.eps,
+            epsilon_beta=self.eps_beta,
+            # Engine-assignment counts sum over shards (each shard
+            # classifies the full batch against ITS grid): totals are
+            # P·|Q|, the actual work dispatched.
+            n_dense=sum(s.n_dense for s in shard_stats),
+            n_sparse=sum(s.n_sparse for s in shard_stats),
+            n_failed=sum(s.n_failed for s in shard_stats),
+            n_uncertified=sum(s.n_uncertified for s in shard_stats),
+            n_thresh=shard_stats[0].n_thresh,
+            t_dense=sum(s.t_dense for s in shard_stats),
+            t_sparse=sum(s.t_sparse for s in shard_stats),
+            t_brute=sum(s.t_brute for s in shard_stats),
+            t_wall=sum(s.t_wall for s in shard_stats) + t_merge,
+            t_merge=t_merge,
+            t1_per_query=t1,
+            t2_per_query=t2,
+            rho_model=split_lib.rho_model(t1, t2),
+            n_batches=sum(s.n_batches for s in shard_stats),
+            batch_sizes=[b for s in shard_stats for b in s.batch_sizes],
+            t_dense_batches=[t for s in shard_stats
+                             for t in s.t_dense_batches],
+            n_rebalanced=sum(s.n_rebalanced for s in shard_stats),
+            n_sparse_rounds=sum(s.n_sparse_rounds for s in shard_stats),
+            n_sparse_engine_total=sum(
+                s.n_sparse_engine_total for s in shard_stats),
+            rho_online=float(np.mean(
+                [s.rho_online for s in shard_stats])),
+            n_engine_compiles=self.total_compiles - compiles_before,
+        )
+        return hybrid_lib.KNNResult(
+            dists=md,
+            ids=mi,
+            # Per-query source over P pipelines: report the most
+            # expensive path any shard took (0 dense < 1 sparse <
+            # 2 brute) — the serving-latency-relevant label.
+            source=np.max(sources, axis=0),
+            stats=stats,
+        )

@@ -83,6 +83,27 @@ def test_ring_join_chunk_sizes_agree():
     """)
 
 
+def test_ring_join_uneven_rows_pow2_padded():
+    """|D| not divisible by the shard count: the pow2_bucket row padding
+    (shared with the serving path's query-shape buckets) absorbs the
+    remainder — padding rows carry id −1 and never win a slot."""
+    run_devices("""
+        from repro.core import ring_self_join
+        mesh = jax.make_mesh((4,), ("data",))
+        r = np.random.default_rng(9)
+        n = 300                                   # 300 % 4 != 0
+        pts = jnp.asarray(r.normal(size=(n, 8)), jnp.float32)
+        d, i = jax.block_until_ready(
+            ring_self_join(mesh, ("data",), k=3, kernel_mode="ref")(pts))
+        assert d.shape == (n, 3) and i.shape == (n, 3)
+        d2 = ((pts[:, None] - pts[None]) ** 2).sum(-1)
+        d2 = d2.at[jnp.arange(n), jnp.arange(n)].set(jnp.inf)
+        want = jnp.sort(d2, axis=1)[:, :3]
+        assert float(jnp.abs(d - want).max()) < 1e-4
+        assert int(i.min()) >= 0                  # no padding id leaked
+    """)
+
+
 def test_hybrid_spmd_join_resolves_and_is_exact():
     run_devices("""
         from repro.core import hybrid_join_spmd
