@@ -45,6 +45,12 @@ def parser(name: str) -> argparse.ArgumentParser:
                          "fused streaming engine, cell-tiled MXU path, or "
                          "the per-query jnp oracle; auto resolves here, "
                          "once (REPRO_BACKEND env overrides auto)")
+    ap.add_argument("--mutate", action="store_true",
+                    help="serving mode: add a mutation churn phase — "
+                         "~1%% inserts+deletes served dirty (delta "
+                         "buffer + tombstone fold), then compact() — "
+                         "recording queries/s before/after the "
+                         "generation swap (DESIGN.md §6)")
     ap.add_argument("--mesh", type=int, default=0,
                     help="shard the serving index over an N-device 1-D "
                          "mesh (DESIGN.md §5; needs ≥N jax devices — on "

@@ -56,12 +56,17 @@ def main():
         if not scale_explicit:
             args.scale = 0.1
         mesh_part = f"mesh{args.mesh}-" if args.mesh and args.mesh > 1 else ""
+        mut_part = "mutate-" if args.mutate else ""
         print(f"[bench] SERVING backend={args.backend} mesh={args.mesh or 1} "
-              f"datasets={args.datasets} scale={args.scale}")
+              f"mutate={args.mutate} datasets={args.datasets} "
+              f"scale={args.scale}")
         rec = serving.run(args)
         assert rec, "serving mode produced no records"
+        if args.mutate:
+            assert all("mutation" in v for v in rec.values()), (
+                "--mutate produced no churn records")
         _emit_json(args, {"serving": rec},
-                   tag_default=f"serving-{mesh_part}{args.backend}")
+                   tag_default=f"serving-{mesh_part}{mut_part}{args.backend}")
         print(f"[bench] serving ok ({time.time() - t0:.0f}s, "
               f"{len(rec)} datasets)")
         return

@@ -52,6 +52,60 @@ def _query_batches(pts: np.ndarray, n_batches: int, batch: int, seed: int = 0):
     return out
 
 
+def _mutation_churn(index, pts, probe_batch, batch, seed=1):
+    """The ``--mutate`` churn phase: serve the SAME batch through three
+    index states — dirty (delta buffer + tombstones folding at merge
+    time), freshly compacted, and the post-swap steady state, which is
+    hard-asserted to compile zero new engines (the generation-invariant
+    cache keys, DESIGN.md §6)."""
+    r = np.random.default_rng(seed)
+    n_churn = max(8, len(pts) // 100)        # ~1%: well under auto-compact
+    scale = 0.05 * pts.std(axis=0, keepdims=True)
+    rows = r.integers(0, len(pts), size=n_churn)
+    inserts = (pts[rows] + scale * r.normal(size=(n_churn, pts.shape[1])
+                                            )).astype(np.float32)
+
+    t0 = time.perf_counter()
+    index.insert(inserts)
+    index.delete(r.choice(len(pts), size=n_churn, replace=False))
+    t_mutate = time.perf_counter() - t0
+    assert not index.is_clean, "churn unexpectedly tripped auto-compaction"
+
+    t0 = time.perf_counter()
+    dirty_cold = index.query(probe_batch)    # pays the delta/merge compiles
+    t_dirty_cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    index.query(probe_batch.copy())
+    t_dirty = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    index.compact()
+    t_compact = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    index.query(probe_batch)
+    t_post = time.perf_counter() - t0
+    probe = index.query(probe_batch.copy())
+    assert probe.stats.n_engine_compiles == 0, (
+        "post-compaction same-bucket query compiled "
+        f"{probe.stats.n_engine_compiles} engines")
+
+    return {
+        "n_inserts": n_churn,
+        "n_deletes": n_churn,
+        "t_mutate_s": t_mutate,
+        "dirty_cold_batch_s": t_dirty_cold,
+        "dirty_cold_compiles": dirty_cold.stats.n_engine_compiles,
+        "dirty_batch_s": t_dirty,
+        "dirty_queries_per_s": batch / t_dirty if t_dirty > 0 else 0.0,
+        "t_compact_s": t_compact,
+        "post_compact_batch_s": t_post,
+        "post_compact_queries_per_s": batch / t_post if t_post > 0 else 0.0,
+        "post_compact_probe_compiles": probe.stats.n_engine_compiles,
+        "generation": index.generation,
+    }
+
+
 def run(args):
     backend = getattr(args, "backend", "auto")
     n_mesh = int(getattr(args, "mesh", 0) or 0)
@@ -63,6 +117,7 @@ def run(args):
     mesh_shape = [n_mesh] if mesh is not None else [1]
     batch = max(64, int(BATCH_SIZE * min(args.scale * 4, 1.0)))
     rows = []
+    mut_rows = []
     rec = {}
     for ds in args.datasets:
         pts = load_dataset(ds, args.scale)
@@ -115,11 +170,27 @@ def run(args):
             "n_engine_compiles": steady_compiles,
             "memory": index.memory_analysis(),
         }
+        if getattr(args, "mutate", False):
+            mut = _mutation_churn(index, pts, batches[1], batch)
+            rec[ds]["mutation"] = mut
+            mut_rows.append([
+                ds, f"{mut['n_inserts']}+{mut['n_deletes']}",
+                f"{mut['dirty_queries_per_s']:.0f}",
+                f"{mut['t_compact_s']:.3f}s",
+                f"{mut['post_compact_queries_per_s']:.0f}",
+                str(mut["post_compact_probe_compiles"]),
+            ])
     print_table(
         f"Serving: steady-state index.query batches "
         f"(backend={backend}, mesh={mesh_shape}, batch={batch})",
         ["dataset", "K", "build", "cold batch", "steady batch", "queries/s"],
         rows)
+    if mut_rows:
+        print_table(
+            "Mutation churn: dirty serving → compact() → generation swap",
+            ["dataset", "churn", "dirty q/s", "compact", "post q/s",
+             "probe compiles"],
+            mut_rows)
     save("serving", rec, args.out)
     return rec
 

@@ -81,12 +81,17 @@ class HybridConfig:
     # overrides).  Part of the AOT engine-cache key; resolved ONCE per
     # session (dense_join.resolve_backend).
     backend: str = "auto"
+    # mutable index (DESIGN.md §6): auto-compact when the delta buffer
+    # or the tombstone set exceeds this fraction of the base corpus
+    # (0.0 compacts after every mutation; math.inf never auto-compacts).
+    mutation_compact_frac: float = 0.25
     seed: int = 0
 
     def __post_init__(self):
         assert 0.0 <= self.beta <= 1.0 and 0.0 <= self.gamma <= 1.0
         assert 0.0 <= self.rho <= 1.0 and self.k >= 1 and self.m >= 1
         assert self.n_batches >= 1 and self.rebalance_sync_batches >= 0
+        assert self.mutation_compact_frac >= 0.0
         from repro.core.dense_join import BACKENDS
 
         assert self.backend in BACKENDS, self.backend
@@ -108,6 +113,8 @@ class JoinStats:
     t_sparse: float = 0.0
     t_brute: float = 0.0
     t_merge: float = 0.0          # collective top-K merge (sharded serving)
+    t_delta: float = 0.0          # delta-buffer top-K + mutation fold
+                                  # (mutable index, DESIGN.md §6)
     t_wall: float = 0.0           # scheduler wall time (engines overlap)
     t1_per_query: float = 0.0     # paper T₁ (sparse engine, per query)
     t2_per_query: float = 0.0     # paper T₂ (dense engine, per query)

@@ -59,6 +59,7 @@ def split_from_counts(
     m: int,
     gamma: float,
     rho: float,
+    net_adjust: jnp.ndarray = None,
 ) -> WorkSplit:
     """Engine assignment from per-query home-cell populations.
 
@@ -71,8 +72,19 @@ def split_from_counts(
     rather than a data-dependent loop.  ``home_counts`` may describe the
     indexed cloud itself (self-join, ``split_work``) or an arbitrary
     query set scored against the reference grid (``split_queries``).
+
+    ``net_adjust`` (optional, (|Q|,) i32) corrects each query's home-cell
+    population for pending index mutations — +inserted, −tombstoned
+    points in the cell — so classification AND the ρ-floor demotion
+    ranking see the *net* corpus density, not the stale build-time
+    counts (mutable index, DESIGN.md §6).  The returned ``home_counts``
+    are the adjusted ones.
     """
     nq = home_counts.shape[0]
+    if net_adjust is not None:
+        home_counts = jnp.maximum(
+            home_counts.astype(jnp.int32) + net_adjust.astype(jnp.int32), 0
+        )
     thresh = jnp.asarray(n_thresh(k, m, gamma), jnp.float32)
     dense0 = home_counts.astype(jnp.float32) >= thresh
 
@@ -118,6 +130,7 @@ def split_queries(
     k: int,
     gamma: float,
     rho: float,
+    net_adjust: jnp.ndarray = None,
 ) -> WorkSplit:
     """Foreign-query (R≠S) split: classify an arbitrary query set by the
     *reference-grid* density around each query.
@@ -129,4 +142,6 @@ def split_queries(
     low-density work the pyramid exists for."""
     ids = grid_lib.linearize(q_coords, index.radices)
     _, home_counts = grid_lib.lookup_cells(index, ids)
-    return split_from_counts(home_counts, k, index.m, gamma, rho)
+    return split_from_counts(
+        home_counts, k, index.m, gamma, rho, net_adjust=net_adjust
+    )

@@ -55,6 +55,7 @@ from repro.core import grid as grid_lib
 from repro.core import queue as queue_lib
 from repro.core import sparse_knn as sparse_lib
 from repro.core import splitter as split_lib
+from repro.runtime import mutation as mut_lib
 from repro.utils import pad_to, pow2_bucket
 
 # Process-global AOT executable cache: key -> jax.stages.Compiled.
@@ -74,6 +75,22 @@ def _engine_key(kind: str, args: tuple, kwargs: dict) -> tuple:
         (tuple(np.shape(leaf)), str(jnp.result_type(leaf))) for leaf in leaves
     )
     return (kind, treedef, avals, tuple(sorted(kwargs.items())))
+
+
+def run_engine(owner, kind: str, jitted, args: tuple, kwargs: dict):
+    """Lower/compile through the process-global AOT cache, charging the
+    miss to ``owner.compile_counts[kind]`` — the one engine-dispatch
+    path shared by ``KNNIndex`` and ``ShardedKNNIndex`` (tolerant of
+    kinds the owner's counter dict has not seen, e.g. the mutation
+    engines ``"delta"``/``"merge"``)."""
+    key = _engine_key(kind, args, kwargs)
+    ex = _ENGINE_CACHE.get(key)
+    if ex is None:
+        ex = jitted.lower(*args, **kwargs).compile()
+        _ENGINE_CACHE[key] = ex
+        owner.compile_counts[kind] = owner.compile_counts.get(kind, 0) + 1
+    owner.executables[kind] = ex
+    return ex
 
 
 def pad_rows_pow2(arr: jnp.ndarray, block: int) -> jnp.ndarray:
@@ -143,6 +160,34 @@ def _brute_engine(points_r, query_ids, queries_r=None, *, k, corpus_chunk,
     )
 
 
+@dataclasses.dataclass
+class _Generation:
+    """One immutable built snapshot of the reference cloud — everything
+    ``query`` reads that ``compact()`` replaces.  The index holds
+    ``self._live = (generation, mutations)`` and swaps that ONE
+    reference atomically, so an in-flight query (which snapshots the
+    pair once at entry) is unharmed by a concurrent compaction
+    (DESIGN.md §6)."""
+
+    points_ref: object
+    points_r: jnp.ndarray
+    dim_perm: Optional[jnp.ndarray]
+    eps: float
+    eps_beta: float
+    grid: grid_lib.GridIndex
+    pyramid: sparse_lib.Pyramid
+    home_counts: np.ndarray                 # (|D|,) self-cloud densities
+    # Self-split cache per k: (dense_ids, sparse_ids, threshold) —
+    # generation-owned because it derives from this grid's densities.
+    self_splits: Dict[int, Tuple[np.ndarray, np.ndarray, float]] = (
+        dataclasses.field(default_factory=dict)
+    )
+
+    @property
+    def n_base(self) -> int:
+        return int(self.points_r.shape[0])
+
+
 class KNNIndex:
     """A built reference cloud plus everything needed to serve queries.
 
@@ -156,6 +201,14 @@ class KNNIndex:
     same position i — meaningful when the query set aliases (a prefix
     of) the indexed cloud.  Without it, a point queried against its own
     index reports itself at distance 0 as its first neighbor.
+
+    The index is *mutable* (DESIGN.md §6): ``insert(points)`` /
+    ``delete(ids)`` absorb corpus changes into a delta buffer +
+    tombstone set that queries fold in exactly, and ``compact()``
+    rebuilds into a fresh generation (auto-triggered when either side
+    outgrows ``config.mutation_compact_frac·|D|``).  Global ids: build
+    row i is id i; the j-th insert since the last compaction is
+    ``n_base + j``; compaction renumbers (it returns the remap).
     """
 
     def __init__(
@@ -175,17 +228,29 @@ class KNNIndex:
         t_build: float = 0.0,
         compile_counts: Optional[Dict[str, int]] = None,
         executables: Optional[Dict[str, object]] = None,
+        epsilon_arg: Optional[float] = None,
     ):
         self.config = config
         self.backend = backend
-        self.points_ref = points_ref
-        self.points_r = points_r
-        self.dim_perm = dim_perm
-        self.eps = eps
-        self.eps_beta = eps_beta
-        self.grid = grid
-        self.pyramid = pyramid
-        self.home_counts = home_counts          # (|D|,) self-cloud densities
+        gen = _Generation(
+            points_ref=points_ref,
+            points_r=points_r,
+            dim_perm=dim_perm,
+            eps=eps,
+            eps_beta=eps_beta,
+            grid=grid,
+            pyramid=pyramid,
+            home_counts=home_counts,
+        )
+        # The atomic (generation, mutations) pair — see _Generation.
+        self._live: Tuple[_Generation, mut_lib.MutationState] = (
+            gen, mut_lib.MutationState.empty(int(points_r.shape[1]))
+        )
+        self.generation = 0
+        # The ε *argument* build() was given (None = re-select), replayed
+        # by compact() so a rebuilt generation is bit-identical to
+        # KNNIndex.build(net_corpus, config, epsilon_arg).
+        self._epsilon_arg = epsilon_arg
         self.t_select_eps = t_select_eps
         self.t_build = t_build
         # Shared with the owning session when one exists, so serving
@@ -195,8 +260,6 @@ class KNNIndex:
             else {"dense": 0, "sparse": 0, "brute": 0}
         )
         self.executables = executables if executables is not None else {}
-        # Self-split cache per k: (dense_ids, sparse_ids, threshold).
-        self._self_splits: Dict[int, Tuple[np.ndarray, np.ndarray, float]] = {}
 
     # -- construction ------------------------------------------------------
 
@@ -278,24 +341,87 @@ class KNNIndex:
             t_build=t_build,
             compile_counts=compile_counts,
             executables=executables,
+            epsilon_arg=epsilon,
         )
 
     # -- introspection -----------------------------------------------------
 
+    # Generation-owned state, exposed under the pre-mutability attribute
+    # names: these read the LIVE generation, so they move when compact()
+    # swaps it.
+    @property
+    def points_ref(self):
+        return self._live[0].points_ref
+
+    @property
+    def points_r(self):
+        return self._live[0].points_r
+
+    @property
+    def dim_perm(self):
+        return self._live[0].dim_perm
+
+    @property
+    def eps(self) -> float:
+        return self._live[0].eps
+
+    @property
+    def eps_beta(self) -> float:
+        return self._live[0].eps_beta
+
+    @property
+    def grid(self):
+        return self._live[0].grid
+
+    @property
+    def pyramid(self):
+        return self._live[0].pyramid
+
+    @property
+    def home_counts(self):
+        return self._live[0].home_counts
+
     @property
     def points(self):
-        """The indexed reference cloud as passed to ``build`` (original
-        dim order).  ``index.query(index.points, exclude_self=True)`` is
-        the classic self-join."""
+        """The live generation's base cloud in original dim order (the
+        array passed to ``build``, or the net corpus of the last
+        compaction).  ``index.query(index.points, exclude_self=True)``
+        is the classic self-join; with mutations pending, prefer
+        ``net_points()``."""
         return self.points_ref
 
     @property
+    def n_base(self) -> int:
+        """Base-corpus size of the live generation (grid/pyramid rows)."""
+        return self._live[0].n_base
+
+    @property
     def n_points(self) -> int:
-        return int(self.points_r.shape[0])
+        """LIVE corpus size: |base| − tombstones + live delta rows —
+        equals ``n_base`` on a clean index."""
+        gen, mut = self._live
+        return mut.n_live(gen.n_base)
+
+    @property
+    def n_delta(self) -> int:
+        """Live (non-tombstoned) delta-buffer rows."""
+        return self._live[1].n_delta_live
+
+    @property
+    def n_tombstones(self) -> int:
+        """Tombstoned BASE rows (deleted delta rows just vanish from the
+        buffer's live set and are not counted here)."""
+        return self._live[1].n_base_tombs
+
+    @property
+    def is_clean(self) -> bool:
+        """True iff no mutations are pending against the live generation
+        — queries take the original zero-overhead path."""
+        return self._live[1].is_clean
 
     @property
     def n_dims(self) -> int:
-        return int(self.points_r.shape[1])
+        return int(self._live[0].points_r.shape[1])
 
     @property
     def total_compiles(self) -> int:
@@ -312,24 +438,20 @@ class KNNIndex:
     # -- engine cache ------------------------------------------------------
 
     def _engine(self, kind: str, jitted, args: tuple, kwargs: dict):
-        key = _engine_key(kind, args, kwargs)
-        ex = _ENGINE_CACHE.get(key)
-        if ex is None:
-            ex = jitted.lower(*args, **kwargs).compile()
-            _ENGINE_CACHE[key] = ex
-            self.compile_counts[kind] += 1
-        self.executables[kind] = ex
-        return ex
+        return run_engine(self, kind, jitted, args, kwargs)
 
     # -- engine callables for the work queue -------------------------------
+    # Each closure binds one _Generation explicitly (NOT self.grid etc.)
+    # so a compact() mid-query cannot mix generations' state.
 
-    def _dense_fn(self, k: int, queries_rp, exclude_self: bool):
+    def _dense_fn(self, gen: _Generation, k: int, queries_rp,
+                  exclude_self: bool):
         cfg = self.config
-        eps_arg = jnp.float32(self.eps)
+        eps_arg = jnp.float32(gen.eps)
 
         def dense_fn(ids: np.ndarray):
             qp = hybrid_lib._pad_ids(ids, cfg.query_block)
-            args = (self.grid, self.points_r, qp, eps_arg)
+            args = (gen.grid, gen.points_r, qp, eps_arg)
             if queries_rp is not None:
                 args = args + (queries_rp,)
             kwargs = dict(
@@ -351,12 +473,13 @@ class KNNIndex:
 
         return dense_fn
 
-    def _sparse_fn(self, k: int, queries_rp, exclude_self: bool):
+    def _sparse_fn(self, gen: _Generation, k: int, queries_rp,
+                   exclude_self: bool):
         cfg = self.config
 
         def sparse_fn(ids: np.ndarray) -> queue_lib.AsyncEngineCall:
             qp = hybrid_lib._pad_ids(ids, cfg.query_block)
-            args = (self.pyramid, self.points_r, qp)
+            args = (gen.pyramid, gen.points_r, qp)
             if queries_rp is not None:
                 args = args + (queries_rp,)
             kwargs = dict(
@@ -379,12 +502,13 @@ class KNNIndex:
 
         return sparse_fn
 
-    def _brute_fn(self, k: int, queries_rp, exclude_self: bool):
+    def _brute_fn(self, gen: _Generation, k: int, queries_rp,
+                  exclude_self: bool):
         cfg = self.config
 
         def brute_fn(ids: np.ndarray):
             qp = hybrid_lib._pad_ids(ids, cfg.query_block)
-            args = (self.points_r, qp)
+            args = (gen.points_r, qp)
             if queries_rp is not None:
                 args = args + (queries_rp,)
             kwargs = dict(
@@ -400,15 +524,18 @@ class KNNIndex:
 
     # -- work split --------------------------------------------------------
 
-    def _self_split(self, k: int) -> Tuple[np.ndarray, np.ndarray, float]:
+    def _self_split(
+        self, gen: _Generation, k: int
+    ) -> Tuple[np.ndarray, np.ndarray, float]:
         """Dense/sparse assignment of the indexed cloud itself (cached
-        per k — home-cell densities never change after build)."""
-        hit = self._self_splits.get(k)
+        per k on the generation — home-cell densities never change
+        between compactions)."""
+        hit = gen.self_splits.get(k)
         if hit is not None:
             return hit
         cfg = self.config
         split = split_lib.split_from_counts(
-            jnp.asarray(self.home_counts), k, self.grid.m, cfg.gamma, cfg.rho
+            jnp.asarray(gen.home_counts), k, gen.grid.m, cfg.gamma, cfg.rho
         )
         to_dense = np.asarray(split.to_dense)
         out = (
@@ -416,94 +543,115 @@ class KNNIndex:
             np.nonzero(~to_dense)[0].astype(np.int32),
             float(split.threshold),
         )
-        self._self_splits[k] = out
+        gen.self_splits[k] = out
         return out
+
+    # -- mutations (DESIGN.md §6) ------------------------------------------
+
+    def insert(self, points) -> np.ndarray:
+        """Add points to the corpus (delta buffer).  Returns the global
+        ids assigned to them, valid as of this call's return (i.e.
+        post-compaction ids when the insert tripped the auto-compact
+        threshold).  O(1) amortized; queries stay exact."""
+        gen, mut = self._live
+        new_mut, gids = mut.with_insert(points, gen.n_base, self.n_dims)
+        self._live = (gen, new_mut)
+        remap = self._maybe_autocompact()
+        if remap is not None:
+            gids = remap[gids]
+        return gids
+
+    def delete(self, ids) -> None:
+        """Remove points by global id (tombstones).  Raises ValueError
+        on unknown or already-deleted ids — a silent double-delete is a
+        silent recall bug."""
+        gen, mut = self._live
+        self._live = (gen, mut.with_delete(ids, gen.n_base))
+        self._maybe_autocompact()
+
+    def net_points(self) -> np.ndarray:
+        """The LIVE corpus in original dim order, ascending global id —
+        ``KNNIndex.build(index.net_points(), config)`` is the index
+        ``compact()`` swaps in."""
+        gen, mut = self._live
+        return mut.net_corpus(np.asarray(gen.points_ref, np.float32))[0]
+
+    def _maybe_autocompact(self) -> Optional[np.ndarray]:
+        gen, mut = self._live
+        frac = self.config.mutation_compact_frac
+        if (mut.n_delta_rows > frac * gen.n_base
+                or mut.n_base_tombs > frac * gen.n_base):
+            return self.compact()
+        return None
+
+    def compact(self) -> np.ndarray:
+        """Fold all pending mutations into a fresh generation: rebuild
+        REORDER, ε selection (replaying build()'s ε argument), and the
+        grid/pyramid over the net corpus, then swap the (generation,
+        mutations) pair atomically — in-flight queries that already
+        snapshotted the old pair finish against it unharmed.
+
+        Returns the id remap: ``remap[old_gid]`` is the point's id in
+        the new generation, −1 if deleted.  Post-compaction queries are
+        bit-identical to ``KNNIndex.build(net_points, config, ε_arg)``
+        — same clean path over the same built state — and, because the
+        engine-cache keys see only pow2-bucketed shapes, a net corpus
+        in the same buckets recompiles nothing."""
+        gen, mut = self._live
+        if mut.is_clean:
+            return np.arange(gen.n_base, dtype=np.int64)
+        net, _ = mut.net_corpus(np.asarray(gen.points_ref, np.float32))
+        assert self.config.k < len(net), (
+            f"cannot compact: k={self.config.k} needs more than the "
+            f"{len(net)} live points"
+        )
+        remap = mut.remap_after_compact(gen.n_base)
+        fresh = KNNIndex.build(
+            net, self.config, self._epsilon_arg,
+            backend=self.backend,
+            compile_counts=self.compile_counts,
+            executables=self.executables,
+        )
+        self._live = (
+            fresh._live[0], mut_lib.MutationState.empty(self.n_dims)
+        )
+        self.generation += 1
+        self.t_select_eps = fresh.t_select_eps
+        self.t_build = fresh.t_build
+        return remap
 
     # -- the query pipeline ------------------------------------------------
 
-    def query(
-        self,
-        queries=None,
-        k: Optional[int] = None,
-        exclude_self: bool = False,
-    ) -> "hybrid_lib.KNNResult":
-        """Hybrid KNN of ``queries`` against the indexed reference cloud.
-
-        ``queries`` is an (|Q|, n) array in the reference cloud's
-        original dim order (REORDER is applied internally with the
-        reference permutation); ``None`` — or the indexed array object
-        itself — selects the self-join fast path, which reuses the
-        build-time coordinate caches.  ``k`` overrides the config's K
-        for this call.  ``exclude_self`` masks reference point i for
-        query row i (positional identity).
-
-        Steps 4–9 of Algorithm 1 run per call: the §V-D density split
-        classifies queries by the *reference grid's* population around
-        them, the §V-A work queue drains both engines, §V-E failures
-        reassign, and the brute lane certifies the residue — results
-        are exact for arbitrary R≠S query sets.
-        """
+    def _drain(self, gen: _Generation, kq: int, n_q: int, queries_rp,
+               dense_ids, sparse_ids, home_counts, exclude_self: bool):
+        """Steps 5–8 of Algorithm 1: the §V-A work queue over the three
+        engines.  Returns SQUARED distances (√ happens after any
+        merge-time folding, so folds compare like with like)."""
         cfg = self.config
-        kq = cfg.k if k is None else int(k)
-        assert kq >= 1
-        compiles_before = self.total_compiles
-        npts_ref = self.n_points
-        max_k = npts_ref - 1 if exclude_self else npts_ref
-        assert kq <= max_k, (
-            f"k={kq} exceeds the {max_k} reference points available"
-            f"{' after self-exclusion' if exclude_self else ''}"
-        )
-
-        is_self = queries is None or queries is self.points_ref
-        if is_self:
-            n_q = npts_ref
-            queries_rp = None
-            dense_ids, sparse_ids, threshold = self._self_split(kq)
-            home_counts = self.home_counts
-        else:
-            q = jnp.asarray(queries, jnp.float32)
-            assert q.ndim == 2 and q.shape[1] == self.n_dims, (
-                f"queries must be (|Q|, {self.n_dims}), got {q.shape}"
-            )
-            n_q = int(q.shape[0])
-            queries_r = q[:, self.dim_perm] if self.dim_perm is not None else q
-            # The query-shape bucket: engine-cache keys see this padded
-            # aval, so variable batch sizes share executables.
-            queries_rp = pad_rows_pow2(queries_r, cfg.query_block)
-            q_coords = grid_lib.compute_cell_coords(
-                self.grid, queries_r[:, : self.grid.m]
-            )
-            split = split_lib.split_queries(
-                self.grid, q_coords, kq, cfg.gamma, cfg.rho
-            )
-            to_dense = np.asarray(split.to_dense)
-            dense_ids = np.nonzero(to_dense)[0].astype(np.int32)
-            sparse_ids = np.nonzero(~to_dense)[0].astype(np.int32)
-            home_counts = np.asarray(split.home_counts)
-            threshold = float(split.threshold)
-
-        min_sparse = int(math.ceil(cfg.rho * n_q))
-        final_d, final_i, source, report = queue_lib.run_work_queue(
+        return queue_lib.run_work_queue(
             npts=n_q,
             k=kq,
             dense_ids=dense_ids,
             sparse_ids=sparse_ids,
             home_counts=home_counts,
-            dense_fn=self._dense_fn(kq, queries_rp, exclude_self),
-            sparse_fn=self._sparse_fn(kq, queries_rp, exclude_self),
-            brute_fn=self._brute_fn(kq, queries_rp, exclude_self),
+            dense_fn=self._dense_fn(gen, kq, queries_rp, exclude_self),
+            sparse_fn=self._sparse_fn(gen, kq, queries_rp, exclude_self),
+            brute_fn=self._brute_fn(gen, kq, queries_rp, exclude_self),
             n_batches=cfg.n_batches,
             online_rebalance=cfg.online_rebalance,
             sync_t1_after=cfg.rebalance_sync_batches,
-            min_sparse=min_sparse,
+            min_sparse=int(math.ceil(cfg.rho * n_q)),
             demote_quantum=cfg.query_block,
         )
 
-        stats = hybrid_lib.JoinStats(
-            epsilon=self.eps,
-            epsilon_beta=self.eps_beta,
-            n_dense=len(dense_ids),
-            n_sparse=len(sparse_ids),
+    def _stats(self, gen: _Generation, n_dense: int, n_sparse: int,
+               threshold: float, report, compiles_before: int,
+               t_delta: float = 0.0) -> "hybrid_lib.JoinStats":
+        return hybrid_lib.JoinStats(
+            epsilon=gen.eps,
+            epsilon_beta=gen.eps_beta,
+            n_dense=n_dense,
+            n_sparse=n_sparse,
             n_failed=report.n_failed,
             n_uncertified=report.n_uncertified,
             n_thresh=threshold,
@@ -512,7 +660,8 @@ class KNNIndex:
             t_dense=report.t_dense,
             t_sparse=report.t_sparse,
             t_brute=report.t_brute,
-            t_wall=report.t_wall,
+            t_delta=t_delta,
+            t_wall=report.t_wall + t_delta,
             t1_per_query=report.t1_per_query,
             t2_per_query=report.t2_per_query,
             rho_model=split_lib.rho_model(
@@ -527,9 +676,217 @@ class KNNIndex:
             rho_online=report.rho_online,
             n_engine_compiles=self.total_compiles - compiles_before,
         )
+
+    def query(
+        self,
+        queries=None,
+        k: Optional[int] = None,
+        exclude_self: bool = False,
+        *,
+        _net_cells=None,
+    ) -> "hybrid_lib.KNNResult":
+        """Hybrid KNN of ``queries`` against the indexed reference cloud.
+
+        ``queries`` is an (|Q|, n) array in the reference cloud's
+        original dim order (REORDER is applied internally with the
+        reference permutation); ``None`` — or the indexed array object
+        itself — selects the self-join fast path, which reuses the
+        build-time coordinate caches.  ``k`` overrides the config's K
+        for this call.  ``exclude_self`` masks reference point i for
+        query row i (positional identity — which is global-id identity;
+        with ``queries=None`` on a mutated index, each live point's own
+        global id is excluded).
+
+        Steps 4–9 of Algorithm 1 run per call: the §V-D density split
+        classifies queries by the *reference grid's* population around
+        them, the §V-A work queue drains both engines, §V-E failures
+        reassign, and the brute lane certifies the residue — results
+        are exact for arbitrary R≠S query sets.  With mutations pending
+        the delta buffer and tombstones fold in at merge time
+        (``_query_mutated``); a clean index takes this original path
+        untouched.
+
+        ``_net_cells`` is internal (sharded serving): raw reordered
+        (delta, tombstone) point arrays whose home cells adjust this
+        grid's density classification to the net corpus.
+        """
+        gen, mut = self._live
+        if not mut.is_clean:
+            assert _net_cells is None
+            return self._query_mutated(gen, mut, queries, k, exclude_self)
+        cfg = self.config
+        kq = cfg.k if k is None else int(k)
+        assert kq >= 1
+        compiles_before = self.total_compiles
+        npts_ref = gen.n_base
+        max_k = npts_ref - 1 if exclude_self else npts_ref
+        assert kq <= max_k, (
+            f"k={kq} exceeds the {max_k} reference points available"
+            f"{' after self-exclusion' if exclude_self else ''}"
+        )
+
+        is_self = queries is None or queries is gen.points_ref
+        if is_self:
+            n_q = npts_ref
+            queries_rp = None
+            dense_ids, sparse_ids, threshold = self._self_split(gen, kq)
+            home_counts = gen.home_counts
+        else:
+            q = jnp.asarray(queries, jnp.float32)
+            assert q.ndim == 2 and q.shape[1] == self.n_dims, (
+                f"queries must be (|Q|, {self.n_dims}), got {q.shape}"
+            )
+            n_q = int(q.shape[0])
+            queries_r = q[:, gen.dim_perm] if gen.dim_perm is not None else q
+            # The query-shape bucket: engine-cache keys see this padded
+            # aval, so variable batch sizes share executables.
+            queries_rp = pad_rows_pow2(queries_r, cfg.query_block)
+            q_coords = grid_lib.compute_cell_coords(
+                gen.grid, queries_r[:, : gen.grid.m]
+            )
+            net_adjust = None
+            if _net_cells is not None:
+                q_cells = np.asarray(
+                    grid_lib.linearize(q_coords, gen.grid.radices)
+                )
+                net_adjust = jnp.asarray(mut_lib.net_cell_adjustment(
+                    gen.grid, q_cells, *_net_cells
+                ))
+            split = split_lib.split_queries(
+                gen.grid, q_coords, kq, cfg.gamma, cfg.rho,
+                net_adjust=net_adjust,
+            )
+            to_dense = np.asarray(split.to_dense)
+            dense_ids = np.nonzero(to_dense)[0].astype(np.int32)
+            sparse_ids = np.nonzero(~to_dense)[0].astype(np.int32)
+            home_counts = np.asarray(split.home_counts)
+            threshold = float(split.threshold)
+
+        final_d, final_i, source, report = self._drain(
+            gen, kq, n_q, queries_rp, dense_ids, sparse_ids, home_counts,
+            exclude_self,
+        )
+        stats = self._stats(
+            gen, len(dense_ids), len(sparse_ids), threshold, report,
+            compiles_before,
+        )
         return hybrid_lib.KNNResult(
             dists=np.sqrt(np.maximum(final_d, 0.0)),
             ids=final_i,
+            source=source,
+            stats=stats,
+        )
+
+    def _query_mutated(
+        self, gen: _Generation, mut: "mut_lib.MutationState",
+        queries, k: Optional[int], exclude_self: bool,
+    ) -> "hybrid_lib.KNNResult":
+        """The dirty-index query path: main hybrid pipeline over the
+        base corpus at tombstone-headroomed k (no engine-level
+        exclusion), a brute top-K over the delta buffer (engine kind
+        ``"delta"``), then one merge-time fold (kind ``"merge"``) that
+        masks tombstones/self by global id and folds the delta block in
+        — exact for any mutation state, recompiling only when a pow2
+        bucket (query batch, delta buffer, tombstone headroom) grows."""
+        cfg = self.config
+        kq = cfg.k if k is None else int(k)
+        assert kq >= 1
+        compiles_before = self.total_compiles
+        n_base = gen.n_base
+        n_live = mut.n_live(n_base)
+        max_k = n_live - 1 if exclude_self else n_live
+        assert kq <= max_k, (
+            f"k={kq} exceeds the {max_k} live reference points available"
+            f"{' after self-exclusion' if exclude_self else ''}"
+        )
+
+        if queries is None:
+            net, net_gids = mut.net_corpus(
+                np.asarray(gen.points_ref, np.float32)
+            )
+            q = jnp.asarray(net)
+            excl = (net_gids.astype(np.int32) if exclude_self
+                    else np.full((len(net),), -2, np.int32))
+        else:
+            q = jnp.asarray(queries, jnp.float32)
+            assert q.ndim == 2 and q.shape[1] == self.n_dims, (
+                f"queries must be (|Q|, {self.n_dims}), got {q.shape}"
+            )
+            excl = (np.arange(q.shape[0], dtype=np.int32) if exclude_self
+                    else np.full((int(q.shape[0]),), -2, np.int32))
+        n_q = int(q.shape[0])
+        queries_r = q[:, gen.dim_perm] if gen.dim_perm is not None else q
+        queries_rp = pad_rows_pow2(queries_r, cfg.query_block)
+        qb = int(queries_rp.shape[0])
+
+        # §V-D split against the NET density: base grid counts corrected
+        # by the delta/tombstone cell populations (splitter.net_adjust).
+        pts_r = np.asarray(gen.points_r)
+        delta_live_r = mut.delta_r(gen.dim_perm)[mut.delta_live]
+        tomb_pts_r = pts_r[mut.base_tombs]
+        q_coords = grid_lib.compute_cell_coords(
+            gen.grid, queries_r[:, : gen.grid.m]
+        )
+        q_cells = np.asarray(grid_lib.linearize(q_coords, gen.grid.radices))
+        net_adjust = jnp.asarray(mut_lib.net_cell_adjustment(
+            gen.grid, q_cells, delta_live_r, tomb_pts_r
+        ))
+        split = split_lib.split_queries(
+            gen.grid, q_coords, kq, cfg.gamma, cfg.rho,
+            net_adjust=net_adjust,
+        )
+        to_dense = np.asarray(split.to_dense)
+        dense_ids = np.nonzero(to_dense)[0].astype(np.int32)
+        sparse_ids = np.nonzero(~to_dense)[0].astype(np.int32)
+        home_counts = np.asarray(split.home_counts)
+
+        # Main pipeline, widened so merge-time masking cannot starve the
+        # top-k: engine-level exclusion is OFF (exclusion is by global
+        # id in the fold; the base engines' positional identity is
+        # meaningless against net-corpus queries).
+        k_main = min(
+            kq + mut_lib.headroom_bucket(mut.n_base_tombs, exclude_self),
+            n_base,
+        )
+        final_d, final_i, source, report = self._drain(
+            gen, k_main, n_q, queries_rp, dense_ids, sparse_ids,
+            home_counts, False,
+        )
+
+        # Delta top-K + fold, through the same AOT engine cache.
+        t0 = time.perf_counter()
+        delta_pts_p, delta_gids = mut.padded_delta(gen.dim_perm, n_base)
+        k_delta = min(kq, delta_pts_p.shape[0])
+        excl_p = np.full((qb,), -2, np.int32)
+        excl_p[:n_q] = excl
+        dargs = (queries_rp, jnp.asarray(delta_pts_p),
+                 jnp.asarray(excl_p), jnp.asarray(delta_gids))
+        dkw = dict(k=k_delta, mode=cfg.kernel_mode)
+        dd, di = self._engine("delta", mut_lib.delta_topk, dargs, dkw)(*dargs)
+
+        md = np.full((qb, k_main), np.inf, np.float32)
+        mi = np.full((qb, k_main), -1, np.int32)
+        md[:n_q] = final_d
+        mi[:n_q] = final_i
+        fargs = (jnp.asarray(md), jnp.asarray(mi), dd, di,
+                 jnp.asarray(mut.tombstone_table()), jnp.asarray(excl_p))
+        fkw = dict(k=kq)
+        fd, fi = jax.block_until_ready(
+            self._engine("merge", mut_lib.fold_topk, fargs, fkw)(*fargs)
+        )
+        t_delta = time.perf_counter() - t0
+        fd = np.asarray(fd)[:n_q]
+        fi = np.asarray(fi)[:n_q]
+
+        stats = self._stats(
+            gen, len(dense_ids), len(sparse_ids), float(split.threshold),
+            report, compiles_before, t_delta=t_delta,
+        )
+        return hybrid_lib.KNNResult(
+            dists=np.sqrt(np.maximum(fd, 0.0)),
+            ids=fi,
+            # Source labels the main-pipeline engine; delta-buffer hits
+            # don't relabel (the fold is uniform merge work).
             source=source,
             stats=stats,
         )

@@ -122,6 +122,10 @@ class JoinSession:
             idx is not None
             and idx.points_ref is points
             and self._index_eps_arg == epsilon
+            # A mutated index no longer answers for the corpus it was
+            # built from: pending inserts/deletes make its net corpus
+            # differ from `points`, so rebuild rather than reuse.
+            and idx.is_clean
         ):
             return idx, False
         idx = KNNIndex.build(

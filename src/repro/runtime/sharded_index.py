@@ -53,9 +53,10 @@ from repro.core import dense_join as dense_lib
 from repro.core import distributed as dist_lib
 from repro.core import grid as grid_lib
 from repro.core import splitter as split_lib
+from repro.runtime import mutation as mut_lib
 from repro.runtime.knn_index import (
     _ENGINE_CACHE, KNNIndex, _engine_key, executable_memory_analysis,
-    select_epsilon,
+    pad_rows_pow2, run_engine, select_epsilon,
 )
 from repro.utils import cdiv, pow2_bucket
 
@@ -66,6 +67,31 @@ def _resolve_axes(mesh: Mesh, mesh_axis) -> Tuple[str, ...]:
     if isinstance(mesh_axis, str):
         return (mesh_axis,)
     return tuple(mesh_axis)
+
+
+@dataclasses.dataclass
+class _ShardedGeneration:
+    """One immutable built snapshot of the sharded reference cloud —
+    the sharded analogue of ``knn_index._Generation``: the index holds
+    ``self._live = (generation, mutations)`` and ``compact()`` swaps
+    that one reference atomically (DESIGN.md §6)."""
+
+    points_ref: object
+    points_r: jnp.ndarray
+    dim_perm: Optional[jnp.ndarray]
+    eps: float
+    eps_beta: float
+    shards: List[KNNIndex]
+    gids: np.ndarray                  # (P, shard_n) i32 global ids
+    n_pad: int
+
+    @property
+    def n_base(self) -> int:
+        return int(self.points_r.shape[0])
+
+    @property
+    def shard_n(self) -> int:
+        return int(self.gids.shape[1])
 
 
 class ShardedKNNIndex:
@@ -99,6 +125,7 @@ class ShardedKNNIndex:
         t_build: float = 0.0,
         compile_counts: Optional[Dict[str, int]] = None,
         executables: Optional[Dict[str, object]] = None,
+        epsilon_arg: Optional[float] = None,
     ):
         self.config = config
         self.backend = backend
@@ -106,15 +133,22 @@ class ShardedKNNIndex:
         self.axes = axes
         self.n_shards = len(shards)
         self.merge = dist_lib.merge_strategy(self.n_shards, merge)
-        self.points_ref = points_ref
-        self.points_r = points_r
-        self.dim_perm = dim_perm
-        self.eps = eps
-        self.eps_beta = eps_beta
-        self.shards = shards
-        self.gids = gids                      # (P, shard_n) i32 global ids
-        self.shard_n = int(gids.shape[1])
-        self.n_pad = n_pad
+        gen = _ShardedGeneration(
+            points_ref=points_ref,
+            points_r=points_r,
+            dim_perm=dim_perm,
+            eps=eps,
+            eps_beta=eps_beta,
+            shards=shards,
+            gids=gids,
+            n_pad=n_pad,
+        )
+        # The atomic (generation, mutations) pair — see _ShardedGeneration.
+        self._live: Tuple[_ShardedGeneration, mut_lib.MutationState] = (
+            gen, mut_lib.MutationState.empty(int(points_r.shape[1]))
+        )
+        self.generation = 0
+        self._epsilon_arg = epsilon_arg
         self.t_select_eps = t_select_eps
         self.t_build = t_build
         if compile_counts is None:
@@ -122,7 +156,9 @@ class ShardedKNNIndex:
         compile_counts.setdefault("merge", 0)
         self.compile_counts = compile_counts
         self.executables = executables if executables is not None else {}
-        self._merge_jits: Dict[int, object] = {}
+        # Keyed (k_out, dedup): dedup depends on the live generation's
+        # n_pad, which compaction may change.
+        self._merge_jits: Dict[Tuple[int, bool], object] = {}
 
     # -- construction ------------------------------------------------------
 
@@ -232,22 +268,78 @@ class ShardedKNNIndex:
             points_ref=points, points_r=points_r, dim_perm=dim_perm,
             eps=eps, eps_beta=eps_beta, shards=shards, gids=gids,
             n_pad=n_pad, t_select_eps=t_select, t_build=t_build,
-            compile_counts=counts, executables=execs,
+            compile_counts=counts, executables=execs, epsilon_arg=epsilon,
         )
 
     # -- introspection -----------------------------------------------------
+
+    # Generation-owned state under the pre-mutability attribute names
+    # (reads the LIVE generation; compact() swaps it).
+    @property
+    def points_ref(self):
+        return self._live[0].points_ref
+
+    @property
+    def points_r(self):
+        return self._live[0].points_r
+
+    @property
+    def dim_perm(self):
+        return self._live[0].dim_perm
+
+    @property
+    def eps(self) -> float:
+        return self._live[0].eps
+
+    @property
+    def eps_beta(self) -> float:
+        return self._live[0].eps_beta
+
+    @property
+    def shards(self) -> List[KNNIndex]:
+        return self._live[0].shards
+
+    @property
+    def gids(self) -> np.ndarray:
+        return self._live[0].gids
+
+    @property
+    def shard_n(self) -> int:
+        return self._live[0].shard_n
+
+    @property
+    def n_pad(self) -> int:
+        return self._live[0].n_pad
 
     @property
     def points(self):
         return self.points_ref
 
     @property
+    def n_base(self) -> int:
+        return self._live[0].n_base
+
+    @property
     def n_points(self) -> int:
-        return int(self.points_r.shape[0])
+        """LIVE corpus size (= ``n_base`` on a clean index)."""
+        gen, mut = self._live
+        return mut.n_live(gen.n_base)
+
+    @property
+    def n_delta(self) -> int:
+        return self._live[1].n_delta_live
+
+    @property
+    def n_tombstones(self) -> int:
+        return self._live[1].n_base_tombs
+
+    @property
+    def is_clean(self) -> bool:
+        return self._live[1].is_clean
 
     @property
     def n_dims(self) -> int:
-        return int(self.points_r.shape[1])
+        return int(self._live[0].points_r.shape[1])
 
     @property
     def mesh_shape(self) -> Tuple[int, ...]:
@@ -266,18 +358,20 @@ class ShardedKNNIndex:
     # -- collective merge engine -------------------------------------------
 
     def _merge(self, k_out: int, dists: np.ndarray, ids: np.ndarray,
-               excl: np.ndarray):
+               excl: np.ndarray, n_pad: int):
         """Run the collective merge through the AOT engine cache (kind
         ``"merge"``): same zero-compile steady-state contract as the
-        dense/sparse/brute engines."""
-        jitted = self._merge_jits.get(k_out)
-        dedup = self.n_pad > 0
+        dense/sparse/brute engines.  ``n_pad`` is the LIVE generation's
+        pad count (dedup is only needed when a shard carries a
+        duplicated pad row)."""
+        dedup = n_pad > 0
+        jitted = self._merge_jits.get((k_out, dedup))
         if jitted is None:
             jitted = dist_lib.collective_topk_merge(
                 self.mesh, self.axes, k=k_out, strategy=self.merge,
                 dedup=dedup,
             )
-            self._merge_jits[k_out] = jitted
+            self._merge_jits[(k_out, dedup)] = jitted
         args = (dists, ids, excl)
         kwargs = dict(k=k_out, strategy=self.merge, dedup=dedup,
                       axes=self.axes, mesh=self.mesh)
@@ -289,6 +383,79 @@ class ShardedKNNIndex:
             self.compile_counts["merge"] += 1
         self.executables["merge"] = ex
         return jax.block_until_ready(ex(*args))
+
+    # -- mutations (DESIGN.md §6) ------------------------------------------
+    # Mutations live at the sharded level: shards stay clean single-
+    # device indexes, the delta buffer / tombstones fold in after the
+    # collective merge, and compact() re-partitions the net corpus.
+
+    def insert(self, points) -> np.ndarray:
+        """Add points (delta buffer).  Returns their global ids, valid
+        as of this call's return (post-compaction ids if the insert
+        tripped the auto-compact threshold)."""
+        gen, mut = self._live
+        new_mut, gids = mut.with_insert(points, gen.n_base, self.n_dims)
+        self._live = (gen, new_mut)
+        remap = self._maybe_autocompact()
+        if remap is not None:
+            gids = remap[gids]
+        return gids
+
+    def delete(self, ids) -> None:
+        """Remove points by global id (tombstones).  Raises ValueError
+        on unknown or already-deleted ids."""
+        gen, mut = self._live
+        self._live = (gen, mut.with_delete(ids, gen.n_base))
+        self._maybe_autocompact()
+
+    def net_points(self) -> np.ndarray:
+        """The LIVE corpus in original dim order, ascending global id."""
+        gen, mut = self._live
+        return mut.net_corpus(np.asarray(gen.points_ref, np.float32))[0]
+
+    def _maybe_autocompact(self) -> Optional[np.ndarray]:
+        gen, mut = self._live
+        frac = self.config.mutation_compact_frac
+        if (mut.n_delta_rows > frac * gen.n_base
+                or mut.n_base_tombs > frac * gen.n_base):
+            return self.compact()
+        return None
+
+    def compact(self) -> np.ndarray:
+        """Rebuild the sharded index over the net corpus — global
+        REORDER + ε (replaying build()'s ε argument), re-partition,
+        shard_map grid/pyramid build — into a fresh generation, swapped
+        atomically.  Returns the old-id → new-id remap (−1 deleted).
+        Same mesh/axes/merge strategy; the compile counters and
+        executables carry over, and same-bucket shard shapes reuse every
+        cached engine."""
+        gen, mut = self._live
+        if mut.is_clean:
+            return np.arange(gen.n_base, dtype=np.int64)
+        net, _ = mut.net_corpus(np.asarray(gen.points_ref, np.float32))
+        assert self.config.k < len(net), (
+            f"cannot compact: k={self.config.k} needs more than the "
+            f"{len(net)} live points"
+        )
+        assert len(net) >= self.n_shards, (
+            f"cannot compact: {len(net)} live points cannot shard over "
+            f"{self.n_shards} devices"
+        )
+        remap = mut.remap_after_compact(gen.n_base)
+        fresh = ShardedKNNIndex.build(
+            net, self.config, self._epsilon_arg,
+            mesh=self.mesh, mesh_axis=self.axes, merge=self.merge,
+            backend=self.backend,
+            compile_counts=self.compile_counts,
+            executables=self.executables,
+        )
+        self._live = (
+            fresh._live[0], mut_lib.MutationState.empty(self.n_dims)
+        )
+        self.generation += 1
+        self.t_select_eps = fresh.t_select_eps
+        self.t_build = fresh.t_build
+        return remap
 
     # -- the query pipeline ------------------------------------------------
 
@@ -306,11 +473,16 @@ class ShardedKNNIndex:
         — density split against the shard's grid, work queue, failure
         lanes, brute certification), then the P shard-local top-k_eff
         candidate sets meet in the collective merge.  ``exclude_self``
-        masks global reference id i for query row i at merge time."""
+        masks global reference id i for query row i at merge time.
+        With mutations pending the delta buffer and tombstones fold in
+        after the collective merge (``_query_mutated``)."""
+        gen, mut = self._live
+        if not mut.is_clean:
+            return self._query_mutated(gen, mut, queries, k, exclude_self)
         cfg = self.config
         kq = cfg.k if k is None else int(k)
         assert kq >= 1
-        npts = self.n_points
+        npts = gen.n_base
         max_k = npts - 1 if exclude_self else npts
         assert kq <= max_k, (
             f"k={kq} exceeds the {max_k} reference points available"
@@ -318,9 +490,9 @@ class ShardedKNNIndex:
         )
         compiles_before = self.total_compiles
 
-        is_self = queries is None or queries is self.points_ref
+        is_self = queries is None or queries is gen.points_ref
         if is_self:
-            queries_r = self.points_r
+            queries_r = gen.points_r
             n_q = npts
         else:
             q = jnp.asarray(queries, jnp.float32)
@@ -328,35 +500,164 @@ class ShardedKNNIndex:
                 f"queries must be (|Q|, {self.n_dims}), got {q.shape}"
             )
             n_q = int(q.shape[0])
-            queries_r = q[:, self.dim_perm] if self.dim_perm is not None else q
+            queries_r = q[:, gen.dim_perm] if gen.dim_perm is not None else q
 
         # Candidate head-room: +1 when the merge masks the self id, +1
         # when a shard may carry one duplicated pad row (module
         # docstring) — capped at the shard size, where a shard returns
         # its whole sub-cloud and nothing can be lost.
-        k_extra = (1 if exclude_self else 0) + (1 if self.n_pad else 0)
-        k_eff = min(kq + k_extra, self.shard_n)
+        k_extra = (1 if exclude_self else 0) + (1 if gen.n_pad else 0)
+        k_eff = min(kq + k_extra, gen.shard_n)
 
-        # Shard-local hybrid serves: equal shapes ⇒ shard 0 compiles,
-        # shards 1..P−1 ride the same engine-cache entries.
+        excl = (np.arange(n_q, dtype=np.int32) if exclude_self
+                else np.full((n_q,), -2, np.int32))
+        md, mi, sources, shard_stats, t_merge = self._shard_serve(
+            gen, kq, k_eff, n_q, queries_r, excl
+        )
+        md = md[:n_q]
+        mi = mi[:n_q]
+
+        stats = self._stats(
+            gen, shard_stats, t_merge, compiles_before
+        )
+        return hybrid_lib.KNNResult(
+            dists=md,
+            ids=mi,
+            # Per-query source over P pipelines: report the most
+            # expensive path any shard took (0 dense < 1 sparse <
+            # 2 brute) — the serving-latency-relevant label.
+            source=np.max(sources, axis=0),
+            stats=stats,
+        )
+
+    def _query_mutated(
+        self, gen: _ShardedGeneration, mut: "mut_lib.MutationState",
+        queries, k: Optional[int], exclude_self: bool,
+    ) -> "hybrid_lib.KNNResult":
+        """The dirty sharded query path: per-shard pipelines + the
+        collective merge run over the BASE corpus at tombstone-
+        headroomed k (exclusion deferred), then the same delta-buffer
+        top-K and merge-time fold as the single-device path
+        (``knn_index.KNNIndex._query_mutated``) mask tombstones/self by
+        global id and fold the inserts in — exact for any mutation
+        state.  Shards stay clean; mutations live at this level only."""
+        cfg = self.config
+        kq = cfg.k if k is None else int(k)
+        assert kq >= 1
+        compiles_before = self.total_compiles
+        n_base = gen.n_base
+        n_live = mut.n_live(n_base)
+        max_k = n_live - 1 if exclude_self else n_live
+        assert kq <= max_k, (
+            f"k={kq} exceeds the {max_k} live reference points available"
+            f"{' after self-exclusion' if exclude_self else ''}"
+        )
+
+        if queries is None:
+            net, net_gids = mut.net_corpus(
+                np.asarray(gen.points_ref, np.float32)
+            )
+            q = jnp.asarray(net)
+            excl = (net_gids.astype(np.int32) if exclude_self
+                    else np.full((len(net),), -2, np.int32))
+        else:
+            q = jnp.asarray(queries, jnp.float32)
+            assert q.ndim == 2 and q.shape[1] == self.n_dims, (
+                f"queries must be (|Q|, {self.n_dims}), got {q.shape}"
+            )
+            excl = (np.arange(q.shape[0], dtype=np.int32) if exclude_self
+                    else np.full((int(q.shape[0]),), -2, np.int32))
+        n_q = int(q.shape[0])
+        queries_r = q[:, gen.dim_perm] if gen.dim_perm is not None else q
+
+        # Net-density correction per shard: every shard's split sees all
+        # live delta points plus its OWN tombstoned rows (other shards'
+        # tombstones are not in its grid).
+        pts_r = np.asarray(gen.points_r)
+        delta_live_r = mut.delta_r(gen.dim_perm)[mut.delta_live]
+        shard_net_cells = []
+        for p in range(self.n_shards):
+            own = mut.base_tombs[np.isin(mut.base_tombs, gen.gids[p])]
+            shard_net_cells.append((delta_live_r, pts_r[own]))
+
+        # Headroom so merge-time masking cannot starve the top-k; the
+        # collective runs at k_out with no exclusion (deferred to the
+        # fold), each shard at k_out + the usual pad-row slack.
+        k_out = min(
+            kq + mut_lib.headroom_bucket(mut.n_base_tombs, exclude_self),
+            n_base,
+        )
+        k_eff = min(k_out + (1 if gen.n_pad else 0), gen.shard_n)
+        md, mi, sources, shard_stats, t_merge = self._shard_serve(
+            gen, k_out, k_eff, n_q, queries_r,
+            np.full((n_q,), -2, np.int32), shard_net_cells,
+        )
+        qb = int(md.shape[0])
+
+        # Delta top-K + fold, through the shared AOT engine kinds
+        # ("delta", "merge") — see runtime.mutation.
+        t0 = time.perf_counter()
+        queries_rp = pad_rows_pow2(queries_r, cfg.query_block)
+        delta_pts_p, delta_gids = mut.padded_delta(gen.dim_perm, n_base)
+        k_delta = min(kq, delta_pts_p.shape[0])
+        excl_p = np.full((qb,), -2, np.int32)
+        excl_p[:n_q] = excl
+        dargs = (queries_rp, jnp.asarray(delta_pts_p),
+                 jnp.asarray(excl_p), jnp.asarray(delta_gids))
+        dkw = dict(k=k_delta, mode=cfg.kernel_mode)
+        dd, di = run_engine(
+            self, "delta", mut_lib.delta_topk, dargs, dkw
+        )(*dargs)
+        # Shard distances are post-√ while the delta engine returns
+        # squared values — bring the delta block into the merged space
+        # before folding.
+        dd = np.sqrt(np.maximum(np.asarray(dd), 0.0))
+        fargs = (jnp.asarray(md), jnp.asarray(mi), jnp.asarray(dd),
+                 jnp.asarray(np.asarray(di)),
+                 jnp.asarray(mut.tombstone_table()), jnp.asarray(excl_p))
+        fkw = dict(k=kq)
+        fd, fi = jax.block_until_ready(run_engine(
+            self, "merge", mut_lib.fold_topk, fargs, fkw
+        )(*fargs))
+        t_delta = time.perf_counter() - t0
+
+        stats = self._stats(
+            gen, shard_stats, t_merge, compiles_before, t_delta=t_delta
+        )
+        return hybrid_lib.KNNResult(
+            dists=np.asarray(fd)[:n_q],
+            ids=np.asarray(fi)[:n_q],
+            source=np.max(sources, axis=0),
+            stats=stats,
+        )
+
+    def _shard_serve(self, gen: _ShardedGeneration, k_out: int,
+                     k_eff: int, n_q: int, queries_r, excl: np.ndarray,
+                     shard_net_cells=None):
+        """Per-shard hybrid serves + the collective top-K merge: shard
+        p answers k_eff candidates over its sub-cloud (equal shapes ⇒
+        shard 0 compiles, shards 1..P−1 ride the same engine-cache
+        entries), local ids map to global, and the collective reduces
+        the P blocks to k_out over the query-shape bucket (same pow2
+        rounding as the per-shard engines, so batch-size sweeps share
+        merge executables too).  Returns the merged (qb, k_out) block
+        (post-√ distances), per-shard sources/stats, and the merge
+        time."""
+        cfg = self.config
         shard_d = np.empty((self.n_shards, n_q, k_eff), np.float32)
         shard_i = np.empty((self.n_shards, n_q, k_eff), np.int32)
         sources = np.empty((self.n_shards, n_q), np.int32)
         shard_stats = []
-        for p, shard in enumerate(self.shards):
-            res = shard.query(queries_r, k=k_eff)
+        for p, shard in enumerate(gen.shards):
+            nc = None if shard_net_cells is None else shard_net_cells[p]
+            res = shard.query(queries_r, k=k_eff, _net_cells=nc)
             shard_d[p] = res.dists
-            gid = self.gids[p]
+            gid = gen.gids[p]
             li = res.ids
             shard_i[p] = np.where(li >= 0, gid[np.clip(li, 0, None)], -1)
             sources[p] = res.source
             shard_stats.append(res.stats)
 
-        # Collective merge over the query-shape bucket (same pow2
-        # rounding as the per-shard engines, so batch-size sweeps share
-        # merge executables too).
-        excl = (np.arange(n_q, dtype=np.int32) if exclude_self
-                else np.full((n_q,), -2, np.int32))
         qb = pow2_bucket(n_q, cfg.query_block)
         dpad = np.full((self.n_shards, qb, k_eff), np.inf, np.float32)
         ipad = np.full((self.n_shards, qb, k_eff), -1, np.int32)
@@ -366,16 +667,18 @@ class ShardedKNNIndex:
         epad[:n_q] = excl
 
         t0 = time.perf_counter()
-        md, mi = self._merge(kq, dpad, ipad, epad)
+        md, mi = self._merge(k_out, dpad, ipad, epad, gen.n_pad)
         t_merge = time.perf_counter() - t0
-        md = np.asarray(md)[:n_q]
-        mi = np.asarray(mi)[:n_q]
+        return (np.asarray(md), np.asarray(mi), sources, shard_stats,
+                t_merge)
 
+    def _stats(self, gen: _ShardedGeneration, shard_stats, t_merge: float,
+               compiles_before: int, t_delta: float = 0.0):
         t1 = float(np.mean([s.t1_per_query for s in shard_stats]))
         t2 = float(np.mean([s.t2_per_query for s in shard_stats]))
-        stats = hybrid_lib.JoinStats(
-            epsilon=self.eps,
-            epsilon_beta=self.eps_beta,
+        return hybrid_lib.JoinStats(
+            epsilon=gen.eps,
+            epsilon_beta=gen.eps_beta,
             # Engine-assignment counts sum over shards (each shard
             # classifies the full batch against ITS grid): totals are
             # P·|Q|, the actual work dispatched.
@@ -387,7 +690,8 @@ class ShardedKNNIndex:
             t_dense=sum(s.t_dense for s in shard_stats),
             t_sparse=sum(s.t_sparse for s in shard_stats),
             t_brute=sum(s.t_brute for s in shard_stats),
-            t_wall=sum(s.t_wall for s in shard_stats) + t_merge,
+            t_delta=t_delta,
+            t_wall=sum(s.t_wall for s in shard_stats) + t_merge + t_delta,
             t_merge=t_merge,
             t1_per_query=t1,
             t2_per_query=t2,
@@ -403,13 +707,4 @@ class ShardedKNNIndex:
             rho_online=float(np.mean(
                 [s.rho_online for s in shard_stats])),
             n_engine_compiles=self.total_compiles - compiles_before,
-        )
-        return hybrid_lib.KNNResult(
-            dists=md,
-            ids=mi,
-            # Per-query source over P pipelines: report the most
-            # expensive path any shard took (0 dense < 1 sparse <
-            # 2 brute) — the serving-latency-relevant label.
-            source=np.max(sources, axis=0),
-            stats=stats,
         )

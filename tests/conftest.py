@@ -18,12 +18,5 @@ def make_mixture(n_dense=600, n_sparse=200, dim=8, seed=0):
     return np.concatenate([dense, sparse]).astype(np.float32)
 
 
-def oracle_knn(pts, k, queries=None, exclude_self=True):
-    """O(N²) float64 oracle: (sorted sq-dists, ids)."""
-    q = pts if queries is None else queries
-    d2 = ((q[:, None, :].astype(np.float64) -
-           pts[None, :, :].astype(np.float64)) ** 2).sum(-1)
-    if exclude_self and queries is None:
-        np.fill_diagonal(d2, np.inf)
-    idx = np.argsort(d2, axis=1)[:, :k]
-    return np.take_along_axis(d2, idx, axis=1), idx
+# The float64 brute-force reference lives in tests/oracle.py
+# (oracle_knn / mutated_oracle) — import it from there.

@@ -1,0 +1,56 @@
+"""Shared float64 brute-force KNN oracle (single source of truth).
+
+Every suite used to re-implement the materialized O(|Q|·|D|) reference
+— `test_index_query._oracle`, `conftest.oracle_knn`,
+`test_sharded_index.oracle64` — with slightly different conventions
+(squared vs √, diagonal masking, returned fields).  This module is the
+one implementation they all share, plus the mutation-sequence oracle
+`test_mutable_index` is built on.  Plain module (not a fixture) so the
+fake-device subprocess tests can import it too (`PYTHONPATH` includes
+`tests/`).
+"""
+import numpy as np
+
+
+def oracle_knn(points, queries=None, *, k, exclude_self=False,
+               squared=False):
+    """O(|Q|·|D|) float64 materialized oracle: ``(dists, ids)``.
+
+    Distances are ascending per row; the argsort is stable, so ties
+    break toward the lower id.  ``queries=None`` is the self-query
+    (queries = points).  ``exclude_self`` masks ``d[i, i]`` for
+    ``i < min(|Q|, |D|)`` — the positional-identity exclusion the
+    engines implement, meaningful for self-queries and for query sets
+    aliasing a prefix of the corpus.  ``squared=True`` returns squared
+    L2 (the kernels' pre-√ space)."""
+    pts = np.asarray(points, np.float64)
+    q = pts if queries is None else np.asarray(queries, np.float64)
+    d2 = ((q[:, None, :] - pts[None, :, :]) ** 2).sum(-1)
+    if exclude_self:
+        n = min(q.shape[0], pts.shape[0])
+        d2[np.arange(n), np.arange(n)] = np.inf
+    ids = np.argsort(d2, axis=1, kind="stable")[:, :k]
+    d = np.take_along_axis(d2, ids, axis=1)
+    return (d if squared else np.sqrt(d)), ids
+
+
+def mutated_oracle(base, inserts=(), deletes=()):
+    """The net corpus after a mutation sequence, in the mutable index's
+    global-id order: base rows (ids ``0..|D|−1``) then inserted rows
+    (ids ``|D|+j`` in insertion order), minus deleted global ids.
+
+    Returns ``(net_points, gids)`` where ``gids[r]`` is net row r's
+    global id in the mutated index — so
+    ``KNNIndex.build(net_points, cfg).query(q)`` is the post-compaction
+    reference, and ``oracle_knn(net_points, q, k=k)`` with result ids
+    mapped through ``gids`` is the pre-compaction one."""
+    base = np.asarray(base, np.float64)
+    ins = (np.asarray(inserts, np.float64) if len(inserts)
+           else np.empty((0, base.shape[1])))
+    full = np.concatenate([base, ins])
+    live = np.ones(len(full), bool)
+    dels = np.asarray(list(deletes), np.int64)
+    if dels.size:
+        live[dels] = False
+    gids = np.flatnonzero(live).astype(np.int64)
+    return full[live].astype(np.float32), gids

@@ -4,7 +4,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from conftest import make_mixture, oracle_knn
+from conftest import make_mixture
+from oracle import oracle_knn
 from repro.core import (
     HybridConfig, HybridKNNJoin, brute_knn, refimpl_knn, self_join_brute,
 )
@@ -26,7 +27,7 @@ def test_hybrid_join_exact_all_params(beta, gamma, rho):
     k = 4
     res = HybridKNNJoin(HybridConfig(
         k=k, m=4, beta=beta, gamma=gamma, rho=rho)).join(pts)
-    od, _ = oracle_knn(pts, k)
+    od, _ = oracle_knn(pts, k=k, exclude_self=True, squared=True)
     np.testing.assert_allclose(
         np.sort(res.dists, axis=1), np.sqrt(od), rtol=1e-4, atol=1e-4)
     assert not (res.ids == np.arange(len(pts))[:, None]).any(), "self in KNN"
@@ -45,7 +46,7 @@ def test_hybrid_join_high_dim_m_projection():
     """m < n indexing (§IV-C) keeps exactness."""
     pts = make_mixture(250, 100, dim=40, seed=3)
     res = HybridKNNJoin(HybridConfig(k=5, m=6)).join(pts)
-    od, _ = oracle_knn(pts, 5)
+    od, _ = oracle_knn(pts, k=5, exclude_self=True, squared=True)
     np.testing.assert_allclose(
         np.sort(res.dists, axis=1), np.sqrt(od), rtol=1e-4, atol=1e-4)
 
@@ -80,7 +81,7 @@ def test_beta_increases_epsilon():
 def test_refimpl_matches_oracle():
     pts = make_mixture(200, 100, dim=8, seed=7)
     res, rank_times = refimpl_knn(pts, k=4, n_ranks=3)
-    od, _ = oracle_knn(pts, 4)
+    od, _ = oracle_knn(pts, k=4, exclude_self=True, squared=True)
     np.testing.assert_allclose(
         np.sort(res.dists, axis=1), np.sqrt(od), rtol=1e-4, atol=1e-4)
     assert len(rank_times) == 3 and all(t >= 0 for t in rank_times)
@@ -89,7 +90,7 @@ def test_refimpl_matches_oracle():
 def test_brute_self_join_matches_oracle():
     pts = make_mixture(150, 80, dim=12, seed=8)
     d, i = self_join_brute(jnp.asarray(pts), k=6, kernel_mode="ref")
-    od, oi = oracle_knn(pts, 6)
+    od, oi = oracle_knn(pts, k=6, exclude_self=True, squared=True)
     np.testing.assert_allclose(np.asarray(d), od, rtol=1e-4, atol=1e-4)
 
 
@@ -98,7 +99,7 @@ def test_brute_knn_query_subset():
     q = pts[:20]
     d, i = brute_knn(jnp.asarray(pts), jnp.asarray(q),
                      jnp.arange(20, dtype=jnp.int32), k=3, kernel_mode="ref")
-    od, _ = oracle_knn(pts, 3)
+    od, _ = oracle_knn(pts, k=3, exclude_self=True, squared=True)
     np.testing.assert_allclose(np.asarray(d), od[:20], rtol=1e-4, atol=1e-4)
 
 

@@ -12,7 +12,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from conftest import make_mixture, oracle_knn
+from conftest import make_mixture
+from oracle import oracle_knn
 from test_tiled_backend import (_assert_equal_mod_boundary, _dense_fixture,
                                 _ids_match_mod_ties)
 from repro.core import HybridConfig, brute_knn
@@ -150,7 +151,8 @@ def test_dense_fused_matches_brute_on_success():
     pts_r, idx, qids, eps = _dense_fixture(m=4)
     fus = dense_lib.dense_join(
         idx, pts_r, qids, eps, k=k, budget=1024, backend="fused")
-    od, _ = oracle_knn(np.asarray(pts_r), k)
+    od, _ = oracle_knn(np.asarray(pts_r), k=k, exclude_self=True,
+                       squared=True)
     ok = ~np.asarray(fus.failed)
     assert ok.any(), "fixture must produce dense successes"
     np.testing.assert_allclose(

@@ -6,6 +6,7 @@ import numpy as np
 import pytest
 
 from conftest import make_mixture
+from oracle import oracle_knn
 from repro.core import HybridConfig, HybridKNNJoin
 from repro.runtime import JoinSession, KNNIndex, clear_engine_cache
 
@@ -27,13 +28,8 @@ def _foreign(seed=1, n=135, dim=6):
 
 
 def _oracle(refs, queries, k, mask_diag=False):
-    """Float64 materialized oracle over original (un-reordered) dims."""
-    d2 = ((queries[:, None, :].astype(np.float64)
-           - refs[None].astype(np.float64)) ** 2).sum(-1)
-    if mask_diag:
-        np.fill_diagonal(d2, np.inf)
-    order = np.argsort(d2, axis=1, kind="stable")[:, :k]
-    return np.sqrt(np.take_along_axis(d2, order, axis=1)), order
+    """Shared float64 oracle (tests/oracle.py), √-distance convention."""
+    return oracle_knn(refs, queries, k=k, exclude_self=mask_diag)
 
 
 def _assert_exact(res, refs, queries, k, mask_diag=False, atol=1e-4):

@@ -1,0 +1,435 @@
+"""Mutable-index acceptance harness (ISSUE 6, DESIGN.md §6).
+
+The contract under test: a ``KNNIndex`` with pending inserts/deletes
+answers every query *exactly* against the net corpus (delta buffer +
+tombstone fold at merge time), and ``compact()`` swaps in a fresh
+generation whose answers are BIT-identical to ``KNNIndex.build`` on
+the net corpus — recompiling nothing when the pow2 shape buckets are
+unchanged.  Covered here:
+
+  * seeded mutation sequences (insert / delete / query / compact) vs
+    the float64 mutation oracle, across every backend;
+  * hypothesis-driven random interleavings (gated on hypothesis being
+    installed — it is a dev-only dependency);
+  * targeted regressions: delete-then-reinsert, deleting a query's
+    entire k-neighborhood, delta-buffer overflow auto-compaction, and
+    the zero-compile generation-swap probe;
+  * the splitter's net-density correction (``net_adjust``);
+  * the sharded index path (fake-device subprocess).
+"""
+import jax
+import numpy as np
+import pytest
+
+from conftest import make_mixture
+from oracle import mutated_oracle, oracle_knn
+from repro.core import HybridConfig
+from repro.core import splitter as split_lib
+from repro.runtime import KNNIndex, clear_engine_cache
+from test_sharded_index import run_devices
+
+try:
+    import hypothesis  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+BACKENDS = [
+    "ref",
+    "interpret",
+    "fused",
+    pytest.param("pallas", marks=pytest.mark.skipif(
+        jax.default_backend() != "tpu",
+        reason="pallas compiled mode requires a TPU backend",
+    )),
+]
+
+
+def _cfg(k=4, backend="ref", **kw):
+    kw.setdefault("m", 4)
+    kw.setdefault("gamma", 0.3)
+    kw.setdefault("rho", 0.15)
+    kw.setdefault("n_batches", 2)
+    kw.setdefault("online_rebalance", False)
+    return HybridConfig(k=k, backend=backend, **kw)
+
+
+def _foreign(seed=1, n=53, dim=6):
+    r = np.random.default_rng(seed)
+    near = (0.05 * r.normal(size=(n - n // 3, dim))).astype(np.float32)
+    far = r.uniform(3.0, 6.0, (n // 3, dim)).astype(np.float32)
+    return np.concatenate([near, far]).astype(np.float32)
+
+
+def assert_mutated_exact(index, base, inserts, deletes, queries, k):
+    """``index.query(queries)`` ≡ the float64 oracle over the net
+    corpus: distances match rank-for-rank, every returned id realizes
+    its oracle distance, and no tombstoned id is ever returned."""
+    net, live = mutated_oracle(base, inserts, deletes)
+    res = index.query(queries, k=k)
+    want_d, _ = oracle_knn(net, queries, k=k)
+    np.testing.assert_allclose(np.sort(res.dists, 1), want_d, atol=1e-4)
+    full = np.concatenate(
+        [np.asarray(base, np.float64)]
+        + ([np.asarray(inserts, np.float64)] if len(inserts) else [])
+    )
+    got_d = np.linalg.norm(
+        np.asarray(queries, np.float64)[:, None, :] - full[res.ids], axis=-1
+    )
+    np.testing.assert_allclose(np.sort(got_d, 1), want_d, atol=1e-4)
+    assert np.isin(res.ids, live).all(), "tombstoned or invalid id returned"
+    return res
+
+
+def assert_mutated_self_exact(index, base, inserts, deletes, k):
+    """Dirty self-join (``queries=None, exclude_self=True``): row r is
+    net-corpus row r, and its own global id must be excluded."""
+    net, live = mutated_oracle(base, inserts, deletes)
+    res = index.query(exclude_self=True, k=k)
+    assert res.ids.shape[0] == len(net)
+    want_d, _ = oracle_knn(net, k=k, exclude_self=True)
+    np.testing.assert_allclose(np.sort(res.dists, 1), want_d, atol=1e-4)
+    assert (res.ids != live[:, None]).all(), "self id not excluded"
+    assert np.isin(res.ids, live).all()
+    return res
+
+
+# ---------------------------------------------------------------------------
+# Seeded mutation sequences across backends
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_mutation_sequence_matches_oracle(backend):
+    """insert → delete (base + delta ids) → foreign query → self-join
+    → compact: exact at every step, bit-identical to a fresh build on
+    the net corpus afterwards."""
+    base = make_mixture(300, 140, dim=6, seed=3)
+    cfg = _cfg(k=4, backend=backend)
+    index = KNNIndex.build(base, cfg)
+    q = _foreign(seed=11)
+
+    r = np.random.default_rng(7)
+    ins = (0.05 * r.normal(size=(9, 6))).astype(np.float32)
+    gids = index.insert(ins)
+    np.testing.assert_array_equal(gids, np.arange(440, 449))
+    dels = [2, 50, 200, 443]                 # three base ids + one delta id
+    index.delete(dels)
+    assert index.n_points == 440 + 9 - 4
+    assert not index.is_clean
+
+    assert_mutated_exact(index, base, ins, dels, q, k=4)
+    assert_mutated_self_exact(index, base, ins, dels, k=4)
+
+    # Compaction: the swapped-in generation answers bit-identically to
+    # a from-scratch build on the same net corpus (ISSUE 6 acceptance).
+    net = index.net_points()
+    remap = index.compact()
+    assert index.is_clean and index.generation == 1
+    assert remap[2] == -1 and remap[0] == 0 and remap[3] == 2
+    fresh = KNNIndex.build(net, cfg)
+    got, want = index.query(q), fresh.query(q)
+    np.testing.assert_array_equal(got.ids, want.ids)
+    np.testing.assert_array_equal(got.dists, want.dists)
+    got, want = index.query(exclude_self=True), fresh.query(exclude_self=True)
+    np.testing.assert_array_equal(got.ids, want.ids)
+    np.testing.assert_array_equal(got.dists, want.dists)
+
+
+def test_second_generation_mutates_again():
+    """Mutations after a compaction address the NEW id space."""
+    base = make_mixture(200, 80, dim=5, seed=9)
+    index = KNNIndex.build(base, _cfg(k=3))
+    index.delete([0, 17])
+    remap = index.compact()
+    n1 = index.n_points
+    assert n1 == 278 and remap[17] == -1
+
+    r = np.random.default_rng(1)
+    ins = r.normal(0, 0.05, (5, 5)).astype(np.float32)
+    gids = index.insert(ins)
+    np.testing.assert_array_equal(gids, np.arange(n1, n1 + 5))
+    index.delete([int(remap[33])])           # old id 33, in new coordinates
+    net2, live2 = mutated_oracle(index.points, ins, [int(remap[33])])
+    q = _foreign(seed=2, n=31, dim=5)
+    res = index.query(q, k=3)
+    want_d, _ = oracle_knn(net2, q, k=3)
+    np.testing.assert_allclose(np.sort(res.dists, 1), want_d, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis: random interleavings of insert / delete / query / compact
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason=(
+    "needs hypothesis (pip install -r requirements-dev.txt)"))
+def test_random_mutation_interleavings():
+    from hypothesis import given, settings, strategies as st
+
+    OPS = ("insert", "delete", "query", "compact")
+
+    @settings(max_examples=12, deadline=None)
+    @given(
+        script=st.lists(
+            st.tuples(st.sampled_from(OPS), st.integers(0, 2**31 - 1)),
+            min_size=1, max_size=10,
+        ),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def run(script, seed):
+        dim, k = 4, 3
+        r0 = np.random.default_rng(seed)
+        base = r0.normal(0, 1, (80, dim)).astype(np.float32)
+        # inf ⇒ compaction only on the explicit "compact" op, so the
+        # host-side mirror below never drifts from the index's id space.
+        index = KNNIndex.build(
+            base, _cfg(k=k, m=3, mutation_compact_frac=float("inf"))
+        )
+        # Host-side mirror of the mutation history, in global-id space.
+        inserts, deletes = [], []
+
+        for op, opseed in script:
+            r = np.random.default_rng(opseed)
+            _, live = mutated_oracle(base, inserts, deletes)
+            if op == "insert":
+                pts = r.normal(0, 1, (int(r.integers(1, 6)), dim))
+                pts = pts.astype(np.float32)
+                gids = index.insert(pts)
+                first = len(base) + len(inserts)
+                inserts.extend(pts)
+                np.testing.assert_array_equal(
+                    gids, np.arange(first, first + len(pts))
+                )
+            elif op == "delete":
+                if len(live) <= k + 2:
+                    continue                 # keep k satisfiable
+                n_del = int(r.integers(1, 3))
+                victims = r.choice(live, size=n_del, replace=False)
+                index.delete(victims)
+                deletes.extend(int(v) for v in victims)
+            elif op == "query":
+                q = r.normal(0, 1, (17, dim)).astype(np.float32)
+                assert_mutated_exact(index, base, inserts, deletes, q, k=k)
+            else:                            # compact
+                net, _ = mutated_oracle(base, inserts, deletes)
+                index.compact()
+                assert index.is_clean
+                # Rebase the mirror: the net corpus IS the new base.
+                base, inserts, deletes = net, [], []
+                np.testing.assert_array_equal(index.points, base)
+
+        q = np.random.default_rng(0).normal(0, 1, (17, dim))
+        assert_mutated_exact(
+            index, base, inserts, deletes, q.astype(np.float32), k=k
+        )
+
+    run()
+
+
+# ---------------------------------------------------------------------------
+# Targeted regressions
+# ---------------------------------------------------------------------------
+
+def test_delete_then_reinsert_same_point():
+    """A deleted-then-reinserted point is served under its NEW global
+    id; the old id never resurfaces."""
+    base = make_mixture(250, 100, dim=6, seed=4)
+    index = KNNIndex.build(base, _cfg(k=3))
+    coords = base[5].copy()
+    index.delete([5])
+    (gid,) = index.insert(coords[None])
+    assert gid == 350
+
+    res = assert_mutated_exact(
+        index, base, coords[None], [5], coords[None], k=3
+    )
+    assert res.ids[0, 0] == 350 and res.dists[0, 0] == 0.0
+    assert 5 not in res.ids
+
+    # And after compaction the point still answers (under compact ids).
+    remap = index.compact()
+    assert remap[5] == -1
+    res2 = index.query(coords[None], k=1)
+    np.testing.assert_array_equal(res2.ids, [[remap[gid]]])
+
+
+def test_delete_entire_k_neighborhood():
+    """Tombstoning ALL of a query's top-k forces the fold to surface
+    the next ring — exactness must survive the full-neighborhood kill
+    (this is what the tombstone headroom ``k_main`` widening is for)."""
+    base = make_mixture(300, 120, dim=6, seed=6)
+    k = 4
+    index = KNNIndex.build(base, _cfg(k=k))
+    q = base[10][None] + np.float32(1e-3)
+
+    victims = index.query(q, k=k).ids[0]
+    assert len(set(victims.tolist())) == k
+    index.delete(victims)
+    res = assert_mutated_exact(index, base, (), victims.tolist(), q, k=k)
+    assert not np.isin(res.ids, victims).any()
+
+    # Escalate: kill that neighborhood too, twice over (16 tombstones
+    # total) — crosses a headroom pow2 bucket and still stays exact.
+    more = res.ids[0]
+    index.delete(more)
+    dels = victims.tolist() + more.tolist()
+    even_more = index.query(q, k=k).ids[0]
+    index.delete(even_more)
+    dels += even_more.tolist()
+    assert_mutated_exact(index, base, (), dels, q, k=k)
+
+
+def test_delta_overflow_triggers_autocompact():
+    """Crossing ``mutation_compact_frac``·|D| pending rows compacts
+    automatically, and the ids handed back are post-compaction ids."""
+    base = make_mixture(280, 140, dim=5, seed=8)
+    index = KNNIndex.build(base, _cfg(k=3, mutation_compact_frac=0.02))
+    r = np.random.default_rng(3)
+
+    # 20 inserted rows > 2% of 420 ⇒ the insert itself compacts.
+    ins = r.normal(0, 0.05, (20, 5)).astype(np.float32)
+    gids = index.insert(ins)
+    assert index.generation == 1 and index.is_clean
+    assert index.n_points == 440
+    # Post-compaction ids: nothing was deleted, so the inserted block
+    # keeps its tail position in the rebuilt corpus.
+    np.testing.assert_array_equal(gids, np.arange(420, 440))
+    np.testing.assert_array_equal(index.points[gids], ins)
+
+    # Tombstones trip the same trigger.
+    index.delete(np.arange(10))
+    assert index.generation == 2 and index.is_clean
+    assert index.n_points == 430
+
+    q = _foreign(seed=4, n=29, dim=5)
+    net, _ = mutated_oracle(np.concatenate([base, ins]), (), np.arange(10))
+    want_d, _ = oracle_knn(net, q, k=3)
+    np.testing.assert_allclose(
+        np.sort(index.query(q).dists, 1), want_d, atol=1e-4
+    )
+
+
+def test_generation_swap_compiles_nothing():
+    """ISSUE 6 acceptance: with a pinned ε and an unchanged corpus-size
+    bucket, a same-bucket query after ``compact()`` compiles ZERO new
+    engines — the cache keys are generation-invariant."""
+    clear_engine_cache()
+    base = make_mixture(300, 120, dim=6, seed=12)
+    index = KNNIndex.build(base, _cfg(k=3), 0.15)
+    q = _foreign(seed=13)
+    index.query(q)                            # populate the clean-path cache
+
+    index.delete([3, 7])
+    index.insert(base[[3, 7]])                # same coords ⇒ same net grid
+    index.query(q)                            # dirty path: delta+merge compile
+    assert index.compile_counts.get("delta") and index.compile_counts.get(
+        "merge"
+    )
+
+    index.compact()
+    before = index.total_compiles
+    res = index.query(q)
+    assert index.total_compiles == before, index.compile_counts
+    assert res.stats.n_engine_compiles == 0
+
+
+def test_mutated_index_not_reused_by_session():
+    """A session must rebuild (not reuse) an index whose corpus object
+    it has seen before but which has pending mutations."""
+    from repro.runtime import JoinSession
+
+    base = make_mixture(200, 80, dim=5, seed=14)
+    session = JoinSession(_cfg(k=3))
+    idx1 = session.index_for(base)
+    assert session.index_for(base) is idx1    # clean: reused
+    idx1.delete([0])
+    idx2 = session.index_for(base)
+    assert idx2 is not idx1                   # dirty: rebuilt
+    assert idx2.is_clean and idx2.n_points == 280
+
+
+# ---------------------------------------------------------------------------
+# Splitter: density classification sees the net corpus
+# ---------------------------------------------------------------------------
+
+def test_split_from_counts_net_adjust():
+    k, m, gamma = 1, 2, 0.25                  # n_thresh ≈ 4.14
+    counts = np.array([10, 3], np.int32)
+
+    plain = split_lib.split_from_counts(counts, k, m, gamma, rho=0.0)
+    np.testing.assert_array_equal(plain.to_dense, [True, False])
+
+    # +inserts/−tombstones flip both classifications; the returned
+    # home_counts are the adjusted (clamped-at-zero) ones.
+    adj = split_lib.split_from_counts(
+        counts, k, m, gamma, rho=0.0, net_adjust=np.array([-8, 5], np.int32)
+    )
+    np.testing.assert_array_equal(adj.to_dense, [False, True])
+    np.testing.assert_array_equal(adj.home_counts, [2, 8])
+    clamp = split_lib.split_from_counts(
+        counts, k, m, gamma, rho=0.0, net_adjust=np.array([-20, 0], np.int32)
+    )
+    np.testing.assert_array_equal(clamp.home_counts, [0, 3])
+
+    # The ρ-floor demotion ranking must ALSO use adjusted counts: both
+    # cells clear the threshold, ρ forces one onto the sparse engine,
+    # and the least-dense-after-adjustment query is the one demoted.
+    demo = split_lib.split_from_counts(
+        np.array([10, 10], np.int32), k, m, gamma, rho=0.5,
+        net_adjust=np.array([0, -3], np.int32),
+    )
+    np.testing.assert_array_equal(demo.to_dense, [True, False])
+    stale = split_lib.split_from_counts(
+        np.array([10, 10], np.int32), k, m, gamma, rho=0.5,
+    )
+    np.testing.assert_array_equal(stale.to_dense, [False, True])
+
+
+# ---------------------------------------------------------------------------
+# Sharded index: same mutation contract over a fake-device mesh
+# ---------------------------------------------------------------------------
+
+def test_sharded_mutations_match_oracle_and_compact_bitwise():
+    run_devices("""
+        from oracle import mutated_oracle
+
+        db = make_db(seed=42, n_core=250, n_bg=111)        # 361: uneven pad
+        cfg = HybridConfig(k=3, m=4, gamma=0.3, rho=0.15, n_batches=2,
+                           backend="ref", online_rebalance=False)
+        mesh = make_serving_mesh(4)
+        sh = KNNIndex.build(db, cfg, mesh=mesh)
+        assert isinstance(sh, ShardedKNNIndex)
+
+        r = np.random.default_rng(7)
+        ins = (0.05 * r.normal(size=(9, 6))).astype(np.float32)
+        gids = sh.insert(ins)
+        assert list(gids) == list(range(361, 370))
+        dels = [2, 50, 200, 361]
+        sh.delete(dels)
+        assert sh.n_points == 361 + 9 - 4 and not sh.is_clean
+
+        q = make_queries(seed=5, n=53)
+        net, live = mutated_oracle(db, ins, dels)
+        res = sh.query(q)
+        want_d, _ = oracle_knn(net, q, k=3)
+        np.testing.assert_allclose(np.sort(res.dists, 1), want_d, atol=1e-4)
+        full = np.concatenate([db, ins]).astype(np.float64)
+        got_d = np.linalg.norm(
+            q[:, None, :].astype(np.float64) - full[res.ids], axis=-1)
+        np.testing.assert_allclose(np.sort(got_d, 1), want_d, atol=1e-4)
+        assert np.isin(res.ids, live).all()
+
+        rs = sh.query(exclude_self=True)
+        wd, _ = oracle_knn(net, k=3, exclude_self=True)
+        np.testing.assert_allclose(np.sort(rs.dists, 1), wd, atol=1e-4)
+        assert (rs.ids != live[:, None]).all()
+
+        remap = sh.compact()
+        assert sh.is_clean and sh.generation == 1
+        assert remap[2] == -1 and remap[0] == 0 and remap[3] == 2
+        fresh = KNNIndex.build(sh.points, cfg, mesh=mesh)
+        got, want = sh.query(q), fresh.query(q)
+        np.testing.assert_array_equal(got.ids, want.ids)
+        np.testing.assert_array_equal(got.dists, want.dists)
+        print("OK")
+    """)

@@ -37,13 +37,11 @@ PREAMBLE = """
         far = r.uniform(3.0, 6.0, (n // 3, dim)).astype(np.float32)
         return np.concatenate([near, far]).astype(np.float32)
 
+    from oracle import oracle_knn
+
     def oracle64(refs, queries, k, mask_diag=False):
-        d2 = ((queries[:, None, :].astype(np.float64)
-               - refs[None].astype(np.float64)) ** 2).sum(-1)
-        if mask_diag:
-            np.fill_diagonal(d2, np.inf)
-        order = np.argsort(d2, axis=1, kind="stable")[:, :k]
-        return np.sqrt(np.take_along_axis(d2, order, axis=1))
+        # Shared float64 oracle (tests/oracle.py); dists only here.
+        return oracle_knn(refs, queries, k=k, exclude_self=mask_diag)[0]
 
     def assert_parity(sharded_res, single_res, refs, queries, k,
                       mask_diag=False):
@@ -75,7 +73,9 @@ def run_devices(body: str, n_devices: int = 4, timeout: int = 900):
         import jax.numpy as jnp
         import numpy as np
     """) + textwrap.dedent(PREAMBLE) + textwrap.dedent(body)
-    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    # tests/ on the path too: the preamble imports the shared oracle.
+    env = dict(os.environ, PYTHONPATH=os.pathsep.join(
+        [os.path.join(ROOT, "src"), os.path.join(ROOT, "tests")]))
     proc = subprocess.run([sys.executable, "-c", code], env=env,
                           capture_output=True, text=True, timeout=timeout)
     assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"

@@ -9,7 +9,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from conftest import make_mixture, oracle_knn
+from conftest import make_mixture
+from oracle import oracle_knn
 from repro.core import HybridConfig, brute_knn
 from repro.core import dense_join as dense_lib
 from repro.core import grid as grid_lib
@@ -102,7 +103,8 @@ def test_dense_tiled_matches_brute_on_success():
     pts_r, idx, qids, eps = _dense_fixture(m=4)
     til = dense_lib.dense_join(
         idx, pts_r, qids, eps, k=k, budget=1024, backend="interpret")
-    od, _ = oracle_knn(np.asarray(pts_r), k)
+    od, _ = oracle_knn(np.asarray(pts_r), k=k, exclude_self=True,
+                       squared=True)
     ok = ~np.asarray(til.failed)
     assert ok.any(), "fixture must produce dense successes"
     np.testing.assert_allclose(
