@@ -1,0 +1,121 @@
+"""Perf-trajectory regression gate.
+
+    python -m benchmarks.check_regression results/bench/BENCH_<tag>.json
+    python -m benchmarks.check_regression ... --update   # commit new point
+
+The committed trajectory (results/bench/trajectory.json) holds one
+point per accepted change: tag, timestamp, and the steady-state
+queries/s of every variant the run produced.  The gate compares a fresh
+BENCH json against the most recent committed point that shares the tag
+(falling back to the newest point of any tag) and fails when any shared
+variant's queries/s drops by more than ``--max-drop`` (default 20%) —
+the serving-throughput floor a fault-tolerance PR must not sink.
+
+CI runners are noisy; the 20% band is deliberately wide so the gate
+catches structural regressions (an accidentally disabled cache, a
+compile in the steady loop) rather than scheduler jitter.  Faster is
+always fine — speedups pass silently and should be committed with
+``--update`` so the floor ratchets up.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+from benchmarks.common import RESULTS_DIR
+
+TRAJECTORY = os.path.join(RESULTS_DIR, "trajectory.json")
+
+
+def _load_qps(bench_path: str) -> dict:
+    with open(bench_path) as f:
+        bench = json.load(f)
+    qps = {name: v["queries_per_s"]
+           for name, v in bench.get("variants", {}).items()
+           if isinstance(v, dict) and v.get("queries_per_s")}
+    return {"tag": bench.get("tag"), "qps": qps}
+
+
+def _load_trajectory(path: str) -> dict:
+    if not os.path.exists(path):
+        return {"points": []}
+    with open(path) as f:
+        return json.load(f)
+
+
+def _baseline(traj: dict, tag: str):
+    """Newest committed point with the same tag, else newest overall."""
+    points = traj.get("points", [])
+    same = [p for p in points if p.get("tag") == tag]
+    pool = same or points
+    return pool[-1] if pool else None
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser("benchmarks.check_regression")
+    ap.add_argument("bench_json", help="fresh BENCH_<tag>.json to gate")
+    ap.add_argument("--trajectory", default=TRAJECTORY)
+    ap.add_argument("--max-drop", type=float, default=0.2,
+                    help="fail when queries/s falls below (1 - max_drop) "
+                         "of the committed baseline (default 0.2)")
+    ap.add_argument("--update", action="store_true",
+                    help="append this run as the new committed point "
+                         "(run after the gate passes, commit the file)")
+    args = ap.parse_args(argv)
+
+    cur = _load_qps(args.bench_json)
+    if not cur["qps"]:
+        print(f"[gate] {args.bench_json} has no queries/s variants")
+        return 2
+    traj = _load_trajectory(args.trajectory)
+    base = _baseline(traj, cur["tag"])
+
+    failed = []
+    if base is None:
+        print("[gate] no committed trajectory point yet — nothing to "
+              "compare (use --update to commit the first one)")
+    else:
+        base_qps = base.get("variants", {})
+        shared = sorted(set(cur["qps"]) & set(base_qps))
+        for name in sorted(set(base_qps) - set(cur["qps"])):
+            print(f"[gate] warn: baseline variant {name!r} missing "
+                  "from this run")
+        if not shared:
+            print(f"[gate] warn: no shared variants with baseline "
+                  f"tag={base.get('tag')!r}")
+        floor = 1.0 - args.max_drop
+        for name in shared:
+            got, want = cur["qps"][name], base_qps[name]
+            ratio = got / want if want > 0 else 1.0
+            ok = ratio >= floor
+            print(f"[gate] {'ok  ' if ok else 'FAIL'} {name}: "
+                  f"{got:.0f} q/s vs committed {want:.0f} "
+                  f"({ratio:.2f}x, floor {floor:.2f}x)")
+            if not ok:
+                failed.append(name)
+
+    if failed:
+        print(f"[gate] REGRESSION: {len(failed)} variant(s) under the "
+              f"floor: {', '.join(failed)}")
+        return 1
+
+    if args.update:
+        traj.setdefault("points", []).append({
+            "tag": cur["tag"],
+            "created_unix": time.time(),
+            "variants": cur["qps"],
+        })
+        os.makedirs(os.path.dirname(os.path.abspath(args.trajectory)),
+                    exist_ok=True)
+        with open(args.trajectory, "w") as f:
+            json.dump(traj, f, indent=1)
+        print(f"[gate] committed new trajectory point "
+              f"({len(cur['qps'])} variants) to {args.trajectory}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

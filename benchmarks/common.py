@@ -51,13 +51,36 @@ def parser(name: str) -> argparse.ArgumentParser:
                          "buffer + tombstone fold), then compact() — "
                          "recording queries/s before/after the "
                          "generation swap (DESIGN.md §6)")
-    ap.add_argument("--mesh", type=int, default=0,
-                    help="shard the serving index over an N-device 1-D "
-                         "mesh (DESIGN.md §5; needs ≥N jax devices — on "
-                         "CPU set XLA_FLAGS=--xla_force_host_platform_"
-                         "device_count=N before launch).  0/1 = "
-                         "single-device index")
+    ap.add_argument("--mesh", default="0",
+                    help="serving mesh spelling RxS (replicas x shards, "
+                         "DESIGN.md §5/§7) — '2x2' = 2 replica groups x "
+                         "2 shards; a plain N means 1xN (N shards, no "
+                         "replicas).  Needs ≥R·S jax devices: on CPU set "
+                         "XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N before launch.  0/1 = single-device "
+                         "index")
+    ap.add_argument("--faults", action="store_true",
+                    help="serving mode: add a deterministic fault drill "
+                         "(scripted latency spikes + a replica kill, "
+                         "DESIGN.md §7) recording P50/P95/P99 effective "
+                         "latency with and without hedging; requires a "
+                         "replicated mesh (--mesh RxS with R ≥ 2)")
     return ap
+
+
+def parse_mesh(spec) -> tuple:
+    """``--mesh`` spelling -> (replicas, shards).  'RxS' is explicit;
+    a plain integer N is the historical 1-D spelling, meaning 1xN;
+    0/1 mean no mesh (single-device index) and parse as (1, 1)."""
+    s = str(spec).strip().lower()
+    if "x" in s:
+        r_s, _, n_s = s.partition("x")
+        r, n = int(r_s), int(n_s)
+        if r < 1 or n < 1:
+            raise ValueError(f"--mesh {spec!r}: both factors must be >= 1")
+        return r, n
+    n = int(s)
+    return (1, max(n, 1))
 
 
 def load_dataset(name: str, scale: float) -> np.ndarray:

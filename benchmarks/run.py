@@ -55,18 +55,30 @@ def main():
         )
         if not scale_explicit:
             args.scale = 0.1
-        mesh_part = f"mesh{args.mesh}-" if args.mesh and args.mesh > 1 else ""
+        n_rep, n_shards = common.parse_mesh(args.mesh)
+        mesh_part = (f"mesh{n_rep}x{n_shards}-"
+                     if n_rep * n_shards > 1 else "")
         mut_part = "mutate-" if args.mutate else ""
-        print(f"[bench] SERVING backend={args.backend} mesh={args.mesh or 1} "
-              f"mutate={args.mutate} datasets={args.datasets} "
+        fault_part = "faults-" if args.faults else ""
+        print(f"[bench] SERVING backend={args.backend} "
+              f"mesh={n_rep}x{n_shards} mutate={args.mutate} "
+              f"faults={args.faults} datasets={args.datasets} "
               f"scale={args.scale}")
         rec = serving.run(args)
         assert rec, "serving mode produced no records"
         if args.mutate:
             assert all("mutation" in v for v in rec.values()), (
                 "--mutate produced no churn records")
+        if args.faults:
+            assert all("faults" in v for v in rec.values()), (
+                "--faults produced no drill records")
+            for v in rec.values():
+                on = v["faults"]["with_hedging"]
+                assert on["n_hedged"] > 0, (
+                    "fault drill never hedged — spikes below threshold?")
         _emit_json(args, {"serving": rec},
-                   tag_default=f"serving-{mesh_part}{mut_part}{args.backend}")
+                   tag_default=(f"serving-{mesh_part}{mut_part}"
+                                f"{fault_part}{args.backend}"))
         print(f"[bench] serving ok ({time.time() - t0:.0f}s, "
               f"{len(rec)} datasets)")
         return

@@ -12,11 +12,19 @@ measures exactly that seam:
   * steady-state queries/s over same-bucket batches, the serving
     headline number.
 
-``--mesh N`` serves the same workload from a sharded index
-(``KNNIndex.build(..., mesh=...)``, DESIGN.md §5): per-shard hybrid
-pipelines plus the collective top-K merge.  Every record carries a
-``mesh_shape`` field so the perf trajectory distinguishes shard counts
-([1] for the single-device index).
+``--mesh RxS`` serves the same workload from a sharded index
+(``KNNIndex.build(..., mesh=...)``, DESIGN.md §5/§7): R replica groups
+× S shards — per-shard hybrid pipelines plus the collective top-K
+merge, with the serving fault policy active when R ≥ 2.  A plain
+``--mesh N`` is the historical 1-D spelling (1×N).  Every record
+carries a ``mesh_shape: [R, S]`` field so the perf trajectory
+distinguishes placements ([1, 1] for the single-device index).
+
+``--faults`` (requires R ≥ 2) adds a deterministic fault drill per
+dataset: scripted transient latency spikes on replica 0 plus a late
+replica kill, served twice — hedging off, then on — recording
+P50/P95/P99 *effective* latency (measured + virtual injected seconds
+under the hedging policy) and the hedge/retry/coverage counters.
 
 Each record embeds the resolved backend and the full ``HybridConfig``
 dict so the JSON ties back to the knobs that produced it.
@@ -31,11 +39,18 @@ import numpy as np
 from repro.core import HybridConfig
 from repro.runtime import KNNIndex
 
-from benchmarks.common import (PAPER_K, load_dataset, parser, print_table,
-                               save)
+from benchmarks.common import (PAPER_K, load_dataset, parse_mesh, parser,
+                               print_table, save)
 
 BATCH_SIZE = 512
 N_BATCHES = 8
+FAULT_STEPS = 20                 # serve steps per fault-drill phase
+SPIKE_PERIOD = 5                 # scripted spike every Nth step — sparse,
+                                 # so the fleet EWMA keeps calling them
+                                 # anomalous (a denser cadence reads as a
+                                 # persistent straggler and self-raises
+                                 # the hedge threshold, by design)
+SPIKE_SECONDS = 5.0              # injected transient spike size
 
 
 def _query_batches(pts: np.ndarray, n_batches: int, batch: int, seed: int = 0):
@@ -106,18 +121,74 @@ def _mutation_churn(index, pts, probe_batch, batch, seed=1):
     }
 
 
+def _fault_drill(index, batches, *, hedging: bool):
+    """Serve FAULT_STEPS batches under a scripted fault storm: replica
+    0 spikes transiently (every SPIKE_PERIOD-th step, large enough to
+    clear the hedge threshold) until it is killed outright at the 3/4
+    mark —
+    hedging covers the spikes while it lives, retry + health marking
+    take over once it dies — recording the effective-latency tail with
+    the given hedging setting.  Deterministic: spikes are virtual
+    seconds, the kill is a scripted exception; identical runs produce
+    identical counters."""
+    from repro.runtime import ScriptedFaults, ServingConfig, StragglerConfig
+
+    faults = ScriptedFaults()
+    for shard in range(index.n_shards):
+        faults.add_latency(0, shard, SPIKE_SECONDS,
+                           steps=range(0, 10 ** 6, SPIKE_PERIOD))
+    kill_at = index._serve_step + (3 * FAULT_STEPS) // 4
+    faults.kill_replica(0, at_step=kill_at)
+    index.configure_serving(
+        ServingConfig(hedging=hedging,
+                      detector=StragglerConfig(warmup_steps=4)),
+        faults=faults)
+
+    t_eff, counters = [], {"n_hedged": 0, "n_hedge_wins": 0,
+                           "n_subquery_retries": 0,
+                           "n_subquery_failures": 0, "n_rows_uncovered": 0}
+    for step in range(FAULT_STEPS):
+        res = index.query(batches[step % len(batches)])
+        t_eff.append(res.stats.t_effective)
+        counters["n_hedged"] += res.stats.n_hedged
+        counters["n_hedge_wins"] += res.stats.n_hedge_wins
+        counters["n_subquery_retries"] += res.stats.n_subquery_retries
+        counters["n_subquery_failures"] += res.stats.n_subquery_failures
+        if res.coverage is not None:
+            counters["n_rows_uncovered"] += int((~res.coverage.all(1)).sum())
+    t = np.asarray(t_eff)
+    return {
+        "hedging": hedging,
+        "n_steps": FAULT_STEPS,
+        "spike_seconds": SPIKE_SECONDS,
+        "n_latency_spikes": faults.count("latency"),
+        "n_kill_events": faults.count("kill"),
+        "p50_effective_s": float(np.percentile(t, 50)),
+        "p95_effective_s": float(np.percentile(t, 95)),
+        "p99_effective_s": float(np.percentile(t, 99)),
+        "mean_effective_s": float(t.mean()),
+        **counters,
+    }
+
+
 def run(args):
     backend = getattr(args, "backend", "auto")
-    n_mesh = int(getattr(args, "mesh", 0) or 0)
+    n_rep, n_shards = parse_mesh(getattr(args, "mesh", 0))
+    with_faults = bool(getattr(args, "faults", False))
     mesh = None
-    if n_mesh > 1:
+    if n_rep * n_shards > 1:
         from repro.launch.mesh import make_serving_mesh
 
-        mesh = make_serving_mesh(n_mesh)
-    mesh_shape = [n_mesh] if mesh is not None else [1]
+        mesh = make_serving_mesh(n_shards, replicas=n_rep)
+    if with_faults and n_rep < 2:
+        raise SystemExit(
+            "--faults needs replica groups to retry/hedge against: "
+            f"pass --mesh RxS with R >= 2 (got --mesh {args.mesh})")
+    mesh_shape = [n_rep, n_shards] if mesh is not None else [1, 1]
     batch = max(64, int(BATCH_SIZE * min(args.scale * 4, 1.0)))
     rows = []
     mut_rows = []
+    fault_rows = []
     rec = {}
     for ds in args.datasets:
         pts = load_dataset(ds, args.scale)
@@ -180,6 +251,23 @@ def run(args):
                 f"{mut['post_compact_queries_per_s']:.0f}",
                 str(mut["post_compact_probe_compiles"]),
             ])
+        if with_faults:
+            drill = {
+                "without_hedging": _fault_drill(index, batches[1:],
+                                                hedging=False),
+                "with_hedging": _fault_drill(index, batches[1:],
+                                             hedging=True),
+            }
+            rec[ds]["faults"] = drill
+            for label, d in drill.items():
+                fault_rows.append([
+                    ds, label.replace("_", " "),
+                    f"{d['p50_effective_s']:.3f}s",
+                    f"{d['p95_effective_s']:.3f}s",
+                    f"{d['p99_effective_s']:.3f}s",
+                    f"{d['n_hedged']}/{d['n_hedge_wins']}",
+                    str(d["n_subquery_retries"]),
+                ])
     print_table(
         f"Serving: steady-state index.query batches "
         f"(backend={backend}, mesh={mesh_shape}, batch={batch})",
@@ -191,6 +279,13 @@ def run(args):
             ["dataset", "churn", "dirty q/s", "compact", "post q/s",
              "probe compiles"],
             mut_rows)
+    if fault_rows:
+        print_table(
+            f"Fault drill: {SPIKE_SECONDS}s transient spikes + replica "
+            f"kill over {FAULT_STEPS} steps (effective latency)",
+            ["dataset", "policy", "p50", "p95", "p99",
+             "hedged/wins", "retries"],
+            fault_rows)
     save("serving", rec, args.out)
     return rec
 

@@ -31,6 +31,7 @@ import json
 import os
 import shutil
 import threading
+import warnings
 import zlib
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any, Dict, Optional
@@ -159,13 +160,52 @@ class CheckpointManager:
 
     # -- restore -------------------------------------------------------------
 
+    def _is_durable(self, name: str) -> bool:
+        """A step directory is durable iff the atomic rename completed:
+        both payload files exist under the final (non-.tmp) name."""
+        d = os.path.join(self.directory, name)
+        return (os.path.isdir(d)
+                and os.path.exists(os.path.join(d, "manifest.json"))
+                and os.path.exists(os.path.join(d, "arrays.npz")))
+
+    def durable_steps(self) -> list:
+        """All durable step numbers, ascending."""
+        out = []
+        for d in sorted(os.listdir(self.directory)):
+            if d.startswith("step-") and not d.endswith(".tmp") \
+                    and self._is_durable(d):
+                try:
+                    out.append(int(d.split("-")[1]))
+                except ValueError:
+                    continue
+        return out
+
     def latest_step(self) -> Optional[int]:
+        """Newest durable step.  The LATEST pointer is a hint, not an
+        authority: a crash between the step rename and the pointer
+        update (or a hand-edited/corrupt pointer) can leave it naming a
+        missing or partial directory — in that case fall back to the
+        newest step that actually has both payload files on disk."""
         path = os.path.join(self.directory, "LATEST")
-        if not os.path.exists(path):
-            return None
-        with open(path) as f:
-            name = f.read().strip()
-        return int(name.split("-")[1])
+        name = None
+        if os.path.exists(path):
+            with open(path) as f:
+                name = f.read().strip()
+        if name is not None and self._is_durable(name):
+            try:
+                return int(name.split("-")[1])
+            except (IndexError, ValueError):
+                pass  # malformed pointer content — fall through to scan
+        durable = self.durable_steps()
+        if durable:
+            if name is not None:
+                warnings.warn(
+                    f"LATEST points at {name!r} which is missing or "
+                    f"partial in {self.directory}; falling back to newest "
+                    f"durable step {durable[-1]}", RuntimeWarning,
+                    stacklevel=2)
+            return durable[-1]
+        return None
 
     def restore(self, template: Any, *, step: Optional[int] = None,
                 shardings: Any = None):
@@ -175,8 +215,21 @@ class CheckpointManager:
         if step is None:
             step = self.latest_step()
             if step is None:
-                raise FileNotFoundError(f"no checkpoint in {self.directory}")
-        d = os.path.join(self.directory, f"step-{step:09d}")
+                raise FileNotFoundError(
+                    f"no durable checkpoint in {self.directory} "
+                    f"(nothing was ever saved, or every save crashed "
+                    f"before the atomic rename)")
+        name = f"step-{step:09d}"
+        if not self._is_durable(name):
+            durable = self.durable_steps()
+            hint = (f"; durable steps available: {durable}" if durable
+                    else "; no durable steps exist in this directory")
+            raise FileNotFoundError(
+                f"checkpoint step {step} in {self.directory} is missing "
+                f"or partial (a crash mid-write leaves no durable "
+                f"step-{step:09d} directory){hint}. Pass step=None to "
+                f"restore the newest durable step.")
+        d = os.path.join(self.directory, name)
         with open(os.path.join(d, "manifest.json")) as f:
             manifest = json.load(f)
         raw = dict(np.load(os.path.join(d, "arrays.npz")))

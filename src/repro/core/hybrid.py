@@ -29,7 +29,7 @@ load-balance point.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import List, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -128,6 +128,15 @@ class JoinStats:
     n_sparse_engine_total: int = 0  # all queries the sparse engine processed
     rho_online: float = 0.0       # last Eq. 6 estimate the scheduler applied
     n_engine_compiles: int = 0    # engine compilations triggered by this join
+    # fault-tolerant serving accounting (DESIGN.md §7) — populated by the
+    # sharded replica-group path; zero/empty on single-device queries.
+    n_hedged: int = 0             # slow sub-queries re-issued to a sibling
+    n_hedge_wins: int = 0         # hedges whose effective latency won
+    n_subquery_retries: int = 0   # failed sub-queries retried on siblings
+    n_subquery_failures: int = 0  # sub-query attempts that raised
+    shards_lost: Tuple[int, ...] = ()   # shards no replica could serve
+    t_effective: float = 0.0      # serve wall under the hedging policy
+                                  # (== t_wall when nothing hedged)
 
     @property
     def response_time(self) -> float:
@@ -147,6 +156,18 @@ class KNNResult:
     ids: np.ndarray       # (|D|, K) neighbor ids
     source: np.ndarray    # (|D|,) 0=dense engine, 1=sparse engine, 2=brute lane
     stats: JoinStats
+    # Degraded-result contract (DESIGN.md §7): per-query per-shard
+    # served mask, (|Q|, n_shards) bool.  Column s is False when no
+    # replica could serve shard s — the result rows are then the exact
+    # top-K over the SURVIVING shards (never silently wrong, never an
+    # exception).  None on single-device queries (coverage is total).
+    coverage: Optional[np.ndarray] = None
+
+    @property
+    def fully_covered(self) -> bool:
+        """True iff every shard contributed to every query (always True
+        for single-device results)."""
+        return self.coverage is None or bool(self.coverage.all())
 
 
 def _pad_ids(ids: np.ndarray, block: int) -> jnp.ndarray:

@@ -41,21 +41,34 @@ def make_host_mesh(model: int = 1) -> Mesh:
     return jax.make_mesh((data, model), ("data", "model"), **_axis_kw(2))
 
 
-def make_serving_mesh(n_shards: int | None = None, axis: str = "shard") -> Mesh:
-    """1-D mesh for the sharded ``KNNIndex`` (DESIGN.md §5): ``n_shards``
-    devices along one ``axis`` (default: every local device).  On a CPU
-    host, fake devices come from
-    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` set before
-    the first jax import."""
+def make_serving_mesh(n_shards: int | None = None, axis: str = "shard",
+                      replicas: int = 1) -> Mesh:
+    """Mesh for the sharded ``KNNIndex`` (DESIGN.md §5/§7).
+
+    ``replicas == 1`` (default) keeps the original 1-D shape:
+    ``n_shards`` devices along ``axis``.  ``replicas > 1`` builds the
+    2-D (replica × shard) serving mesh: shard groups for corpus
+    capacity, replica groups for QPS/fault tolerance — index state is
+    sharded along ``axis`` and *replicated* along ``"replica"`` (the
+    collective top-K merge stays confined to the shard axis; query
+    routing spreads across replicas).  On a CPU host, fake devices come
+    from ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` set
+    before the first jax import."""
     devs = jax.devices()
-    n = len(devs) if n_shards is None else int(n_shards)
-    if n > len(devs):
+    r = int(replicas)
+    if r < 1:
+        raise ValueError(f"replicas must be >= 1, got {r}")
+    n = (len(devs) // r) if n_shards is None else int(n_shards)
+    if r * n > len(devs):
         raise ValueError(
-            f"serving mesh wants {n} devices but only {len(devs)} exist "
+            f"serving mesh wants {r}x{n}={r * n} devices but only "
+            f"{len(devs)} exist "
             "(set XLA_FLAGS=--xla_force_host_platform_device_count "
             "before the first jax import to fake more on CPU)"
         )
-    return jax.make_mesh((n,), (axis,), **_axis_kw(1))
+    if r == 1:
+        return jax.make_mesh((n,), (axis,), **_axis_kw(1))
+    return jax.make_mesh((r, n), ("replica", axis), **_axis_kw(2))
 
 
 def mesh_chip_count(mesh: Mesh) -> int:

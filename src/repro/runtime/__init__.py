@@ -1,6 +1,15 @@
 """Runtime substrate: index/query serving, sessions, fault tolerance,
-straggler mitigation."""
-from repro.runtime.knn_index import KNNIndex, clear_engine_cache
+straggler mitigation, persistence."""
+from repro.runtime.faults import (
+    CheckpointCrash, CrashingCheckpointManager, FaultInjector,
+    ScriptedFaults, SubQueryFault,
+)
+from repro.runtime.knn_index import (
+    KNNIndex, clear_engine_cache, validate_points,
+)
+from repro.runtime.serving import (
+    ServingConfig, ServingSupervisor, SubQueryOutcome,
+)
 from repro.runtime.session import JoinSession
 from repro.runtime.sharded_index import ShardedKNNIndex
 from repro.runtime.stragglers import StragglerConfig, StragglerDetector, suggest_rho
@@ -8,6 +17,10 @@ from repro.runtime.supervisor import RunReport, Supervisor, SupervisorConfig
 
 __all__ = [
     "KNNIndex", "ShardedKNNIndex", "JoinSession", "clear_engine_cache",
+    "validate_points",
+    "ServingConfig", "ServingSupervisor", "SubQueryOutcome",
+    "FaultInjector", "ScriptedFaults", "SubQueryFault",
+    "CrashingCheckpointManager", "CheckpointCrash",
     "StragglerConfig", "StragglerDetector", "suggest_rho",
     "RunReport", "Supervisor", "SupervisorConfig",
 ]

@@ -1,0 +1,198 @@
+"""Deterministic fault injection for the serving layer (DESIGN.md §7).
+
+Production failure modes — stragglers, flaky replicas, lost shards,
+crashes mid-checkpoint — are rare and timing-dependent; a serving stack
+whose recovery paths only run in production is untested by definition.
+This module makes every one of them a *scripted, repeatable* event:
+
+  * ``FaultInjector`` is the hook surface ``ShardedKNNIndex`` consults
+    before each sub-query (and ``CrashingCheckpointManager`` consults
+    mid-write).  The default implementation injects nothing, so the
+    healthy path carries one cheap virtual call and no behavior change.
+
+  * ``ScriptedFaults`` scripts faults by (replica, shard, step):
+    latency spikes (returned as *synthetic* extra seconds — no real
+    sleeping, so fault tests stay fast and exactly reproducible),
+    sub-query exceptions, and replica kills from a given step on.
+
+  * ``CrashingCheckpointManager`` wraps the durable-write path with
+    crash points at each phase of ``CheckpointManager._write`` —
+    before anything is written, after the arrays but before the
+    manifest, and after the atomic rename but before the ``LATEST``
+    pointer moves — the three distinct partial states a real crash can
+    leave on disk.
+
+Latency injection is *additive and virtual*: the injector returns extra
+seconds that the serving layer adds to the measured sub-query wall time
+before feeding the straggler detector and the hedging policy.  The
+observable behavior (hedge decisions, effective latency accounting,
+detector state) is exactly what a real spike of that size produces,
+without tests paying the wall-clock cost.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from repro.checkpoint import CheckpointManager
+
+
+class SubQueryFault(RuntimeError):
+    """An injected (or real) sub-query failure the supervisor retries."""
+
+
+class CheckpointCrash(RuntimeError):
+    """An injected crash inside the checkpoint write path."""
+
+
+class FaultInjector:
+    """No-op base: the healthy serving path.  Subclass (or use
+    ``ScriptedFaults``) to inject."""
+
+    def subquery(self, replica: int, shard: int, step: int) -> float:
+        """Called before the (replica, shard) sub-query of serve step
+        ``step``.  Return extra synthetic latency in seconds (0.0 =
+        healthy); raise ``SubQueryFault`` to fail the attempt."""
+        return 0.0
+
+    def checkpoint_phase(self, phase: str, step: int) -> None:
+        """Called by ``CrashingCheckpointManager`` at each write phase
+        (``"pre-arrays"``, ``"pre-manifest"``, ``"pre-latest"``).
+        Raise ``CheckpointCrash`` to crash there."""
+
+
+@dataclasses.dataclass
+class _Kill:
+    at_step: int
+
+
+class ScriptedFaults(FaultInjector):
+    """Deterministic fault script keyed on (replica, shard, step).
+
+    >>> f = ScriptedFaults()
+    >>> f.add_latency(0, 1, 0.25, steps=range(4, 100, 4))
+    >>> f.fail_subquery(1, 0, steps=[6, 7])
+    >>> f.kill_replica(1, at_step=10)          # every later sub-query fails
+    >>> f.crash_checkpoint("pre-manifest")     # next ckpt write crashes
+
+    ``log`` records every injected event as (kind, replica, shard, step)
+    so tests can assert exactly which faults fired.
+    """
+
+    def __init__(self):
+        self._latency: Dict[Tuple[int, int, int], float] = {}
+        self._fail: set = set()
+        self._kills: Dict[int, _Kill] = {}
+        self._ckpt_crash: Optional[str] = None
+        self.log: List[Tuple[str, int, int, int]] = []
+
+    # -- scripting ---------------------------------------------------------
+
+    def add_latency(self, replica: int, shard: int, seconds: float,
+                    steps) -> "ScriptedFaults":
+        for s in steps:
+            self._latency[(replica, shard, int(s))] = float(seconds)
+        return self
+
+    def fail_subquery(self, replica: int, shard: int,
+                      steps) -> "ScriptedFaults":
+        for s in steps:
+            self._fail.add((replica, shard, int(s)))
+        return self
+
+    def kill_replica(self, replica: int, at_step: int) -> "ScriptedFaults":
+        self._kills[replica] = _Kill(int(at_step))
+        return self
+
+    def crash_checkpoint(self, phase: str) -> "ScriptedFaults":
+        assert phase in ("pre-arrays", "pre-manifest", "pre-latest"), phase
+        self._ckpt_crash = phase
+        return self
+
+    # -- injection hooks ---------------------------------------------------
+
+    def subquery(self, replica: int, shard: int, step: int) -> float:
+        kill = self._kills.get(replica)
+        if kill is not None and step >= kill.at_step:
+            self.log.append(("kill", replica, shard, step))
+            raise SubQueryFault(
+                f"replica {replica} killed at step {kill.at_step} "
+                f"(sub-query shard={shard} step={step})"
+            )
+        if (replica, shard, step) in self._fail:
+            self.log.append(("fail", replica, shard, step))
+            raise SubQueryFault(
+                f"injected sub-query failure replica={replica} "
+                f"shard={shard} step={step}"
+            )
+        extra = self._latency.get((replica, shard, step), 0.0)
+        if extra:
+            self.log.append(("latency", replica, shard, step))
+        return extra
+
+    def checkpoint_phase(self, phase: str, step: int) -> None:
+        if self._ckpt_crash == phase:
+            self._ckpt_crash = None          # crash once, then recover
+            self.log.append(("ckpt-crash", -1, -1, step))
+            raise CheckpointCrash(f"injected crash at {phase} of step {step}")
+
+    # -- introspection -----------------------------------------------------
+
+    def count(self, kind: str) -> int:
+        return sum(1 for k, *_ in self.log if k == kind)
+
+
+class CrashingCheckpointManager(CheckpointManager):
+    """A ``CheckpointManager`` whose write path consults a
+    ``FaultInjector`` at each phase — the crash-mid-checkpoint harness.
+    Always synchronous (a crash on the background thread would be
+    swallowed by the Future until the next ``wait()``)."""
+
+    def __init__(self, directory: str, injector: FaultInjector, *,
+                 keep: int = 3):
+        super().__init__(directory, keep=keep, async_save=False)
+        self.injector = injector
+
+    def _write(self, step, flat, extra):
+        import json
+        import os
+        import shutil
+
+        import numpy as np
+
+        from repro.checkpoint import manager as mgr
+
+        self.injector.checkpoint_phase("pre-arrays", step)
+        final = os.path.join(self.directory, f"step-{step:09d}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        np.savez(os.path.join(tmp, "arrays.npz"),
+                 **{k: mgr._encode(v) for k, v in flat.items()})
+        self.injector.checkpoint_phase("pre-manifest", step)
+        index = {
+            k: {
+                "shape": list(v.shape),
+                "dtype": str(v.dtype),
+                "crc": mgr.zlib.crc32(np.ascontiguousarray(v).tobytes()),
+            } for k, v in flat.items()
+        }
+        manifest = {
+            "version": mgr.FORMAT_VERSION,
+            "step": step,
+            "index": index,
+            "extra": extra,
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self.injector.checkpoint_phase("pre-latest", step)
+        with self._lock:
+            with open(os.path.join(self.directory, "LATEST.tmp"), "w") as f:
+                f.write(os.path.basename(final))
+            os.replace(os.path.join(self.directory, "LATEST.tmp"),
+                       os.path.join(self.directory, "LATEST"))
+        self._gc()

@@ -93,6 +93,31 @@ def run_engine(owner, kind: str, jitted, args: tuple, kwargs: dict):
     return ex
 
 
+def validate_points(arr, n_dims: Optional[int], what: str = "queries"):
+    """Serving-surface input validation: reject dtype/shape mismatches
+    with an actionable ``ValueError`` *before* anything reaches the
+    engine stack (where they would surface as cryptic shape errors from
+    deep inside a compiled kernel).  Returns the validated array
+    unconverted — callers keep their own ``jnp.asarray`` casts."""
+    try:
+        a = np.asarray(arr)
+    except Exception as e:
+        raise ValueError(f"{what} must be an array-like of numbers "
+                         f"({type(arr).__name__} is not)") from e
+    if a.dtype.kind not in "iuf":
+        raise ValueError(
+            f"{what} must have a real numeric dtype (int or float), got "
+            f"{a.dtype} — the index stores float32 coordinates")
+    if a.ndim != 2:
+        raise ValueError(
+            f"{what} must be a 2-D (rows, dims) array, got shape {a.shape}")
+    if n_dims is not None and a.shape[1] != n_dims:
+        raise ValueError(
+            f"{what} have {a.shape[1]} dims but the index was built over "
+            f"{n_dims}-dim points — shape must be (rows, {n_dims})")
+    return a
+
+
 def pad_rows_pow2(arr: jnp.ndarray, block: int) -> jnp.ndarray:
     """Pad an array's leading axis to a pow2 multiple of ``block`` (zero
     fill) — the query-shape bucket: engine-cache keys see the padded
@@ -177,9 +202,12 @@ class _Generation:
     grid: grid_lib.GridIndex
     pyramid: sparse_lib.Pyramid
     home_counts: np.ndarray                 # (|D|,) self-cloud densities
-    # Self-split cache per k: (dense_ids, sparse_ids, threshold) —
+    # Self-split cache per (k, ρ): (dense_ids, sparse_ids, threshold) —
     # generation-owned because it derives from this grid's densities.
-    self_splits: Dict[int, Tuple[np.ndarray, np.ndarray, float]] = (
+    # ρ keys the cache because serving may override the config floor
+    # online (straggler-driven Eq. 6 re-suggestion, DESIGN.md §7).
+    self_splits: Dict[Tuple[int, float],
+                      Tuple[np.ndarray, np.ndarray, float]] = (
         dataclasses.field(default_factory=dict)
     )
 
@@ -276,6 +304,7 @@ class KNNIndex:
         mesh=None,
         mesh_axis=None,
         merge: str = "auto",
+        _prebuilt: Optional[tuple] = None,
     ):
         """Steps 1–3 of Algorithm 1, once per database: REORDER,
         ε selection (skipped when the caller pins ``epsilon``), grid +
@@ -289,7 +318,12 @@ class KNNIndex:
         is returned — same ``query()`` contract, shard-local hybrid
         pipelines plus a collective top-K merge (``mesh_axis`` names
         the shard axis/axes, default all; ``merge`` picks the collective
-        strategy, see ``core.distributed.merge_strategy``)."""
+        strategy, see ``core.distributed.merge_strategy``).
+
+        ``_prebuilt`` is internal (checkpoint restore): a
+        ``(points_r, dim_perm, eps, eps_beta)`` tuple replaying a saved
+        generation's REORDER + ε verbatim, so ``load`` never recomputes
+        either."""
         if mesh is not None:
             from repro.runtime.sharded_index import ShardedKNNIndex
 
@@ -297,7 +331,7 @@ class KNNIndex:
                 points, config, epsilon,
                 mesh=mesh, mesh_axis=mesh_axis, merge=merge,
                 backend=backend, compile_counts=compile_counts,
-                executables=executables,
+                executables=executables, _prebuilt=_prebuilt,
             )
         cfg = config
         pts = jnp.asarray(points, jnp.float32)
@@ -305,14 +339,20 @@ class KNNIndex:
         assert cfg.k < npts, "K must be smaller than |D|"
         m = min(cfg.m, ndim)
 
-        # (1) REORDER — distances are dim-permutation invariant (§IV-D).
-        if cfg.reorder:
-            points_r, dim_perm = grid_lib.reorder_by_variance(pts)
+        if _prebuilt is not None:
+            points_r, dim_perm, eps, eps_beta = _prebuilt
+            points_r = jnp.asarray(points_r, jnp.float32)
+            t_select = 0.0
         else:
-            points_r, dim_perm = pts, None
+            # (1) REORDER — distances are dim-perm invariant (§IV-D).
+            if cfg.reorder:
+                points_r, dim_perm = grid_lib.reorder_by_variance(pts)
+            else:
+                points_r, dim_perm = pts, None
 
-        # (2) ε selection (§V-C2) — skipped when the caller pins ε.
-        eps, eps_beta, t_select = select_epsilon(points_r, cfg, epsilon, npts)
+            # (2) ε selection (§V-C2) — skipped when the caller pins ε.
+            eps, eps_beta, t_select = select_epsilon(
+                points_r, cfg, epsilon, npts)
 
         # (3) grid + pyramid indices (owned by this object).
         t0 = time.perf_counter()
@@ -435,6 +475,38 @@ class KNNIndex:
         ``executable_memory_analysis``."""
         return executable_memory_analysis(self.executables)
 
+    # -- persistence (DESIGN.md §7) ----------------------------------------
+
+    def save(self, directory: str, *, manager=None) -> int:
+        """Checkpoint the live generation (points, REORDER permutation,
+        ε, mutation state) through the atomic tmp+rename format of
+        ``checkpoint.CheckpointManager``; returns the step number
+        written (auto-incremented, so repeated saves keep a generation
+        history).  ``KNNIndex.load`` round-trips onto any mesh shape
+        with bit-identical answers."""
+        from repro.runtime import persistence
+        return persistence.save_index(self, directory, manager=manager)
+
+    @classmethod
+    def load(cls, directory: str, *, mesh=None, mesh_axis=None,
+             merge: str = "auto", step: Optional[int] = None,
+             backend: Optional[str] = None,
+             compile_counts: Optional[Dict[str, int]] = None,
+             executables: Optional[Dict[str, object]] = None):
+        """Rebuild a served index from a saved generation — the restart
+        path.  REORDER and ε selection are NOT recomputed (the stored
+        permutation and ε are replayed), and ``mesh`` routes exactly
+        like ``build``: None rebuilds a single-device ``KNNIndex``, a
+        ``jax.sharding.Mesh`` repartitions the same generation into a
+        ``ShardedKNNIndex`` — any shape, answers bit-identical to the
+        saved index."""
+        from repro.runtime import persistence
+        return persistence.load_index(
+            directory, mesh=mesh, mesh_axis=mesh_axis, merge=merge,
+            step=step, backend=backend, compile_counts=compile_counts,
+            executables=executables,
+        )
+
     # -- engine cache ------------------------------------------------------
 
     def _engine(self, kind: str, jitted, args: tuple, kwargs: dict):
@@ -525,17 +597,17 @@ class KNNIndex:
     # -- work split --------------------------------------------------------
 
     def _self_split(
-        self, gen: _Generation, k: int
+        self, gen: _Generation, k: int, rho: float
     ) -> Tuple[np.ndarray, np.ndarray, float]:
         """Dense/sparse assignment of the indexed cloud itself (cached
-        per k on the generation — home-cell densities never change
-        between compactions)."""
-        hit = gen.self_splits.get(k)
+        per (k, ρ) on the generation — home-cell densities never change
+        between compactions; ρ may be overridden online)."""
+        hit = gen.self_splits.get((k, rho))
         if hit is not None:
             return hit
         cfg = self.config
         split = split_lib.split_from_counts(
-            jnp.asarray(gen.home_counts), k, gen.grid.m, cfg.gamma, cfg.rho
+            jnp.asarray(gen.home_counts), k, gen.grid.m, cfg.gamma, rho
         )
         to_dense = np.asarray(split.to_dense)
         out = (
@@ -543,7 +615,7 @@ class KNNIndex:
             np.nonzero(~to_dense)[0].astype(np.int32),
             float(split.threshold),
         )
-        gen.self_splits[k] = out
+        gen.self_splits[(k, rho)] = out
         return out
 
     # -- mutations (DESIGN.md §6) ------------------------------------------
@@ -553,6 +625,7 @@ class KNNIndex:
         ids assigned to them, valid as of this call's return (i.e.
         post-compaction ids when the insert tripped the auto-compact
         threshold).  O(1) amortized; queries stay exact."""
+        validate_points(points, self.n_dims, what="inserted points")
         gen, mut = self._live
         new_mut, gids = mut.with_insert(points, gen.n_base, self.n_dims)
         self._live = (gen, new_mut)
@@ -623,11 +696,13 @@ class KNNIndex:
     # -- the query pipeline ------------------------------------------------
 
     def _drain(self, gen: _Generation, kq: int, n_q: int, queries_rp,
-               dense_ids, sparse_ids, home_counts, exclude_self: bool):
+               dense_ids, sparse_ids, home_counts, exclude_self: bool,
+               rho: Optional[float] = None):
         """Steps 5–8 of Algorithm 1: the §V-A work queue over the three
         engines.  Returns SQUARED distances (√ happens after any
         merge-time folding, so folds compare like with like)."""
         cfg = self.config
+        rho_floor = cfg.rho if rho is None else rho
         return queue_lib.run_work_queue(
             npts=n_q,
             k=kq,
@@ -640,7 +715,7 @@ class KNNIndex:
             n_batches=cfg.n_batches,
             online_rebalance=cfg.online_rebalance,
             sync_t1_after=cfg.rebalance_sync_batches,
-            min_sparse=int(math.ceil(cfg.rho * n_q)),
+            min_sparse=int(math.ceil(rho_floor * n_q)),
             demote_quantum=cfg.query_block,
         )
 
@@ -684,6 +759,7 @@ class KNNIndex:
         exclude_self: bool = False,
         *,
         _net_cells=None,
+        _rho: Optional[float] = None,
     ) -> "hybrid_lib.KNNResult":
         """Hybrid KNN of ``queries`` against the indexed reference cloud.
 
@@ -708,13 +784,17 @@ class KNNIndex:
 
         ``_net_cells`` is internal (sharded serving): raw reordered
         (delta, tombstone) point arrays whose home cells adjust this
-        grid's density classification to the net corpus.
+        grid's density classification to the net corpus.  ``_rho``
+        overrides the config's ρ floor for this call (the sharded
+        serving layer's online Eq. 6 re-suggestion) — pure work routing,
+        results are exact either way.
         """
         gen, mut = self._live
         if not mut.is_clean:
             assert _net_cells is None
             return self._query_mutated(gen, mut, queries, k, exclude_self)
         cfg = self.config
+        rho = cfg.rho if _rho is None else float(np.clip(_rho, 0.0, 1.0))
         kq = cfg.k if k is None else int(k)
         assert kq >= 1
         compiles_before = self.total_compiles
@@ -729,13 +809,11 @@ class KNNIndex:
         if is_self:
             n_q = npts_ref
             queries_rp = None
-            dense_ids, sparse_ids, threshold = self._self_split(gen, kq)
+            dense_ids, sparse_ids, threshold = self._self_split(gen, kq, rho)
             home_counts = gen.home_counts
         else:
+            validate_points(queries, self.n_dims)
             q = jnp.asarray(queries, jnp.float32)
-            assert q.ndim == 2 and q.shape[1] == self.n_dims, (
-                f"queries must be (|Q|, {self.n_dims}), got {q.shape}"
-            )
             n_q = int(q.shape[0])
             queries_r = q[:, gen.dim_perm] if gen.dim_perm is not None else q
             # The query-shape bucket: engine-cache keys see this padded
@@ -753,7 +831,7 @@ class KNNIndex:
                     gen.grid, q_cells, *_net_cells
                 ))
             split = split_lib.split_queries(
-                gen.grid, q_coords, kq, cfg.gamma, cfg.rho,
+                gen.grid, q_coords, kq, cfg.gamma, rho,
                 net_adjust=net_adjust,
             )
             to_dense = np.asarray(split.to_dense)
@@ -764,7 +842,7 @@ class KNNIndex:
 
         final_d, final_i, source, report = self._drain(
             gen, kq, n_q, queries_rp, dense_ids, sparse_ids, home_counts,
-            exclude_self,
+            exclude_self, rho=rho,
         )
         stats = self._stats(
             gen, len(dense_ids), len(sparse_ids), threshold, report,
@@ -808,10 +886,8 @@ class KNNIndex:
             excl = (net_gids.astype(np.int32) if exclude_self
                     else np.full((len(net),), -2, np.int32))
         else:
+            validate_points(queries, self.n_dims)
             q = jnp.asarray(queries, jnp.float32)
-            assert q.ndim == 2 and q.shape[1] == self.n_dims, (
-                f"queries must be (|Q|, {self.n_dims}), got {q.shape}"
-            )
             excl = (np.arange(q.shape[0], dtype=np.int32) if exclude_self
                     else np.full((int(q.shape[0]),), -2, np.int32))
         n_q = int(q.shape[0])

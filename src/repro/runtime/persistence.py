@@ -1,0 +1,139 @@
+"""Index generations on disk: ``KNNIndex.save()`` / ``KNNIndex.load()``.
+
+What a *generation* is on disk (DESIGN.md §7): the minimal state from
+which any placement of the index can be rebuilt deterministically and
+answer bit-identically —
+
+    points_ref     the corpus as given to build(), original dim order
+    points_r       the REORDERed corpus (the permutation applied)
+    dim_perm       the REORDER permutation itself (absent if reorder off)
+    delta_points / delta_live / base_tombs
+                   the pending MutationState, so a dirty index restores
+                   dirty (same answers, same later compaction)
+    extra          config (HybridConfig asdict), ε, ε_β, the original ε
+                   *argument* (replayed by compact()), generation number
+
+Grid, pyramid, and the shard partition are deliberately NOT stored:
+they are pure deterministic functions of ``(points_r, ε, config)`` —
+the same ``build_grid``/``build_pyramid``/cell-order code path runs at
+load as at build, so storing them would only create a second source of
+truth that could drift.  What load *never* redoes is the expensive,
+sampled, or order-sensitive work: REORDER's variance sort and the ε
+selection sweep are replayed from the stored permutation and scalar.
+That is also what makes cross-mesh restore work: a generation saved
+from a single device loads onto a 2×4 mesh (or vice versa) by simply
+re-partitioning the same ``points_r`` along the same global cell order.
+
+Storage goes through ``checkpoint.CheckpointManager`` — atomic
+tmp+rename step directories, crc-validated manifest, LATEST pointer
+with durable-step fallback — so index generations get the same crash
+safety as training state, and a fault-injected crash mid-save leaves
+the previous generation restorable (``tests/test_fault_serving.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Dict, Optional
+
+import numpy as np
+
+import repro.core.hybrid as hybrid_lib
+from repro.checkpoint import CheckpointManager
+from repro.runtime import mutation as mut_lib
+
+FORMAT = "knn-index-generation-v1"
+
+
+def _manager(directory: str, manager) -> CheckpointManager:
+    if manager is not None:
+        return manager
+    # Sync writes: save() returning means the generation is durable —
+    # the contract a serving restart path needs.
+    return CheckpointManager(directory, async_save=False)
+
+
+def save_index(index, directory: str, *, manager=None) -> int:
+    """Write the index's live generation as the next checkpoint step.
+    Works for both ``KNNIndex`` and ``ShardedKNNIndex`` (the sharded
+    form stores the same *global* generation — placement is a load-time
+    choice, not a stored fact)."""
+    mgr = _manager(directory, manager)
+    gen, mut = index._live
+    tree = {
+        "points_ref": np.asarray(gen.points_ref, np.float32),
+        "points_r": np.asarray(gen.points_r, np.float32),
+        "delta_points": np.asarray(mut.delta_points, np.float32),
+        "delta_live": np.asarray(mut.delta_live, bool),
+        "base_tombs": np.asarray(mut.base_tombs, np.int32),
+    }
+    if gen.dim_perm is not None:
+        tree["dim_perm"] = np.asarray(gen.dim_perm, np.int32)
+    extra = {
+        "format": FORMAT,
+        "config": dataclasses.asdict(index.config),
+        "eps": float(gen.eps),
+        "eps_beta": float(gen.eps_beta),
+        "epsilon_arg": (None if index._epsilon_arg is None
+                        else float(index._epsilon_arg)),
+        "generation": int(index.generation),
+    }
+    latest = mgr.latest_step()
+    step = 0 if latest is None else latest + 1
+    mgr.save(step, tree, extra=extra)
+    mgr.wait()
+    return step
+
+
+def load_index(directory: str, *, mesh=None, mesh_axis=None,
+               merge: str = "auto", step: Optional[int] = None,
+               backend: Optional[str] = None,
+               compile_counts: Optional[Dict[str, int]] = None,
+               executables: Optional[Dict[str, object]] = None):
+    """Rebuild a served index from a saved generation (see module
+    docstring for the exactness argument).  ``mesh`` routes like
+    ``KNNIndex.build``; the returned index answers bit-identically to
+    the one that called ``save`` regardless of either side's mesh."""
+    from repro.runtime.knn_index import KNNIndex
+
+    mgr = _manager(directory, None)
+    if step is None:
+        step = mgr.latest_step()
+        if step is None:
+            raise FileNotFoundError(
+                f"no durable index generation in {directory}")
+    # Template keys come from the manifest: the tree is a flat dict, so
+    # any non-None placeholder per key reconstructs it.
+    with open(os.path.join(directory, f"step-{step:09d}",
+                           "manifest.json")) as f:
+        keys = list(json.load(f)["index"].keys())
+    tree, extra, step = mgr.restore({k: 0 for k in keys}, step=step)
+    if extra.get("format") != FORMAT:
+        raise ValueError(
+            f"checkpoint at {directory} step {step} is not an index "
+            f"generation (format={extra.get('format')!r}; expected "
+            f"{FORMAT!r} — training checkpoints do not load as indexes)")
+
+    cfg = hybrid_lib.HybridConfig(**extra["config"])
+    prebuilt = (
+        tree["points_r"],
+        tree.get("dim_perm"),
+        float(extra["eps"]),
+        float(extra["eps_beta"]),
+    )
+    index = KNNIndex.build(
+        tree["points_ref"], cfg, extra["epsilon_arg"],
+        backend=backend, compile_counts=compile_counts,
+        executables=executables, mesh=mesh, mesh_axis=mesh_axis,
+        merge=merge, _prebuilt=prebuilt,
+    )
+    index.generation = int(extra["generation"])
+    mut = mut_lib.MutationState(
+        delta_points=np.asarray(tree["delta_points"], np.float32),
+        delta_live=np.asarray(tree["delta_live"], bool),
+        base_tombs=np.asarray(tree["base_tombs"], np.int32),
+    )
+    if not mut.is_clean:
+        index._live = (index._live[0], mut)
+    return index

@@ -54,16 +54,24 @@ from repro.core import distributed as dist_lib
 from repro.core import grid as grid_lib
 from repro.core import splitter as split_lib
 from repro.runtime import mutation as mut_lib
+from repro.runtime.faults import FaultInjector
 from repro.runtime.knn_index import (
     _ENGINE_CACHE, KNNIndex, _engine_key, executable_memory_analysis,
-    pad_rows_pow2, run_engine, select_epsilon,
+    pad_rows_pow2, run_engine, select_epsilon, validate_points,
 )
+from repro.runtime.serving import ServingConfig, ServingSupervisor
+from repro.runtime.stragglers import suggest_rho
 from repro.utils import cdiv, pow2_bucket
+
+#: Mesh axis name reserved for replica groups (launch.make_serving_mesh):
+#: index state is replicated along it, so it is never a shard axis.
+REPLICA_AXIS = "replica"
 
 
 def _resolve_axes(mesh: Mesh, mesh_axis) -> Tuple[str, ...]:
     if mesh_axis is None:
-        return tuple(mesh.axis_names)
+        axes = tuple(a for a in mesh.axis_names if a != REPLICA_AXIS)
+        return axes if axes else tuple(mesh.axis_names)
     if isinstance(mesh_axis, str):
         return (mesh_axis,)
     return tuple(mesh_axis)
@@ -133,6 +141,20 @@ class ShardedKNNIndex:
         self.axes = axes
         self.n_shards = len(shards)
         self.merge = dist_lib.merge_strategy(self.n_shards, merge)
+        # Replica groups: every mesh axis NOT in the shard axes (the
+        # REPLICA_AXIS of a 2-D serving mesh) multiplies into serving
+        # lanes over the same shard state — routing/health/hedging run
+        # per (replica, shard) lane (DESIGN.md §7).
+        self.n_replicas = int(np.prod(
+            [mesh.shape[a] for a in mesh.axis_names if a not in axes]
+        )) if set(mesh.axis_names) - set(axes) else 1
+        # Fault-tolerant serving state (configure_serving): lazily
+        # auto-enabled on the first query when replica groups exist.
+        self._supervisor: Optional[ServingSupervisor] = None
+        self._faults: FaultInjector = FaultInjector()
+        self._serve_step = 0
+        self._ewma_t1: Optional[float] = None
+        self._ewma_t2: Optional[float] = None
         gen = _ShardedGeneration(
             points_ref=points_ref,
             points_r=points_r,
@@ -175,10 +197,13 @@ class ShardedKNNIndex:
         backend: Optional[str] = None,
         compile_counts: Optional[Dict[str, int]] = None,
         executables: Optional[Dict[str, object]] = None,
+        _prebuilt: Optional[tuple] = None,
     ) -> "ShardedKNNIndex":
         """Per-database steps, placement-aware: global REORDER + ε
         selection (one geometry for every shard), cell-sorted row-range
-        partition, then the ``shard_map`` grid+pyramid build."""
+        partition, then the ``shard_map`` grid+pyramid build.
+        ``_prebuilt`` replays a saved generation's REORDER + ε
+        (``runtime.persistence``) so restarts recompute neither."""
         cfg = config
         axes = _resolve_axes(mesh, mesh_axis)
         n_shards = int(np.prod([mesh.shape[a] for a in axes]))
@@ -194,15 +219,21 @@ class ShardedKNNIndex:
         )
         m = min(cfg.m, ndim)
 
-        # (1) REORDER — once, globally: every shard shares the dim perm.
-        if cfg.reorder:
-            points_r, dim_perm = grid_lib.reorder_by_variance(pts)
+        if _prebuilt is not None:
+            points_r, dim_perm, eps, eps_beta = _prebuilt
+            points_r = jnp.asarray(points_r, jnp.float32)
+            t_select = 0.0
         else:
-            points_r, dim_perm = pts, None
+            # (1) REORDER — once, globally: every shard shares the perm.
+            if cfg.reorder:
+                points_r, dim_perm = grid_lib.reorder_by_variance(pts)
+            else:
+                points_r, dim_perm = pts, None
 
-        # (2) ε selection — once, globally: one grid geometry class, so
-        # P equal-shape shards share one set of compiled engines.
-        eps, eps_beta, t_select = select_epsilon(points_r, cfg, epsilon, npts)
+            # (2) ε selection — once, globally: one grid geometry class,
+            # so P equal-shape shards share one set of compiled engines.
+            eps, eps_beta, t_select = select_epsilon(
+                points_r, cfg, epsilon, npts)
 
         t0 = time.perf_counter()
         # (3) partition: row ranges of the cell-sorted order of a global
@@ -355,6 +386,73 @@ class ShardedKNNIndex:
     def memory_analysis(self):
         return executable_memory_analysis(self.executables)
 
+    @property
+    def placement_shape(self) -> Tuple[int, int]:
+        """(replicas, shards) — the serving placement, independent of
+        how the mesh spells its axes."""
+        return (self.n_replicas, self.n_shards)
+
+    # -- fault-tolerant serving (DESIGN.md §7) -----------------------------
+
+    def configure_serving(
+        self,
+        serving: Optional[ServingConfig] = None,
+        faults: Optional[FaultInjector] = None,
+    ) -> ServingSupervisor:
+        """Install (or replace) the fault policy for this index's query
+        path: straggler-driven hedging, retry across replicas, health
+        marking, degraded coverage.  ``faults`` plugs a deterministic
+        ``FaultInjector`` in front of every sub-query (tests/benches).
+        Returns the ``ServingSupervisor`` for introspection."""
+        self._supervisor = ServingSupervisor(
+            self.n_replicas, self.n_shards, serving)
+        if faults is not None:
+            self._faults = faults
+        return self._supervisor
+
+    @property
+    def supervisor(self) -> Optional[ServingSupervisor]:
+        """The active fault policy — auto-created on first query when
+        the mesh has replica groups, else None until
+        ``configure_serving``."""
+        if self._supervisor is None and self.n_replicas > 1:
+            self.configure_serving()
+        return self._supervisor
+
+    @property
+    def rho_suggestion(self) -> Optional[float]:
+        """Online Eq. 6 re-suggestion from the serve-time EWMA of the
+        per-engine times (the paper's load-balance lever, reused as the
+        straggler mitigation §V-F) — None before the first serve."""
+        if self._ewma_t1 is None or self._ewma_t2 is None:
+            return None
+        return suggest_rho(self._ewma_t1, self._ewma_t2)
+
+    def _note_engine_times(self, t1: float, t2: float) -> None:
+        a = 0.3
+        if t1 > 0.0:
+            self._ewma_t1 = t1 if self._ewma_t1 is None else \
+                (1 - a) * self._ewma_t1 + a * t1
+        if t2 > 0.0:
+            self._ewma_t2 = t2 if self._ewma_t2 is None else \
+                (1 - a) * self._ewma_t2 + a * t2
+
+    def _rho_override(self) -> Optional[float]:
+        sup = self._supervisor
+        if sup is None or not sup.cfg.adapt_rho:
+            return None
+        return self.rho_suggestion
+
+    # -- persistence (DESIGN.md §7) ----------------------------------------
+
+    def save(self, directory: str, *, manager=None) -> int:
+        """Checkpoint the live *global* generation (placement is a
+        load-time choice): ``KNNIndex.load(dir, mesh=...)`` rebuilds it
+        onto any mesh shape with bit-identical answers — see
+        ``runtime.persistence``."""
+        from repro.runtime import persistence
+        return persistence.save_index(self, directory, manager=manager)
+
     # -- collective merge engine -------------------------------------------
 
     def _merge(self, k_out: int, dists: np.ndarray, ids: np.ndarray,
@@ -393,6 +491,7 @@ class ShardedKNNIndex:
         """Add points (delta buffer).  Returns their global ids, valid
         as of this call's return (post-compaction ids if the insert
         tripped the auto-compact threshold)."""
+        validate_points(points, self.n_dims, what="inserted points")
         gen, mut = self._live
         new_mut, gids = mut.with_insert(points, gen.n_base, self.n_dims)
         self._live = (gen, new_mut)
@@ -495,10 +594,8 @@ class ShardedKNNIndex:
             queries_r = gen.points_r
             n_q = npts
         else:
+            validate_points(queries, self.n_dims)
             q = jnp.asarray(queries, jnp.float32)
-            assert q.ndim == 2 and q.shape[1] == self.n_dims, (
-                f"queries must be (|Q|, {self.n_dims}), got {q.shape}"
-            )
             n_q = int(q.shape[0])
             queries_r = q[:, gen.dim_perm] if gen.dim_perm is not None else q
 
@@ -511,14 +608,14 @@ class ShardedKNNIndex:
 
         excl = (np.arange(n_q, dtype=np.int32) if exclude_self
                 else np.full((n_q,), -2, np.int32))
-        md, mi, sources, shard_stats, t_merge = self._shard_serve(
+        md, mi, sources, shard_stats, t_merge, serve = self._shard_serve(
             gen, kq, k_eff, n_q, queries_r, excl
         )
         md = md[:n_q]
         mi = mi[:n_q]
 
         stats = self._stats(
-            gen, shard_stats, t_merge, compiles_before
+            gen, shard_stats, t_merge, compiles_before, serve=serve
         )
         return hybrid_lib.KNNResult(
             dists=md,
@@ -528,6 +625,7 @@ class ShardedKNNIndex:
             # 2 brute) — the serving-latency-relevant label.
             source=np.max(sources, axis=0),
             stats=stats,
+            coverage=self._coverage(n_q, serve),
         )
 
     def _query_mutated(
@@ -561,10 +659,8 @@ class ShardedKNNIndex:
             excl = (net_gids.astype(np.int32) if exclude_self
                     else np.full((len(net),), -2, np.int32))
         else:
+            validate_points(queries, self.n_dims)
             q = jnp.asarray(queries, jnp.float32)
-            assert q.ndim == 2 and q.shape[1] == self.n_dims, (
-                f"queries must be (|Q|, {self.n_dims}), got {q.shape}"
-            )
             excl = (np.arange(q.shape[0], dtype=np.int32) if exclude_self
                     else np.full((int(q.shape[0]),), -2, np.int32))
         n_q = int(q.shape[0])
@@ -588,7 +684,7 @@ class ShardedKNNIndex:
             n_base,
         )
         k_eff = min(k_out + (1 if gen.n_pad else 0), gen.shard_n)
-        md, mi, sources, shard_stats, t_merge = self._shard_serve(
+        md, mi, sources, shard_stats, t_merge, serve = self._shard_serve(
             gen, k_out, k_eff, n_q, queries_r,
             np.full((n_q,), -2, np.int32), shard_net_cells,
         )
@@ -622,13 +718,15 @@ class ShardedKNNIndex:
         t_delta = time.perf_counter() - t0
 
         stats = self._stats(
-            gen, shard_stats, t_merge, compiles_before, t_delta=t_delta
+            gen, shard_stats, t_merge, compiles_before, t_delta=t_delta,
+            serve=serve,
         )
         return hybrid_lib.KNNResult(
             dists=np.asarray(fd)[:n_q],
             ids=np.asarray(fi)[:n_q],
             source=np.max(sources, axis=0),
             stats=stats,
+            coverage=self._coverage(n_q, serve),
         )
 
     def _shard_serve(self, gen: _ShardedGeneration, k_out: int,
@@ -641,22 +739,73 @@ class ShardedKNNIndex:
         the P blocks to k_out over the query-shape bucket (same pow2
         rounding as the per-shard engines, so batch-size sweeps share
         merge executables too).  Returns the merged (qb, k_out) block
-        (post-√ distances), per-shard sources/stats, and the merge
-        time."""
+        (post-√ distances), per-shard sources/stats, the merge time,
+        and the serve record (fault accounting; None when the index has
+        no fault policy — single replica, never configured).
+
+        With a ``ServingSupervisor`` active every sub-query runs
+        through its retry/hedge loop (``serving.run_subquery``); a
+        shard no replica could serve stays (+inf, −1) in the merge and
+        is reported in ``serve["shards_lost"]`` — the degrade path."""
         cfg = self.config
-        shard_d = np.empty((self.n_shards, n_q, k_eff), np.float32)
-        shard_i = np.empty((self.n_shards, n_q, k_eff), np.int32)
-        sources = np.empty((self.n_shards, n_q), np.int32)
+        sup = self.supervisor
+        rho_over = self._rho_override()
+        step = self._serve_step
+        self._serve_step += 1
+        # (+inf, −1) baseline: a lost shard's block is already "no
+        # candidates" for the merge.
+        shard_d = np.full((self.n_shards, n_q, k_eff), np.inf, np.float32)
+        shard_i = np.full((self.n_shards, n_q, k_eff), -1, np.int32)
+        sources = np.zeros((self.n_shards, n_q), np.int32)
         shard_stats = []
-        for p, shard in enumerate(gen.shards):
-            nc = None if shard_net_cells is None else shard_net_cells[p]
-            res = shard.query(queries_r, k=k_eff, _net_cells=nc)
+        serve = None if sup is None else {
+            "n_hedged": 0, "n_hedge_wins": 0, "n_subquery_retries": 0,
+            "n_subquery_failures": 0, "shards_lost": [],
+            "t_effective": 0.0,
+        }
+        lane_times: Dict[int, float] = {}
+
+        def take(p, res):
             shard_d[p] = res.dists
             gid = gen.gids[p]
             li = res.ids
             shard_i[p] = np.where(li >= 0, gid[np.clip(li, 0, None)], -1)
             sources[p] = res.source
             shard_stats.append(res.stats)
+
+        for p, shard in enumerate(gen.shards):
+            nc = None if shard_net_cells is None else shard_net_cells[p]
+            if sup is None:
+                take(p, shard.query(queries_r, k=k_eff, _net_cells=nc,
+                                    _rho=rho_over))
+                continue
+
+            def attempt(replica, p=p, shard=shard, nc=nc):
+                extra = self._faults.subquery(replica, p, step)
+                t0 = time.perf_counter()
+                res = shard.query(queries_r, k=k_eff, _net_cells=nc,
+                                  _rho=rho_over)
+                return res, time.perf_counter() - t0 + extra
+
+            out = sup.run_subquery(p, step, attempt)
+            serve["n_hedged"] += int(out.hedged)
+            serve["n_hedge_wins"] += int(out.hedge_won)
+            serve["n_subquery_retries"] += out.retries
+            serve["n_subquery_failures"] += out.failures
+            lane_times.update(out.times)
+            if not out.served:
+                serve["shards_lost"].append(p)
+                continue
+            serve["t_effective"] += out.t_effective
+            take(p, out.result)
+
+        if sup is not None:
+            sup.observe(lane_times)
+        if shard_stats:
+            self._note_engine_times(
+                float(np.mean([s.t1_per_query for s in shard_stats])),
+                float(np.mean([s.t2_per_query for s in shard_stats])),
+            )
 
         qb = pow2_bucket(n_q, cfg.query_block)
         dpad = np.full((self.n_shards, qb, k_eff), np.inf, np.float32)
@@ -670,12 +819,51 @@ class ShardedKNNIndex:
         md, mi = self._merge(k_out, dpad, ipad, epad, gen.n_pad)
         t_merge = time.perf_counter() - t0
         return (np.asarray(md), np.asarray(mi), sources, shard_stats,
-                t_merge)
+                t_merge, serve)
+
+    def _coverage(self, n_q: int, serve) -> Optional[np.ndarray]:
+        """The degraded-result contract: (|Q|, n_shards) bool, column s
+        False iff shard s contributed nothing (all replicas failed it).
+        None when no fault policy is active — coverage is then total by
+        construction."""
+        if serve is None:
+            return None
+        cov = np.ones((n_q, self.n_shards), bool)
+        for p in serve["shards_lost"]:
+            cov[:, p] = False
+        return cov
 
     def _stats(self, gen: _ShardedGeneration, shard_stats, t_merge: float,
-               compiles_before: int, t_delta: float = 0.0):
+               compiles_before: int, t_delta: float = 0.0, serve=None):
+        if not shard_stats:
+            # Every shard lost: no engine ran; report only the serve
+            # accounting so the caller still sees an honest record.
+            return hybrid_lib.JoinStats(
+                epsilon=gen.eps, epsilon_beta=gen.eps_beta,
+                t_merge=t_merge, t_delta=t_delta,
+                t_wall=t_merge + t_delta,
+                n_engine_compiles=self.total_compiles - compiles_before,
+                n_hedged=serve["n_hedged"],
+                n_hedge_wins=serve["n_hedge_wins"],
+                n_subquery_retries=serve["n_subquery_retries"],
+                n_subquery_failures=serve["n_subquery_failures"],
+                shards_lost=tuple(serve["shards_lost"]),
+                t_effective=t_merge + t_delta,
+            )
         t1 = float(np.mean([s.t1_per_query for s in shard_stats]))
         t2 = float(np.mean([s.t2_per_query for s in shard_stats]))
+        t_wall = (sum(s.t_wall for s in shard_stats) + t_merge + t_delta)
+        if serve is None:
+            serve_kw = dict(t_effective=t_wall)
+        else:
+            serve_kw = dict(
+                n_hedged=serve["n_hedged"],
+                n_hedge_wins=serve["n_hedge_wins"],
+                n_subquery_retries=serve["n_subquery_retries"],
+                n_subquery_failures=serve["n_subquery_failures"],
+                shards_lost=tuple(serve["shards_lost"]),
+                t_effective=serve["t_effective"] + t_merge + t_delta,
+            )
         return hybrid_lib.JoinStats(
             epsilon=gen.eps,
             epsilon_beta=gen.eps_beta,
@@ -691,7 +879,7 @@ class ShardedKNNIndex:
             t_sparse=sum(s.t_sparse for s in shard_stats),
             t_brute=sum(s.t_brute for s in shard_stats),
             t_delta=t_delta,
-            t_wall=sum(s.t_wall for s in shard_stats) + t_merge + t_delta,
+            t_wall=t_wall,
             t_merge=t_merge,
             t1_per_query=t1,
             t2_per_query=t2,
@@ -707,4 +895,5 @@ class ShardedKNNIndex:
             rho_online=float(np.mean(
                 [s.rho_online for s in shard_stats])),
             n_engine_compiles=self.total_compiles - compiles_before,
+            **serve_kw,
         )

@@ -66,6 +66,39 @@ class StragglerDetector:
         return [i for i in range(self.n_hosts)
                 if self.flags[i] < self.cfg.patience]
 
+    # -- serving-side view (hedged sub-queries, DESIGN.md §7) -------------
+
+    @property
+    def warmed_up(self) -> bool:
+        """True once enough steps have been absorbed that the fleet
+        statistics are meaningful (compile/cache warmup excluded)."""
+        return self.count > self.cfg.warmup_steps
+
+    def fleet_threshold(self) -> Optional[float]:
+        """The ``mu + k·sigma`` straggler cut at fleet level — the hedge
+        trigger for serving sub-queries: a sub-query slower than this is
+        re-issued to a sibling replica.  ``None`` during warmup (hedging
+        on compile-time noise would hedge every cold query)."""
+        if not self.warmed_up:
+            return None
+        fleet_mu = float(np.median(self.mu))
+        fleet_sigma = float(np.sqrt(np.median(self.var)) + 1e-9)
+        return fleet_mu + self.cfg.k_sigma * fleet_sigma
+
+    def observed_step(self, times: Dict[int, float]) -> List[int]:
+        """Partial-observation update for serving: one query batch only
+        exercises a subset of the (replica × shard) lanes.  Observed
+        lanes feed their measured times; unobserved lanes are filled
+        with a neutral value (their own mu once seen, else the median of
+        this step's observations) so their statistics neither drift nor
+        poison the fleet median with zeros."""
+        fill = float(np.median(list(times.values()))) if times else 0.0
+        step = self.mu.copy() if self.count > 0 \
+            else np.full(self.n_hosts, fill)
+        for host, t in times.items():
+            step[host] = t
+        return self.update(step)
+
 
 def suggest_rho(t1_per_query: float, t2_per_query: float) -> float:
     """The paper's Eq. 6, reused online as the straggler-rebalance lever

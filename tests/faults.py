@@ -1,0 +1,69 @@
+"""Named fault scenarios for the serving tests (DESIGN.md §7).
+
+The primitives live in ``repro.runtime.faults`` (shipped, importable by
+users who want to drill their own deployments); this module composes
+them into the handful of scenarios the acceptance tests exercise, so
+each subprocess test body reads as "serve under <scenario>" instead of
+ten lines of script setup.  Importable from subprocess bodies because
+``run_devices`` puts tests/ on PYTHONPATH alongside src/.
+
+Scenario design notes:
+  * Hedging scenarios must use *transient* spikes (sparse in step space,
+    larger than the hedge threshold).  A persistent spike on one lane
+    inflates that lane's EWMA and with it the fleet threshold, so the
+    detector stops calling it anomalous — by design: persistent
+    stragglers are a routing/health problem, not a hedging problem.
+  * Replica kills start at step >= 1 so step 0 compiles engines on the
+    healthy path and later steps exercise retry without recompiles.
+"""
+from repro.runtime.faults import (  # noqa: F401  (re-exported surface)
+    CheckpointCrash,
+    CrashingCheckpointManager,
+    FaultInjector,
+    ScriptedFaults,
+    SubQueryFault,
+)
+
+
+def transient_spikes(replica=0, shards=(0, 1), seconds=5.0,
+                     period=4, start=6, until=40) -> ScriptedFaults:
+    """Sparse large latency spikes on one replica: the hedging target.
+    Default spikes every 4th step from 6 — sparse enough that the fleet
+    EWMA stays near the healthy latency and the spikes stay anomalous."""
+    f = ScriptedFaults()
+    for s in shards:
+        f.add_latency(replica, s, seconds, steps=range(start, until, period))
+    return f
+
+
+def flaky_replica(replica=1, shards=(0, 1), steps=(1, 2)) -> ScriptedFaults:
+    """A replica that raises on given steps, then recovers — exercises
+    retry-on-sibling and the consecutive-failure health streak."""
+    f = ScriptedFaults()
+    for s in shards:
+        f.fail_subquery(replica, s, steps=steps)
+    return f
+
+
+def killed_replica(replica=1, at_step=1) -> ScriptedFaults:
+    """A replica whose every sub-query fails from ``at_step`` on — the
+    permanent-loss case: retries land on siblings, the replica is marked
+    unhealthy, results stay bit-identical."""
+    return ScriptedFaults().kill_replica(replica, at_step=at_step)
+
+
+def lost_shard(shard=0, replicas=(0, 1), at_step=1, until=40) -> ScriptedFaults:
+    """Every replica fails one shard: unrecoverable — the degrade path.
+    The serve call must NOT raise; the shard's column goes False in the
+    coverage mask and its merge block contributes (+inf, -1)."""
+    f = ScriptedFaults()
+    for r in replicas:
+        f.fail_subquery(r, shard, steps=range(at_step, until))
+    return f
+
+
+def crash_mid_checkpoint(phase="pre-manifest") -> ScriptedFaults:
+    """Crash the next checkpoint write at ``phase`` (one of pre-arrays /
+    pre-manifest / pre-latest), then recover — pair with
+    ``CrashingCheckpointManager``."""
+    return ScriptedFaults().crash_checkpoint(phase)

@@ -1,0 +1,387 @@
+"""Fault-tolerant serving acceptance (DESIGN.md §7): replica groups on
+the 2-D (replicas × shards) mesh, hedged sub-queries, retry + health
+marking, degraded coverage on unrecoverable shard loss, and
+checkpointed index generations restored across mesh shapes.
+
+Mesh cases run in subprocesses with 4 fake devices (XLA locks the
+device count at first jax import); the crash-mid-checkpoint cases are
+single-device and run in-process.  Fault scenarios come from
+tests/faults.py; everything is scripted and deterministic — no sleeps,
+no flaky timing."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import HybridConfig
+from repro.runtime import KNNIndex
+
+from faults import CheckpointCrash, CrashingCheckpointManager, ScriptedFaults
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+PREAMBLE = """
+    from repro.core import HybridConfig
+    from repro.runtime import (KNNIndex, ShardedKNNIndex, ServingConfig,
+                               StragglerConfig)
+    from repro.launch.mesh import make_serving_mesh
+    import faults as scenarios
+
+    def make_db(seed=0, n_core=300, n_bg=140, dim=6):
+        r = np.random.default_rng(seed)
+        core = (0.05 * r.normal(size=(n_core, dim))).astype(np.float32)
+        bg = r.uniform(-3.0, 3.0, (n_bg, dim)).astype(np.float32)
+        return np.concatenate([core, bg]).astype(np.float32)
+
+    def make_queries(seed=1, n=60, dim=6):
+        r = np.random.default_rng(seed)
+        near = (0.05 * r.normal(size=(n - n // 3, dim))).astype(np.float32)
+        far = r.uniform(3.0, 6.0, (n // 3, dim)).astype(np.float32)
+        return np.concatenate([near, far]).astype(np.float32)
+
+    CFG = HybridConfig(k=4, m=4, gamma=0.3, rho=0.15, n_batches=2,
+                       backend="ref", online_rebalance=False)
+
+    def build_pair(db, replicas=2, shards=2, cfg=CFG):
+        mesh = make_serving_mesh(shards, replicas=replicas)
+        sharded = KNNIndex.build(db, cfg, mesh=mesh)
+        single = KNNIndex.build(db, cfg)
+        return sharded, single
+"""
+
+
+def run_devices(body: str, n_devices: int = 4, timeout: int = 900):
+    code = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = \
+            "--xla_force_host_platform_device_count={n_devices}"
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+    """) + textwrap.dedent(PREAMBLE) + textwrap.dedent(body)
+    env = dict(os.environ, PYTHONPATH=os.pathsep.join(
+        [os.path.join(ROOT, "src"), os.path.join(ROOT, "tests")]))
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+    assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
+    return proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# healthy replicated serving: parity, placement, zero-compile steady state
+# ---------------------------------------------------------------------------
+
+def test_replicated_mesh_healthy_parity():
+    """2 replicas × 2 shards answers bit-identically to the
+    single-device index, reports full coverage, and replica groups add
+    zero engine compiles (replicas replicate, shard axis shards)."""
+    run_devices("""
+        db = make_db(seed=30)
+        q = make_queries(seed=31)
+        sharded, single = build_pair(db)
+        assert sharded.placement_shape == (2, 2)
+        assert sharded.n_shards == 2 and sharded.n_replicas == 2
+
+        want = single.query(q)
+        res = sharded.query(q)
+        np.testing.assert_array_equal(res.ids, want.ids)
+        np.testing.assert_allclose(res.dists, want.dists,
+                                   rtol=2e-6, atol=2e-6)
+        # replica groups active -> supervisor auto-created, full coverage
+        assert sharded.supervisor is not None
+        assert res.coverage is not None and res.coverage.shape == (60, 2)
+        assert res.coverage.all() and res.fully_covered
+        assert res.stats.shards_lost == ()
+        assert res.stats.n_subquery_failures == 0
+
+        # steady state: repeat queries in the same shape bucket compile
+        # nothing new (merge compiled once, engines shared across shards)
+        before = sharded.total_compiles
+        for step in range(3):
+            r = sharded.query(make_queries(seed=40 + step))
+            np.testing.assert_array_equal(
+                r.ids, single.query(make_queries(seed=40 + step)).ids)
+        assert sharded.total_compiles == before
+        assert sharded.compile_counts["merge"] == 1
+    """)
+
+
+# ---------------------------------------------------------------------------
+# faults: retry, health, kill, degrade
+# ---------------------------------------------------------------------------
+
+def test_replica_kill_is_invisible_in_results():
+    """Killing a replica mid-serve: sub-queries routed to it fail, the
+    supervisor retries them on the sibling, results stay bit-identical,
+    no shard is lost, and the dead replica is marked unhealthy and
+    leaves the routing set."""
+    run_devices("""
+        db = make_db(seed=32)
+        sharded, single = build_pair(db)
+        f = scenarios.killed_replica(replica=1, at_step=1)
+        sup = sharded.configure_serving(faults=f)
+
+        retries = 0
+        for step in range(6):
+            q = make_queries(seed=50 + step)
+            res = sharded.query(q)
+            np.testing.assert_array_equal(res.ids, single.query(q).ids)
+            assert res.coverage.all(), f"lost coverage at step {step}"
+            assert res.stats.shards_lost == ()
+            retries += res.stats.n_subquery_retries
+        assert retries > 0, "kill never exercised the retry path"
+        assert f.count("kill") > 0
+        # two consecutive failures (default unhealthy_after) drop it
+        assert not sup.replica_healthy(1)
+        assert sup.healthy_replicas() == [0]
+        # once unhealthy it stops being offered traffic: healthy steps
+        # stop injecting kill events
+        n_kills = f.count("kill")
+        sharded.query(make_queries(seed=60))
+        assert f.count("kill") == n_kills
+    """)
+
+
+def test_flaky_replica_recovers_health():
+    """A replica that fails once then recovers: the failure streak
+    starts but a later success resets it before ``unhealthy_after``
+    trips, so the replica stays in the routing set (the hysteresis
+    that separates a transient flake from a dead replica)."""
+    run_devices("""
+        db = make_db(seed=33)
+        sharded, single = build_pair(db)
+        f = scenarios.flaky_replica(replica=1, shards=(0, 1), steps=(1,))
+        sup = sharded.configure_serving(faults=f)
+        for step in range(5):
+            q = make_queries(seed=70 + step)
+            res = sharded.query(q)
+            np.testing.assert_array_equal(res.ids, single.query(q).ids)
+            assert res.coverage.all()
+        # the flaky step started a streak; a later success reset it
+        assert f.count("fail") > 0
+        assert sup.replica_healthy(1)
+        assert sup.healthy_replicas() == [0, 1]
+    """)
+
+
+def test_lost_shard_degrades_with_exact_coverage():
+    """Every replica fails shard 0: the serve call must NOT raise; the
+    result flags exactly shard 0 in the coverage mask, and rows whose
+    true neighbors all live outside shard 0 stay bit-identical."""
+    run_devices("""
+        db = make_db(seed=34)
+        q = make_queries(seed=35)
+        sharded, single = build_pair(db)
+        f = scenarios.lost_shard(shard=0, replicas=(0, 1), at_step=0)
+        sharded.configure_serving(
+            ServingConfig(max_attempts=2), faults=f)
+
+        want = single.query(q)
+        res = sharded.query(q)                    # must not raise
+        assert res.stats.shards_lost == (0,)
+        assert res.stats.n_subquery_failures >= 2
+        assert not res.fully_covered
+        # the mask flags exactly the lost shard, every query row
+        assert (~res.coverage[:, 0]).all() and res.coverage[:, 1].all()
+
+        # shard 0's resident global ids (pad duplicates included)
+        owned0 = set(np.asarray(sharded._live[0].gids[0]).tolist())
+        hit0 = np.isin(want.ids, list(owned0)).any(axis=1)
+        # rows untouched by shard 0 are bit-identical...
+        np.testing.assert_array_equal(res.ids[~hit0], want.ids[~hit0])
+        assert (~hit0).sum() > 0, "test db gave shard 0 every neighbor"
+        # ...and no row smuggles in a shard-0 id (those candidates are
+        # gone, only survivor candidates may appear)
+        assert not np.isin(res.ids, list(owned0)).any()
+        assert (res.ids >= 0).all()               # k <= survivor candidates
+    """)
+
+
+def test_transient_spikes_trigger_hedging():
+    """Sparse large latency spikes on one replica: after detector
+    warmup the spiked sub-queries blow past mu + k*sigma, get hedged to
+    the sibling, the hedge wins, and effective latency is accounted at
+    threshold + t_sibling — while answers stay bit-identical."""
+    run_devices("""
+        db = make_db(seed=36)
+        sharded, single = build_pair(db)
+        f = scenarios.transient_spikes(replica=0, shards=(0, 1),
+                                       seconds=5.0, period=4, start=6)
+        sharded.configure_serving(
+            ServingConfig(detector=StragglerConfig(warmup_steps=4)),
+            faults=f)
+
+        hedged = wins = 0
+        t_eff = t_wall = 0.0
+        for step in range(14):
+            q = make_queries(seed=80 + step)
+            res = sharded.query(q)
+            np.testing.assert_array_equal(res.ids, single.query(q).ids)
+            assert res.coverage.all()
+            hedged += res.stats.n_hedged
+            wins += res.stats.n_hedge_wins
+            t_eff += res.stats.t_effective
+            t_wall += res.stats.t_wall
+        assert f.count("latency") > 0, "no spike ever fired"
+        assert hedged > 0, "spikes never hedged"
+        assert wins > 0, "hedge never beat a 5s spike"
+        # hedging strictly beat not hedging: without it every injected
+        # second lands in effective time; each win claws back the spike
+        # above the (compile-warmup-inflated) threshold
+        injected = 5.0 * f.count("latency")
+        assert t_eff < t_wall + injected - 1.0, (t_eff, t_wall, injected)
+    """)
+
+
+def test_adapt_rho_feeds_splitter_online():
+    """adapt_rho: the serve-time EWMA of per-engine times re-suggests
+    rho (Eq. 6 online) and the splitter consumes it — answers stay
+    bit-identical (rho moves work between exact engines)."""
+    run_devices("""
+        db = make_db(seed=37)
+        sharded, single = build_pair(db)
+        sharded.configure_serving(ServingConfig(adapt_rho=True))
+        for step in range(3):
+            q = make_queries(seed=90 + step)
+            res = sharded.query(q)
+            np.testing.assert_array_equal(res.ids, single.query(q).ids)
+        rho = sharded.rho_suggestion
+        assert rho is not None and 0.0 <= rho <= 1.0
+    """)
+
+
+# ---------------------------------------------------------------------------
+# persistence: cross-mesh restore, zero-compile steady state
+# ---------------------------------------------------------------------------
+
+def test_save_single_load_onto_replicated_mesh():
+    """A generation saved from a single device restores onto the 2x2
+    serving mesh (and onto 1x4) with bit-identical ids — placement is a
+    load-time choice, not a stored fact."""
+    run_devices("""
+        import tempfile
+        db = make_db(seed=38)
+        q = make_queries(seed=39)
+        single = KNNIndex.build(db, CFG)
+        want = single.query(q)
+        d = tempfile.mkdtemp()
+        single.save(d)
+
+        m22 = KNNIndex.load(d, mesh=make_serving_mesh(2, replicas=2))
+        assert isinstance(m22, ShardedKNNIndex)
+        assert m22.placement_shape == (2, 2)
+        r22 = m22.query(q)
+        np.testing.assert_array_equal(r22.ids, want.ids)
+        np.testing.assert_allclose(r22.dists, want.dists,
+                                   rtol=2e-6, atol=2e-6)
+
+        m14 = KNNIndex.load(d, mesh=make_serving_mesh(4))
+        assert m14.placement_shape == (1, 4)
+        np.testing.assert_array_equal(m14.query(q).ids, want.ids)
+
+        # zero-compile steady state on the restored index: the first
+        # query warmed every engine for this shape bucket; repeats in
+        # the bucket compile nothing
+        before = m22.total_compiles
+        for step in range(3):
+            m22.query(make_queries(seed=100 + step))
+        assert m22.total_compiles == before
+    """)
+
+
+def test_save_sharded_load_single_roundtrip():
+    """...and the reverse: save from the 2x2 mesh, restore single-device
+    (mesh=None), bit-identical — the stored generation is global."""
+    run_devices("""
+        import tempfile
+        db = make_db(seed=41)
+        q = make_queries(seed=42)
+        sharded, single = build_pair(db)
+        want = single.query(q)
+        np.testing.assert_array_equal(sharded.query(q).ids, want.ids)
+        d = tempfile.mkdtemp()
+        sharded.save(d)
+        back = KNNIndex.load(d)
+        assert isinstance(back, KNNIndex)
+        got = back.query(q)
+        np.testing.assert_array_equal(got.ids, want.ids)
+        np.testing.assert_array_equal(np.asarray(got.dists),
+                                      np.asarray(want.dists))
+    """)
+
+
+# ---------------------------------------------------------------------------
+# crash mid-checkpoint (single device, in-process)
+# ---------------------------------------------------------------------------
+
+def _small_index(seed=50):
+    r = np.random.default_rng(seed)
+    db = np.concatenate([
+        (0.05 * r.normal(size=(300, 6))).astype(np.float32),
+        r.uniform(-3.0, 3.0, (100, 6)).astype(np.float32)]).astype(np.float32)
+    return KNNIndex.build(db, HybridConfig(k=3, m=4, n_batches=1)), \
+        r.normal(size=(24, 6)).astype(np.float32)
+
+
+@pytest.mark.parametrize("phase", ["pre-arrays", "pre-manifest"])
+def test_crash_before_durability_restores_previous_gen(tmp_path, phase):
+    """A crash before the atomic rename leaves no durable trace of the
+    new generation: load() restores the previous one; a retried save
+    succeeds and becomes the new latest."""
+    idx, q = _small_index()
+    want0 = idx.query(q)
+    f = ScriptedFaults()
+    mgr = CrashingCheckpointManager(str(tmp_path), f)
+    idx.save(str(tmp_path), manager=mgr)          # gen 0: durable
+    idx.delete(np.arange(20))
+    want1 = idx.query(q)
+    f.crash_checkpoint(phase)                     # arm: next write crashes
+    with pytest.raises(CheckpointCrash):
+        idx.save(str(tmp_path), manager=mgr)      # gen 1: crashes
+    assert f.count("ckpt-crash") == 1
+    np.testing.assert_array_equal(
+        KNNIndex.load(str(tmp_path)).query(q).ids, want0.ids)
+    # crash-once: the retry lands, and becomes the restore target
+    assert idx.save(str(tmp_path), manager=mgr) == 1
+    np.testing.assert_array_equal(
+        KNNIndex.load(str(tmp_path)).query(q).ids, want1.ids)
+
+
+def test_crash_before_latest_pointer_keeps_acknowledged_gen(tmp_path):
+    """A crash after the rename but before LATEST moves: the new step
+    is on disk but was never acknowledged (save() raised), so load()
+    honors the pointer and restores the last acknowledged generation —
+    durable-step fallback only engages when the pointer itself is
+    broken."""
+    idx, q = _small_index(seed=51)
+    want0 = idx.query(q)
+    f = ScriptedFaults()
+    mgr = CrashingCheckpointManager(str(tmp_path), f)
+    idx.save(str(tmp_path), manager=mgr)
+    idx.delete(np.arange(20))
+    f.crash_checkpoint("pre-latest")
+    with pytest.raises(CheckpointCrash):
+        idx.save(str(tmp_path), manager=mgr)
+    # step-1 dir exists and is complete, but LATEST still names step 0
+    assert os.path.isdir(os.path.join(tmp_path, "step-000000001"))
+    with open(os.path.join(tmp_path, "LATEST")) as fh:
+        assert fh.read().strip() == "step-000000000"
+    np.testing.assert_array_equal(
+        KNNIndex.load(str(tmp_path)).query(q).ids, want0.ids)
+
+
+def test_stale_latest_falls_back_to_durable_gen(tmp_path):
+    """LATEST pointing at a step that does not exist (pointer written,
+    step gc'd by a buggy external tool — or plain corruption): load()
+    warns and restores the newest durable generation instead of dying."""
+    idx, q = _small_index(seed=52)
+    want = idx.query(q)
+    idx.save(str(tmp_path))
+    with open(os.path.join(tmp_path, "LATEST"), "w") as fh:
+        fh.write("step-000000099")
+    with pytest.warns(RuntimeWarning, match="falling back"):
+        loaded = KNNIndex.load(str(tmp_path))
+    np.testing.assert_array_equal(loaded.query(q).ids, want.ids)

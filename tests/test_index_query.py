@@ -93,7 +93,7 @@ def test_query_k_override_and_shape_checks():
     r3 = index.query(queries, k=3)
     assert r3.dists.shape == (40, 3)
     _assert_exact(r3, db, queries, 3)
-    with pytest.raises(AssertionError, match="queries must be"):
+    with pytest.raises(ValueError, match="3 dims"):
         index.query(queries[:, :3])
     with pytest.raises(AssertionError, match="exceeds"):
         index.query(queries, k=len(db) + 1)

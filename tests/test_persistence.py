@@ -1,0 +1,139 @@
+"""Index generations on disk: ``KNNIndex.save()`` / ``KNNIndex.load()``
+(DESIGN.md §7).  Single-device round trips here; cross-mesh restores and
+crash-mid-save live in tests/test_fault_serving.py (they need fake
+devices / the fault harness).
+
+The exactness contract under test: a loaded index answers *bit-
+identically* to the one that saved — REORDER's permutation and the ε
+selection are replayed from the stored artifacts (not recomputed from
+samples), and grid/pyramid are rebuilt deterministically from those."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.core import HybridConfig
+from repro.runtime import KNNIndex
+
+
+def _db(seed=0, n=700, dim=6):
+    r = np.random.default_rng(seed)
+    core = (0.05 * r.normal(size=(n - n // 4, dim))).astype(np.float32)
+    bg = r.uniform(-3.0, 3.0, (n // 4, dim)).astype(np.float32)
+    return np.concatenate([core, bg]).astype(np.float32)
+
+
+def _queries(seed=1, n=60, dim=6):
+    return np.random.default_rng(seed).normal(size=(n, dim)).astype(np.float32)
+
+
+def test_clean_roundtrip_bit_identical(tmp_path):
+    db, q = _db(), _queries()
+    idx = KNNIndex.build(db, HybridConfig(k=5, m=4, n_batches=1))
+    want = idx.query(q)
+    step = idx.save(str(tmp_path))
+    assert step == 0
+
+    loaded = KNNIndex.load(str(tmp_path))
+    assert loaded.n_points == idx.n_points
+    assert loaded.eps == idx.eps                  # replayed, not re-selected
+    np.testing.assert_array_equal(np.asarray(loaded.points_r),
+                                  np.asarray(idx.points_r))
+    got = loaded.query(q)
+    np.testing.assert_array_equal(got.ids, want.ids)
+    np.testing.assert_array_equal(np.asarray(got.dists),
+                                  np.asarray(want.dists))
+
+
+def test_dirty_index_restores_dirty(tmp_path):
+    """A saved index with pending inserts/deletes restores with the
+    same delta buffer — same answers now, same compaction later."""
+    db, q = _db(seed=2), _queries(seed=3)
+    idx = KNNIndex.build(db, HybridConfig(k=4, m=4, n_batches=1))
+    new_ids = idx.insert(_queries(seed=4, n=16))
+    idx.delete(np.arange(8))
+    idx.delete(new_ids[:2])
+    assert not idx.is_clean
+    want = idx.query(q)
+
+    idx.save(str(tmp_path))
+    loaded = KNNIndex.load(str(tmp_path))
+    assert not loaded.is_clean
+    assert loaded.n_delta == idx.n_delta
+    assert loaded.n_tombstones == idx.n_tombstones
+    got = loaded.query(q)
+    np.testing.assert_array_equal(got.ids, want.ids)
+    np.testing.assert_array_equal(np.asarray(got.dists),
+                                  np.asarray(want.dists))
+    # ...and compaction on the restored side still works: same neighbors
+    # under the remapped (renumbered) ids
+    remap = loaded.compact()
+    assert loaded.is_clean
+    np.testing.assert_array_equal(loaded.query(q).ids, remap[want.ids])
+
+
+def test_generations_auto_increment_and_step_select(tmp_path):
+    db, q = _db(seed=5), _queries(seed=6)
+    idx = KNNIndex.build(db, HybridConfig(k=3, m=4, n_batches=1))
+    want0 = idx.query(q)
+    assert idx.save(str(tmp_path)) == 0
+    idx.delete(np.arange(30))
+    want1 = idx.query(q)
+    assert idx.save(str(tmp_path)) == 1
+
+    # default load -> newest generation
+    np.testing.assert_array_equal(
+        KNNIndex.load(str(tmp_path)).query(q).ids, want1.ids)
+    # explicit step -> the older generation, bit-identical too
+    np.testing.assert_array_equal(
+        KNNIndex.load(str(tmp_path), step=0).query(q).ids, want0.ids)
+
+
+def test_load_rejects_non_index_checkpoint(tmp_path):
+    """A training checkpoint is not an index generation; the format tag
+    turns that mistake into an actionable error instead of a crash deep
+    in build()."""
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(0, {"w": np.zeros((3, 3), np.float32)},
+             extra={"cursor": 1})
+    with pytest.raises(ValueError, match="not an index generation"):
+        KNNIndex.load(str(tmp_path))
+
+
+def test_load_empty_directory_is_actionable(tmp_path):
+    with pytest.raises(FileNotFoundError, match="no durable"):
+        KNNIndex.load(str(tmp_path))
+
+
+def test_save_is_durable_on_return(tmp_path):
+    """save() is synchronous by default: when it returns, the step dir
+    is complete and LATEST points at it (the serving-restart contract)."""
+    db = _db(seed=7, n=400)
+    idx = KNNIndex.build(db, HybridConfig(k=3, m=4, n_batches=1))
+    idx.save(str(tmp_path))
+    d = os.path.join(tmp_path, "step-000000000")
+    assert os.path.exists(os.path.join(d, "manifest.json"))
+    assert os.path.exists(os.path.join(d, "arrays.npz"))
+    with open(os.path.join(tmp_path, "LATEST")) as f:
+        assert f.read().strip() == "step-000000000"
+
+
+def test_query_insert_validation_errors():
+    """Satellite: the serving surfaces reject dtype/shape mismatches
+    with clear ValueErrors before anything reaches the engines."""
+    db = _db(seed=8, n=300)
+    idx = KNNIndex.build(db, HybridConfig(k=3, m=4, n_batches=1))
+    q = _queries(seed=9, n=8)
+    with pytest.raises(ValueError, match="3 dims .* 6-dim"):
+        idx.query(q[:, :3])
+    with pytest.raises(ValueError, match="2-D"):
+        idx.query(q[0])
+    with pytest.raises(ValueError, match="numeric dtype"):
+        idx.query(np.array([["x"] * 6]))
+    with pytest.raises(ValueError, match="points have 4 dims"):
+        idx.insert(np.zeros((2, 4), np.float32))
+    with pytest.raises(ValueError, match="numeric dtype"):
+        idx.insert(np.array([[None] * 6], dtype=object))
+    # the index is still healthy after rejected calls
+    assert idx.query(q).ids.shape == (8, 3)

@@ -1,0 +1,276 @@
+"""Unit tests for the serving fault-policy components (DESIGN.md §7):
+the dormant StragglerDetector's serving-side surface (warmup gating,
+hysteresis, partial-observation feed, the Eq. 6 rho lever's direction),
+the Supervisor's elastic hook, and ServingSupervisor's routing / retry /
+hedge decisions — all jax-free, no mesh, no subprocess."""
+import numpy as np
+import pytest
+
+from repro.runtime import (
+    ScriptedFaults, ServingConfig, ServingSupervisor, StragglerConfig,
+    StragglerDetector, SubQueryFault, Supervisor, SupervisorConfig,
+    suggest_rho, validate_points,
+)
+
+# ---------------------------------------------------------------------------
+# straggler detector: serving-side surface
+# ---------------------------------------------------------------------------
+
+
+def test_detector_warmup_gates_thresholds():
+    det = StragglerDetector(4, StragglerConfig(warmup_steps=5))
+    for step in range(5):
+        assert not det.warmed_up
+        assert det.fleet_threshold() is None     # no hedging on cold cache
+        det.update(np.full(4, 0.1))
+    det.update(np.full(4, 0.1))
+    assert det.warmed_up
+    t = det.fleet_threshold()
+    # uniform fleet: threshold sits just above mu (sigma ~ 0)
+    assert t is not None and 0.1 < t < 0.11
+
+
+def test_detector_hysteresis_flag_then_recover():
+    det = StragglerDetector(4, StragglerConfig(warmup_steps=2, patience=3))
+    base = np.full(4, 1.0)
+    for _ in range(6):
+        det.update(base)
+    bad = base.copy()
+    bad[2] = 5.0
+    assert det.update(bad) == []                  # 1 consecutive flag
+    assert det.update(bad) == []                  # 2
+    assert det.update(bad) == [2]                 # 3 == patience -> reported
+    assert 2 not in det.healthy_hosts()
+    det.update(base)                              # one healthy step...
+    assert 2 in det.healthy_hosts()               # ...resets the streak
+    assert det.update(bad) == []                  # and flagging restarts at 1
+
+
+def test_detector_partial_observation_feed():
+    """Serving only exercises some (replica, shard) lanes per step;
+    unobserved lanes must neither drift toward zero nor poison the
+    fleet median."""
+    det = StragglerDetector(4, StragglerConfig(warmup_steps=1))
+    for _ in range(8):
+        det.observed_step({0: 0.1, 1: 0.1})       # lanes 2,3 never observed
+    assert det.warmed_up
+    # unobserved lanes carry the neutral fill, not zeros
+    assert det.mu[2] == pytest.approx(0.1) and det.mu[3] == pytest.approx(0.1)
+    flagged = det.observed_step({0: 0.1, 3: 9.0})
+    # one hiccup on a rarely-seen lane: flagged streak starts, not reported
+    assert flagged == [] and det.flags[3] == 1
+
+
+def test_suggest_rho_direction():
+    """Eq. 6 online: a slower sparse engine (t2 up) pushes rho up (more
+    queries to the dense engine) and vice versa; degenerate input is
+    neutral."""
+    assert suggest_rho(1.0, 3.0) == pytest.approx(0.75)
+    assert suggest_rho(3.0, 1.0) == pytest.approx(0.25)
+    assert suggest_rho(1.0, 3.0) > suggest_rho(1.0, 1.0) > suggest_rho(3.0, 1.0)
+    assert suggest_rho(0.0, 0.0) == 0.5
+
+
+def test_supervisor_elastic_hook_sees_each_restart():
+    """The on_restart hook is the elastic-downsize path: it must fire
+    once per restart with the restart index (serving advances its
+    replica cursor there)."""
+    calls = []
+    attempts = {"n": 0}
+
+    def step_fn(state, step):
+        attempts["n"] += 1
+        if attempts["n"] <= 2:
+            raise RuntimeError("transient")
+        return state
+
+    sup = Supervisor(
+        SupervisorConfig(max_restarts=3, max_same_step_failures=3,
+                         checkpoint_every=10**9),
+        save_fn=lambda s, st: None, restore_fn=lambda: (None, 0),
+        on_restart=calls.append)
+    _, report = sup.run(None, step_fn, 0, 1)
+    assert report.completed and calls == [1, 2]
+
+
+# ---------------------------------------------------------------------------
+# serving supervisor: routing + health
+# ---------------------------------------------------------------------------
+
+
+def _sup(n_replicas=2, n_shards=2, **kw):
+    return ServingSupervisor(n_replicas, n_shards, ServingConfig(**kw))
+
+
+def test_route_rotates_across_shards_and_steps():
+    sup = _sup(n_replicas=3)
+    # every route is a permutation of the healthy set...
+    for shard in range(2):
+        for step in range(4):
+            assert sorted(sup.route(shard, step)) == [0, 1, 2]
+    # ...and concurrent shards at one step start on different replicas
+    assert sup.route(0, 0)[0] != sup.route(1, 0)[0]
+    # successive steps rotate the same shard's primary
+    assert sup.route(0, 0)[0] != sup.route(0, 1)[0]
+
+
+def test_unhealthy_replica_leaves_routing_and_recovers():
+    sup = _sup(unhealthy_after=2)
+    sup._streak[1] = 2
+    assert sup.healthy_replicas() == [0]
+    assert all(r == 0 for r in sup.route(0, 5))
+    sup._streak[1] = 0                            # a later success heals it
+    assert sup.healthy_replicas() == [0, 1]
+
+
+def test_run_subquery_success_records_lane_time():
+    sup = _sup()
+    out = sup.run_subquery(0, 0, lambda r: (f"res{r}", 0.25))
+    primary = sup.route(0, 0)[0]
+    assert out.served and out.result == f"res{primary}"
+    assert out.retries == 0 and out.failures == 0
+    assert out.times == {sup.lane(primary, 0): 0.25}
+
+
+def test_run_subquery_retries_on_sibling():
+    sup = _sup()
+    primary = sup.route(0, 0)[0]
+
+    def attempt(r):
+        if r == primary:
+            raise SubQueryFault("injected")
+        return "ok", 0.1
+
+    out = sup.run_subquery(0, 0, attempt)
+    assert out.served and out.result == "ok" and out.replica != primary
+    assert out.failures == 1 and out.retries == 1
+    assert sup._streak[primary] == 1              # counted toward unhealthy
+    assert sup._streak[out.replica] == 0
+
+
+def test_run_subquery_exhaustion_marks_lost_never_raises():
+    sup = _sup(max_attempts=3)                    # capped by 2 replicas
+
+    def attempt(r):
+        raise SubQueryFault("all replicas fail this shard")
+
+    out = sup.run_subquery(0, 0, attempt)
+    assert not out.served and out.result is None
+    assert out.failures == 2                      # one per replica candidate
+    # both replicas now carry a failure streak
+    assert (sup._streak >= 1).all()
+
+
+def test_run_subquery_with_no_healthy_replicas():
+    sup = _sup(unhealthy_after=1)
+    sup._streak[:] = 1
+    out = sup.run_subquery(0, 0, lambda r: ("never", 0.0))
+    assert not out.served and out.failures == 0
+
+
+# ---------------------------------------------------------------------------
+# serving supervisor: hedging
+# ---------------------------------------------------------------------------
+
+
+def _warm(sup, t=0.1, steps=6):
+    """Feed uniform lane times so the detector warms up with mu ~= t."""
+    lanes = {sup.lane(r, s): t for r in range(sup.n_replicas)
+             for s in range(sup.n_shards)}
+    for _ in range(steps):
+        sup.observe(lanes)
+
+
+def test_hedge_fires_on_transient_spike_and_wins():
+    sup = _sup()
+    _warm(sup, t=0.1)
+    thresh = sup.hedge_threshold()
+    assert thresh is not None and thresh < 0.2    # ~ max(mu+3sig, 1.5*mu)
+    primary = sup.route(0, 0)[0]
+    out = sup.run_subquery(
+        0, 0, lambda r: (f"res{r}", 1.0 if r == primary else 0.05))
+    assert out.hedged and out.hedge_won
+    assert out.result != f"res{primary}"          # sibling's copy won
+    assert out.t_effective == pytest.approx(thresh + 0.05)
+    # both lanes' observations recorded for the detector feed
+    assert len(out.times) == 2
+
+
+def test_hedge_fires_but_primary_still_wins():
+    sup = _sup()
+    _warm(sup, t=0.1)
+    thresh = sup.hedge_threshold()
+    primary = sup.route(0, 0)[0]
+    # sibling is just as slow: threshold + t_h >= t_primary
+    out = sup.run_subquery(0, 0, lambda r: (f"res{r}", 0.5))
+    assert out.hedged and not out.hedge_won
+    assert out.result == f"res{primary}"
+    assert out.t_effective == pytest.approx(0.5)
+    assert thresh + 0.5 > 0.5
+
+
+def test_hedge_respects_warmup_and_disable():
+    # during warmup: no threshold, no hedge, however slow
+    cold = _sup()
+    out = cold.run_subquery(0, 0, lambda r: ("x", 99.0))
+    assert not out.hedged
+    # warmed but disabled by config
+    off = _sup(hedging=False)
+    _warm(off, t=0.1)
+    out = off.run_subquery(0, 0, lambda r: ("x", 99.0))
+    assert not out.hedged
+
+
+def test_hedge_min_factor_floors_threshold():
+    """A perfectly uniform fleet has sigma ~ 0; the min-factor floor
+    keeps mu-level noise from hedging every query."""
+    sup = _sup(hedge_min_factor=2.0)
+    _warm(sup, t=0.1)
+    assert sup.hedge_threshold() == pytest.approx(0.2, rel=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# scripted faults: the injector itself
+# ---------------------------------------------------------------------------
+
+
+def test_scripted_faults_latency_fail_kill_and_log():
+    f = (ScriptedFaults()
+         .add_latency(0, 1, 0.5, steps=[3])
+         .fail_subquery(1, 0, steps=[2])
+         .kill_replica(1, at_step=5))
+    assert f.subquery(0, 1, 2) == 0.0             # unscripted -> healthy
+    assert f.subquery(0, 1, 3) == 0.5
+    with pytest.raises(SubQueryFault):
+        f.subquery(1, 0, 2)
+    assert f.subquery(1, 0, 3) == 0.0             # flaky, not dead yet
+    for step in (5, 6, 17):                       # kill is permanent
+        with pytest.raises(SubQueryFault):
+            f.subquery(1, 1, step)
+    assert f.count("latency") == 1 and f.count("fail") == 1
+    assert f.count("kill") == 3
+    assert ("fail", 1, 0, 2) in f.log
+
+
+# ---------------------------------------------------------------------------
+# input validation (serving surface)
+# ---------------------------------------------------------------------------
+
+
+def test_validate_points_rejects_bad_dtype_shape_dims():
+    with pytest.raises(ValueError, match="numeric dtype"):
+        validate_points(np.array([["a", "b"]]), 2)
+    with pytest.raises(ValueError, match="2-D"):
+        validate_points(np.zeros(6, np.float32), 6)
+    with pytest.raises(ValueError, match=r"\(rows, 6\)"):
+        validate_points(np.zeros((4, 3), np.float32), 6)
+    # int input is fine (cast downstream), and passes through unconverted
+    a = np.zeros((4, 6), np.int32)
+    assert validate_points(a, 6) is a
+
+
+def test_serving_config_validates():
+    with pytest.raises(AssertionError):
+        ServingConfig(max_attempts=0)
+    with pytest.raises(AssertionError):
+        ServingConfig(hedge_min_factor=0.5)

@@ -66,6 +66,51 @@ def test_checkpoint_detects_corruption(tmp_path):
         mgr.restore(tree)
 
 
+def test_checkpoint_latest_is_hint_not_authority(tmp_path):
+    """A crash between the atomic step rename and the LATEST pointer
+    update leaves LATEST stale (or pointing at a step that never became
+    durable).  latest_step() must warn and fall back to the newest
+    durable step instead of trusting the pointer."""
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(1, _tree(1))
+    mgr.save(2, _tree(2))
+    # simulate the pre-LATEST crash: pointer names a missing step
+    with open(os.path.join(tmp_path, "LATEST"), "w") as f:
+        f.write("step-000000099")
+    with pytest.warns(RuntimeWarning, match="falling back to newest durable"):
+        assert mgr.latest_step() == 2
+    got, _, step = mgr.restore(_tree())
+    assert step == 2
+    np.testing.assert_array_equal(np.asarray(got["a"]),
+                                  np.asarray(_tree(2)["a"]))
+
+
+def test_checkpoint_rejects_partial_step_with_hint(tmp_path):
+    """A step directory missing its manifest (crash mid-write before the
+    atomic rename... or a half-copied backup) is not durable: explicit
+    restore of it must fail actionably, naming the durable alternatives;
+    LATEST pointing at it must fall back."""
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(3, _tree(3))
+    partial = os.path.join(tmp_path, "step-000000007")
+    os.makedirs(partial)                          # dir exists, no files
+    assert mgr.durable_steps() == [3]
+    with pytest.raises(FileNotFoundError,
+                       match=r"missing or partial.*durable steps.*\[3\]"):
+        mgr.restore(_tree(), step=7)
+    with open(os.path.join(tmp_path, "LATEST"), "w") as f:
+        f.write("step-000000007")
+    with pytest.warns(RuntimeWarning):
+        assert mgr.latest_step() == 3
+
+
+def test_checkpoint_nothing_durable_is_actionable(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    assert mgr.latest_step() is None
+    with pytest.raises(FileNotFoundError, match="no durable checkpoint"):
+        mgr.restore(_tree())
+
+
 def test_checkpoint_elastic_reshard(tmp_path):
     """Restore onto a different sharding (here: different device layout is
     simulated by restoring with explicit single-device shardings)."""
