@@ -4,18 +4,33 @@
     python -m benchmarks.check_regression ... --update   # commit new point
 
 The committed trajectory (results/bench/trajectory.json) holds one
-point per accepted change: tag, timestamp, and the steady-state
-queries/s of every variant the run produced.  The gate compares a fresh
-BENCH json against the most recent committed point that shares the tag
-(falling back to the newest point of any tag) and fails when any shared
-variant's queries/s drops by more than ``--max-drop`` (default 20%) —
-the serving-throughput floor a fault-tolerance PR must not sink.
+point per accepted change: tag, timestamp, the steady-state queries/s
+of every variant the run produced, and — for variants that report it
+(the overload drill) — the P99 effective latency.  The gate compares a
+fresh BENCH json against the most recent committed point *with the
+same tag* and fails when any shared variant's queries/s drops by more
+than ``--max-drop`` (default 20%) — the serving-throughput floor — or
+its P99 effective latency *rises* by more than the same band — the
+overload-latency ceiling.  Both sides of the frontier are gated: a
+change that holds throughput by letting the tail blow out fails
+exactly like one that holds the tail by serving less.
+
+The tag encodes the configuration (mesh spelling, serving mode,
+backend), so only same-tag points are comparable; a run whose tag has
+no committed point yet gates nothing (variant names like
+'serving/chist' recur across meshes with very different ceilings) and
+should be committed with ``--update`` as its tag's first baseline.
 
 CI runners are noisy; the 20% band is deliberately wide so the gate
 catches structural regressions (an accidentally disabled cache, a
-compile in the steady loop) rather than scheduler jitter.  Faster is
-always fine — speedups pass silently and should be committed with
-``--update`` so the floor ratchets up.
+compile in the steady loop, an admission bug queueing past deadlines)
+rather than scheduler jitter.  Faster/tighter is always fine —
+improvements pass silently and should be committed with ``--update``
+so the floor and ceiling ratchet.
+
+Trajectory compatibility: points written before the latency gate have
+no ``p99`` map — the P99 check silently skips them (queries/s gating
+is unchanged), and the next ``--update`` adds the map.
 """
 from __future__ import annotations
 
@@ -30,13 +45,17 @@ from benchmarks.common import RESULTS_DIR
 TRAJECTORY = os.path.join(RESULTS_DIR, "trajectory.json")
 
 
-def _load_qps(bench_path: str) -> dict:
+def _load_current(bench_path: str) -> dict:
     with open(bench_path) as f:
         bench = json.load(f)
+    variants = bench.get("variants", {})
     qps = {name: v["queries_per_s"]
-           for name, v in bench.get("variants", {}).items()
+           for name, v in variants.items()
            if isinstance(v, dict) and v.get("queries_per_s")}
-    return {"tag": bench.get("tag"), "qps": qps}
+    p99 = {name: v["p99_effective_s"]
+           for name, v in variants.items()
+           if isinstance(v, dict) and v.get("p99_effective_s")}
+    return {"tag": bench.get("tag"), "qps": qps, "p99": p99}
 
 
 def _load_trajectory(path: str) -> dict:
@@ -47,11 +66,12 @@ def _load_trajectory(path: str) -> dict:
 
 
 def _baseline(traj: dict, tag: str):
-    """Newest committed point with the same tag, else newest overall."""
-    points = traj.get("points", [])
-    same = [p for p in points if p.get("tag") == tag]
-    pool = same or points
-    return pool[-1] if pool else None
+    """Newest committed point with the same tag.  Different-tag points
+    are different configurations (mesh, mode, backend) whose shared
+    variant NAMES mean different workloads — never gate across them."""
+    points = [p for p in traj.get("points", [])
+              if p.get("tag") == tag]
+    return points[-1] if points else None
 
 
 def main(argv=None):
@@ -60,13 +80,15 @@ def main(argv=None):
     ap.add_argument("--trajectory", default=TRAJECTORY)
     ap.add_argument("--max-drop", type=float, default=0.2,
                     help="fail when queries/s falls below (1 - max_drop) "
-                         "of the committed baseline (default 0.2)")
+                         "of the committed baseline, or P99 effective "
+                         "latency rises above (1 + max_drop) of it "
+                         "(default 0.2)")
     ap.add_argument("--update", action="store_true",
                     help="append this run as the new committed point "
                          "(run after the gate passes, commit the file)")
     args = ap.parse_args(argv)
 
-    cur = _load_qps(args.bench_json)
+    cur = _load_current(args.bench_json)
     if not cur["qps"]:
         print(f"[gate] {args.bench_json} has no queries/s variants")
         return 2
@@ -75,8 +97,9 @@ def main(argv=None):
 
     failed = []
     if base is None:
-        print("[gate] no committed trajectory point yet — nothing to "
-              "compare (use --update to commit the first one)")
+        print(f"[gate] no committed trajectory point for tag "
+              f"{cur['tag']!r} — nothing to compare (use --update to "
+              "commit this tag's first baseline)")
     else:
         base_qps = base.get("variants", {})
         shared = sorted(set(cur["qps"]) & set(base_qps))
@@ -96,18 +119,35 @@ def main(argv=None):
                   f"({ratio:.2f}x, floor {floor:.2f}x)")
             if not ok:
                 failed.append(name)
+        # latency side of the frontier: pre-gate trajectory points
+        # carry no p99 map and skip this loop entirely
+        base_p99 = base.get("p99", {})
+        ceil = 1.0 + args.max_drop
+        for name in sorted(set(cur["p99"]) & set(base_p99)):
+            got, want = cur["p99"][name], base_p99[name]
+            ratio = got / want if want > 0 else 1.0
+            ok = ratio <= ceil
+            print(f"[gate] {'ok  ' if ok else 'FAIL'} {name}: "
+                  f"p99 {got * 1e3:.1f}ms vs committed "
+                  f"{want * 1e3:.1f}ms ({ratio:.2f}x, "
+                  f"ceiling {ceil:.2f}x)")
+            if not ok:
+                failed.append(f"{name} (p99)")
 
     if failed:
-        print(f"[gate] REGRESSION: {len(failed)} variant(s) under the "
-              f"floor: {', '.join(failed)}")
+        print(f"[gate] REGRESSION: {len(failed)} variant(s) outside the "
+              f"band: {', '.join(failed)}")
         return 1
 
     if args.update:
-        traj.setdefault("points", []).append({
+        point = {
             "tag": cur["tag"],
             "created_unix": time.time(),
             "variants": cur["qps"],
-        })
+        }
+        if cur["p99"]:
+            point["p99"] = cur["p99"]
+        traj.setdefault("points", []).append(point)
         os.makedirs(os.path.dirname(os.path.abspath(args.trajectory)),
                     exist_ok=True)
         with open(args.trajectory, "w") as f:

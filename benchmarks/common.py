@@ -51,7 +51,7 @@ def parser(name: str) -> argparse.ArgumentParser:
                          "buffer + tombstone fold), then compact() — "
                          "recording queries/s before/after the "
                          "generation swap (DESIGN.md §6)")
-    ap.add_argument("--mesh", default="0",
+    ap.add_argument("--mesh", default="0", type=_mesh_arg,
                     help="serving mesh spelling RxS (replicas x shards, "
                          "DESIGN.md §5/§7) — '2x2' = 2 replica groups x "
                          "2 shards; a plain N means 1xN (N shards, no "
@@ -59,6 +59,16 @@ def parser(name: str) -> argparse.ArgumentParser:
                          "XLA_FLAGS=--xla_force_host_platform_device_"
                          "count=N before launch.  0/1 = single-device "
                          "index")
+    ap.add_argument("--load", nargs="*", type=float, default=None,
+                    metavar="FACTOR",
+                    help="serving mode: overload drill — drive the "
+                         "KNNServer front-end (runtime/server.py) with "
+                         "open-loop arrival traces at each FACTOR x the "
+                         "measured steady-state capacity on a virtual "
+                         "clock, recording the latency/QPS frontier, "
+                         "shed rate by reason, and degradation-level "
+                         "occupancy (DESIGN.md §8).  With no factors, "
+                         "runs the default ramp 0.5 1.0 2.0 4.0")
     ap.add_argument("--faults", action="store_true",
                     help="serving mode: add a deterministic fault drill "
                          "(scripted latency spikes + a replica kill, "
@@ -71,16 +81,44 @@ def parser(name: str) -> argparse.ArgumentParser:
 def parse_mesh(spec) -> tuple:
     """``--mesh`` spelling -> (replicas, shards).  'RxS' is explicit;
     a plain integer N is the historical 1-D spelling, meaning 1xN;
-    0/1 mean no mesh (single-device index) and parse as (1, 1)."""
+    0/1 mean no mesh (single-device index) and parse as (1, 1).
+
+    Malformed spellings ('2x', '0x4', '-3', 'axb') raise an actionable
+    ValueError naming the bad spec and the accepted grammar — never a
+    bare int() traceback.  Idempotent on an already-parsed tuple so
+    ``type=parse_mesh`` argument wiring composes with call sites that
+    re-parse ``args.mesh``."""
+    if isinstance(spec, tuple):
+        return spec
+    how = (f"--mesh {spec!r} is not a valid mesh spec: use 'RxS' "
+           "(replicas x shards, both >= 1, e.g. '2x2') or a plain "
+           "shard count N >= 0 (0/1 = single-device index)")
     s = str(spec).strip().lower()
     if "x" in s:
         r_s, _, n_s = s.partition("x")
-        r, n = int(r_s), int(n_s)
+        try:
+            r, n = int(r_s), int(n_s)
+        except ValueError:
+            raise ValueError(how) from None
         if r < 1 or n < 1:
-            raise ValueError(f"--mesh {spec!r}: both factors must be >= 1")
+            raise ValueError(f"{how} (got factors {r} and {n})")
         return r, n
-    n = int(s)
+    try:
+        n = int(s)
+    except ValueError:
+        raise ValueError(how) from None
+    if n < 0:
+        raise ValueError(f"{how} (got {n})")
     return (1, max(n, 1))
+
+
+def _mesh_arg(s: str) -> tuple:
+    """argparse ``type=`` wrapper: surfaces parse_mesh's message (a bare
+    ValueError would print argparse's generic 'invalid value')."""
+    try:
+        return parse_mesh(s)
+    except ValueError as e:
+        raise argparse.ArgumentTypeError(str(e))
 
 
 def load_dataset(name: str, scale: float) -> np.ndarray:
@@ -142,7 +180,10 @@ def emit_bench_json(path: str, tag: str, backend: str, tables: Dict,
                 key: r[key]
                 for key in ("wall_s", "response_s", "queries_per_s",
                             "n_engine_compiles", "n_points", "backend",
-                            "mesh_shape", "config", "memory")
+                            "mesh_shape", "config", "memory",
+                            "qps_offered", "p50_effective_s",
+                            "p99_effective_s", "shed_rate",
+                            "level_occupancy")
                 if key in r
             }
     record = {

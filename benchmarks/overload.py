@@ -1,0 +1,182 @@
+"""Overload benchmark: the ``KNNServer`` front-end under open-loop load.
+
+The serving benchmark (benchmarks/serving.py) measures the back end —
+steady-state ``index.query`` batch throughput.  This one measures the
+front end that stands between clients and that back end under pressure
+(DESIGN.md §8): single-query arrivals coalesced by deadline
+micro-batching, admission control shedding work that provably cannot
+meet its deadline, and the degradation ladder trading fidelity for
+throughput when shedding alone is not enough.
+
+Method, per dataset:
+
+  1. build the index and warm the pad-bucket engines the server will
+     use (the min bucket and the max-batch bucket), so every trace
+     batch replays compiled engines;
+  2. measure steady-state per-row service time from warm direct
+     queries — this sets the measured capacity (1 row / per_row_s);
+  3. for each ``--load`` factor, drive an open-loop Poisson arrival
+     trace at ``factor x capacity`` through a ``KNNServer`` on a
+     ``VirtualClock`` whose service model charges the measured per-row
+     time per padded row — deterministic given the measurement, no
+     sleeps, no walltime races;
+  4. record the latency/QPS frontier point: offered vs served QPS,
+     P50/P99 *effective* (arrival -> response) latency, shed rate by
+     reason, deadline misses, and degradation-level occupancy.
+
+The deadline is expressed in service units (DEADLINE_BUCKETS min-bucket
+services) so the drill exercises the same queueing regime on fast and
+slow machines; absolute seconds in the record still scale with the
+machine like every other benchmark.  ``queries_per_s`` (served
+throughput at 1x-and-above load) and ``p99_effective_s`` feed the
+perf-trajectory gate (benchmarks/check_regression.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core import HybridConfig
+from repro.runtime import (KNNIndex, KNNServer, ServerConfig, VirtualClock,
+                           open_loop_trace)
+
+from benchmarks.common import (PAPER_K, load_dataset, parse_mesh, parser,
+                               print_table, save)
+
+DEFAULT_RAMP = (0.5, 1.0, 2.0, 4.0)
+# The trace must be long enough to push the queue past the deadline
+# budget at 2x load: the queue grows at (factor - 1) rows per row-
+# service, so overflowing a DEADLINE_BUCKETS * query_block budget at
+# factor 2 takes that many rows again — 2048 arrivals vs a 4-bucket
+# (512-row) budget reaches steady-state overload with room to spare.
+N_REQUESTS = 2048                # arrivals per trace
+DEADLINE_BUCKETS = 4.0           # deadline = N min-bucket services
+MAX_WAIT_BUCKETS = 0.5           # micro-batch wait cap, same units
+TRACE_SEED = 11                  # Poisson arrival gaps
+
+
+def _request_rows(pts: np.ndarray, n: int, seed: int = 3) -> np.ndarray:
+    """Single-query arrivals near the database distribution (jittered
+    resamples — the serving benchmark's traffic model, one row each)."""
+    r = np.random.default_rng(seed)
+    scale = 0.05 * pts.std(axis=0, keepdims=True)
+    rows = r.integers(0, len(pts), size=n)
+    return (pts[rows] + scale * r.normal(size=(n, pts.shape[1])
+                                         )).astype(np.float32)
+
+
+def _measure_per_row(index, pts, qb: int, max_batch: int) -> float:
+    """Warm the pad buckets the server will flush at, then measure the
+    steady-state per-row service time of a full min-bucket batch."""
+    warm_sizes = sorted({qb, min(max_batch, 2 * qb), max_batch})
+    for size in warm_sizes:
+        index.query(_request_rows(pts, size, seed=100 + size))
+    probe = _request_rows(pts, qb, seed=99)
+    t_best = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        index.query(probe.copy())
+        t_best = min(t_best, time.perf_counter() - t0)
+    return t_best / qb
+
+
+def run(args):
+    backend = getattr(args, "backend", "auto")
+    n_rep, n_shards = parse_mesh(getattr(args, "mesh", 0))
+    mesh = None
+    if n_rep * n_shards > 1:
+        from repro.launch.mesh import make_serving_mesh
+
+        mesh = make_serving_mesh(n_shards, replicas=n_rep)
+    mesh_shape = [n_rep, n_shards] if mesh is not None else [1, 1]
+    factors = [float(f) for f in (getattr(args, "load", None)
+                                  or DEFAULT_RAMP)]
+
+    rows = []
+    rec = {}
+    for ds in args.datasets:
+        pts = load_dataset(ds, args.scale)
+        k = PAPER_K[ds]
+        cfg = HybridConfig(k=k, m=min(6, pts.shape[1]), gamma=0.3, rho=0.1,
+                           n_batches=2, backend=backend,
+                           online_rebalance=False)
+        index = KNNIndex.build(pts, cfg, mesh=mesh)
+        qb = cfg.query_block
+        max_batch = 2 * qb
+        per_row = _measure_per_row(index, pts, qb, max_batch)
+        capacity_qps = 1.0 / per_row
+        deadline = DEADLINE_BUCKETS * per_row * qb
+        max_wait = MAX_WAIT_BUCKETS * per_row * qb
+        queries = _request_rows(pts, N_REQUESTS)
+
+        for factor in factors:
+            clock = VirtualClock()
+            srv = KNNServer(
+                index,
+                ServerConfig(deadline=deadline, max_wait=max_wait,
+                             max_batch=max_batch),
+                clock=clock,
+                service_model=lambda n, pr=per_row: pr * n)
+            srv.prime_service_estimate(per_row)
+            qps_offered = factor * capacity_qps
+            compiles_before = index.total_compiles
+            trace = open_loop_trace(queries, qps=qps_offered,
+                                    seed=TRACE_SEED)
+            srv.run_trace(trace)
+            n_compiles = index.total_compiles - compiles_before
+            m = srv.metrics()
+            makespan = clock.now
+            served_qps = m["n_served"] / makespan if makespan > 0 else 0.0
+
+            name = f"{ds}@{factor:g}x"
+            rec[name] = {
+                "backend": index.backend,
+                "mesh_shape": mesh_shape,
+                "config": dataclasses.asdict(cfg),
+                "n_points": len(pts),
+                "n_requests": N_REQUESTS,
+                "load_factor": factor,
+                "capacity_qps": capacity_qps,
+                "per_row_service_s": per_row,
+                "deadline_s": deadline,
+                "max_wait_s": max_wait,
+                "qps_offered": qps_offered,
+                "queries_per_s": served_qps,
+                "wall_s": makespan,
+                "n_served": m["n_served"],
+                "n_shed": m["n_shed"],
+                "shed_rate": m["shed_rate"],
+                "n_deadline_misses": m["n_deadline_misses"],
+                "n_degraded": m["n_degraded"],
+                "level_occupancy": m["level_occupancy"],
+                "n_batches": m["n_batches"],
+                "mean_batch_rows": m["mean_batch_rows"],
+                "p50_effective_s": m["p50_response_s"],
+                "p99_effective_s": m["p99_response_s"],
+                "max_effective_s": m["max_response_s"],
+                "n_engine_compiles": n_compiles,
+            }
+            occ = {n: c for n, c in m["level_occupancy"].items() if c}
+            rows.append([
+                ds, f"{factor:g}x", f"{qps_offered:.0f}",
+                f"{served_qps:.0f}", f"{m['shed_rate']:.0%}",
+                f"{m['p99_response_s'] * 1e3:.1f}ms",
+                str(m["n_deadline_misses"]), str(n_compiles),
+                ",".join(f"{n}:{c}" for n, c in occ.items()) or "-",
+            ])
+
+    print_table(
+        f"Overload: KNNServer open-loop load ramp (backend={backend}, "
+        f"mesh={mesh_shape}, deadline={DEADLINE_BUCKETS:g} bucket-"
+        f"services, {N_REQUESTS} arrivals)",
+        ["dataset", "load", "offered q/s", "served q/s", "shed",
+         "p99 eff", "misses", "compiles", "level occupancy"],
+        rows)
+    save("overload", rec, args.out)
+    return rec
+
+
+if __name__ == "__main__":
+    run(parser("overload").parse_args())

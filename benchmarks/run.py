@@ -15,7 +15,7 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 from benchmarks import common  # noqa: E402
 from benchmarks import (  # noqa: E402
-    fig6_refimpl_scaling, fig7_brute, fig11_vs_k, serving,
+    fig6_refimpl_scaling, fig7_brute, fig11_vs_k, overload, serving,
     table3_granularity, table4_param_grid, table5_rho_model,
     table6_sampled_params)
 
@@ -60,10 +60,11 @@ def main():
                      if n_rep * n_shards > 1 else "")
         mut_part = "mutate-" if args.mutate else ""
         fault_part = "faults-" if args.faults else ""
+        load_part = "load-" if args.load is not None else ""
         print(f"[bench] SERVING backend={args.backend} "
               f"mesh={n_rep}x{n_shards} mutate={args.mutate} "
-              f"faults={args.faults} datasets={args.datasets} "
-              f"scale={args.scale}")
+              f"faults={args.faults} load={args.load} "
+              f"datasets={args.datasets} scale={args.scale}")
         rec = serving.run(args)
         assert rec, "serving mode produced no records"
         if args.mutate:
@@ -76,9 +77,24 @@ def main():
                 on = v["faults"]["with_hedging"]
                 assert on["n_hedged"] > 0, (
                     "fault drill never hedged — spikes below threshold?")
-        _emit_json(args, {"serving": rec},
+        tables = {"serving": rec}
+        if args.load is not None:
+            over = overload.run(args)
+            assert over, "--load produced no overload records"
+            for name, v in over.items():
+                # at-or-over capacity the server must keep every served
+                # request within deadline (admission shed, never a
+                # silent miss) — the drill's hard acceptance invariant
+                assert v["n_deadline_misses"] == 0, (
+                    f"overload {name}: {v['n_deadline_misses']} served "
+                    "requests missed their deadline")
+                if v["load_factor"] >= 2.0:
+                    assert v["n_shed"] and sum(v["n_shed"].values()) > 0, (
+                        f"overload {name}: >=2x capacity shed nothing")
+            tables["overload"] = over
+        _emit_json(args, tables,
                    tag_default=(f"serving-{mesh_part}{mut_part}"
-                                f"{fault_part}{args.backend}"))
+                                f"{fault_part}{load_part}{args.backend}"))
         print(f"[bench] serving ok ({time.time() - t0:.0f}s, "
               f"{len(rec)} datasets)")
         return

@@ -135,6 +135,8 @@ class JoinStats:
     n_subquery_retries: int = 0   # failed sub-queries retried on siblings
     n_subquery_failures: int = 0  # sub-query attempts that raised
     shards_lost: Tuple[int, ...] = ()   # shards no replica could serve
+    shards_skipped: Tuple[int, ...] = ()  # shards deliberately skipped
+                                  # (overload partial-answer rung, §8)
     t_effective: float = 0.0      # serve wall under the hedging policy
                                   # (== t_wall when nothing hedged)
 

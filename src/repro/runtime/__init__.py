@@ -1,26 +1,35 @@
 """Runtime substrate: index/query serving, sessions, fault tolerance,
-straggler mitigation, persistence."""
+overload robustness, straggler mitigation, persistence."""
 from repro.runtime.faults import (
-    CheckpointCrash, CrashingCheckpointManager, FaultInjector,
-    ScriptedFaults, SubQueryFault,
+    Arrival, CheckpointCrash, CrashingCheckpointManager, FaultInjector,
+    ScriptedFaults, SubQueryFault, VirtualClock, open_loop_trace,
 )
 from repro.runtime.knn_index import (
-    KNNIndex, clear_engine_cache, validate_points,
+    KNNIndex, clear_engine_cache, validate_k, validate_points,
+)
+from repro.runtime.server import (
+    BatchRecord, DegradationLevel, KNNServer, Rejected, Served,
+    ServerConfig, Ticket,
 )
 from repro.runtime.serving import (
     ServingConfig, ServingSupervisor, SubQueryOutcome,
 )
 from repro.runtime.session import JoinSession
 from repro.runtime.sharded_index import ShardedKNNIndex
-from repro.runtime.stragglers import StragglerConfig, StragglerDetector, suggest_rho
+from repro.runtime.stragglers import (
+    OnlineRho, StragglerConfig, StragglerDetector, suggest_rho,
+)
 from repro.runtime.supervisor import RunReport, Supervisor, SupervisorConfig
 
 __all__ = [
     "KNNIndex", "ShardedKNNIndex", "JoinSession", "clear_engine_cache",
-    "validate_points",
+    "validate_points", "validate_k",
+    "KNNServer", "ServerConfig", "DegradationLevel", "Served", "Rejected",
+    "Ticket", "BatchRecord",
     "ServingConfig", "ServingSupervisor", "SubQueryOutcome",
     "FaultInjector", "ScriptedFaults", "SubQueryFault",
     "CrashingCheckpointManager", "CheckpointCrash",
-    "StragglerConfig", "StragglerDetector", "suggest_rho",
+    "VirtualClock", "Arrival", "open_loop_trace",
+    "StragglerConfig", "StragglerDetector", "suggest_rho", "OnlineRho",
     "RunReport", "Supervisor", "SupervisorConfig",
 ]

@@ -28,13 +28,93 @@ before feeding the straggler detector and the hedging policy.  The
 observable behavior (hedge decisions, effective latency accounting,
 detector state) is exactly what a real spike of that size produces,
 without tests paying the wall-clock cost.
+
+The same virtual-time principle extends to *load*: ``VirtualClock`` is
+an injectable monotonic clock the overload serving layer
+(``runtime.server.KNNServer``) reads instead of ``time.monotonic``, and
+``open_loop_trace`` turns a query set + target QPS into a deterministic
+open-loop ``Arrival`` schedule.  Overload tests advance the clock
+explicitly (arrival times, modeled service durations) — no sleeping,
+no wall-clock races, bit-exact replay of an entire overload scenario.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Dict, List, Optional, Tuple
 
+import numpy as np
+
 from repro.checkpoint import CheckpointManager
+
+
+class VirtualClock:
+    """A monotonic clock under test control (seconds, starts at ``t0``).
+
+    Drop-in for ``time.monotonic`` wherever a clock *callable* is
+    injected: ``clock()`` reads the current virtual time; the driver
+    moves it forward with ``advance``/``advance_to``.  Time never goes
+    backwards — ``advance`` rejects negative deltas and ``advance_to``
+    clamps to the current reading — so consumers keep the monotonic
+    contract real clocks give them.
+    """
+
+    def __init__(self, t0: float = 0.0):
+        self._now = float(t0)
+
+    def __call__(self) -> float:
+        return self._now
+
+    @property
+    def now(self) -> float:
+        return self._now
+
+    def advance(self, seconds: float) -> float:
+        if seconds < 0:
+            raise ValueError(f"cannot advance a monotonic clock by "
+                             f"{seconds}s (negative)")
+        self._now += float(seconds)
+        return self._now
+
+    def advance_to(self, t: float) -> float:
+        self._now = max(self._now, float(t))
+        return self._now
+
+
+@dataclasses.dataclass(frozen=True)
+class Arrival:
+    """One scheduled single-query request of an overload trace."""
+
+    t: float                          # arrival time (clock seconds)
+    query: object                     # one (n_dims,) point
+    k: Optional[int] = None           # per-request k override
+    deadline: Optional[float] = None  # seconds from arrival; None = default
+
+
+def open_loop_trace(queries, qps: float, *, t0: float = 0.0,
+                    seed: Optional[int] = None, k: Optional[int] = None,
+                    deadline: Optional[float] = None) -> List[Arrival]:
+    """Schedule one ``Arrival`` per query row at a target offered load.
+
+    Open-loop means arrivals do NOT wait for responses — the generator
+    keeps offering ``qps`` regardless of how the server is doing, which
+    is what makes overload visible at all (a closed loop self-throttles
+    to capacity).  ``seed=None`` spaces arrivals uniformly at 1/qps
+    (fully deterministic); an int seed draws exponential gaps (Poisson
+    arrivals) from a fixed rng, deterministic per seed.
+    """
+    q = np.asarray(queries, np.float32)
+    if q.ndim != 2 or len(q) == 0:
+        raise ValueError(f"queries must be a non-empty (rows, dims) "
+                         f"array, got shape {q.shape}")
+    if not qps > 0:
+        raise ValueError(f"qps must be positive, got {qps}")
+    if seed is None:
+        gaps = np.full(len(q), 1.0 / qps)
+    else:
+        gaps = np.random.default_rng(seed).exponential(1.0 / qps, len(q))
+    times = float(t0) + np.cumsum(gaps) - gaps[0]
+    return [Arrival(t=float(t), query=q[i], k=k, deadline=deadline)
+            for i, t in enumerate(times)]
 
 
 class SubQueryFault(RuntimeError):

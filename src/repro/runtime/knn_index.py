@@ -118,6 +118,28 @@ def validate_points(arr, n_dims: Optional[int], what: str = "queries"):
     return a
 
 
+def validate_k(k, available: int, *, what: str = "k",
+               context: str = "") -> int:
+    """Serving-surface ``k`` validation, the ``validate_points``
+    counterpart: reject non-int / non-positive / larger-than-the-net-
+    corpus ``k`` with an actionable ``ValueError`` before anything
+    reaches the engine stack.  ``available`` is the number of reference
+    points a query can actually return (post self-exclusion, post
+    tombstones); ``context`` is appended to the too-large message.
+    Returns ``k`` as a plain int."""
+    if isinstance(k, bool) or not isinstance(k, (int, np.integer)):
+        raise ValueError(
+            f"{what} must be an int, got {type(k).__name__} ({k!r})")
+    k = int(k)
+    if k < 1:
+        raise ValueError(f"{what} must be >= 1, got {k}")
+    if k > available:
+        raise ValueError(
+            f"{what}={k} exceeds the {available} reference points "
+            f"available{context}")
+    return k
+
+
 def pad_rows_pow2(arr: jnp.ndarray, block: int) -> jnp.ndarray:
     """Pad an array's leading axis to a pow2 multiple of ``block`` (zero
     fill) — the query-shape bucket: engine-cache keys see the padded
@@ -336,7 +358,9 @@ class KNNIndex:
         cfg = config
         pts = jnp.asarray(points, jnp.float32)
         npts, ndim = pts.shape
-        assert cfg.k < npts, "K must be smaller than |D|"
+        # k < |D| at build time: the self-join must find k OTHER points.
+        validate_k(cfg.k, npts - 1, what="config.k",
+                   context=" (build needs k < |D|)")
         m = min(cfg.m, ndim)
 
         if _prebuilt is not None:
@@ -795,15 +819,13 @@ class KNNIndex:
             return self._query_mutated(gen, mut, queries, k, exclude_self)
         cfg = self.config
         rho = cfg.rho if _rho is None else float(np.clip(_rho, 0.0, 1.0))
-        kq = cfg.k if k is None else int(k)
-        assert kq >= 1
-        compiles_before = self.total_compiles
         npts_ref = gen.n_base
         max_k = npts_ref - 1 if exclude_self else npts_ref
-        assert kq <= max_k, (
-            f"k={kq} exceeds the {max_k} reference points available"
-            f"{' after self-exclusion' if exclude_self else ''}"
+        kq = validate_k(
+            cfg.k if k is None else k, max_k,
+            context=" after self-exclusion" if exclude_self else "",
         )
+        compiles_before = self.total_compiles
 
         is_self = queries is None or queries is gen.points_ref
         if is_self:
@@ -867,16 +889,15 @@ class KNNIndex:
         — exact for any mutation state, recompiling only when a pow2
         bucket (query batch, delta buffer, tombstone headroom) grows."""
         cfg = self.config
-        kq = cfg.k if k is None else int(k)
-        assert kq >= 1
-        compiles_before = self.total_compiles
         n_base = gen.n_base
         n_live = mut.n_live(n_base)
         max_k = n_live - 1 if exclude_self else n_live
-        assert kq <= max_k, (
-            f"k={kq} exceeds the {max_k} live reference points available"
-            f"{' after self-exclusion' if exclude_self else ''}"
+        kq = validate_k(
+            cfg.k if k is None else k, max_k,
+            context=(" (live, after self-exclusion)" if exclude_self
+                     else " (live)"),
         )
+        compiles_before = self.total_compiles
 
         if queries is None:
             net, net_gids = mut.net_corpus(

@@ -57,10 +57,11 @@ from repro.runtime import mutation as mut_lib
 from repro.runtime.faults import FaultInjector
 from repro.runtime.knn_index import (
     _ENGINE_CACHE, KNNIndex, _engine_key, executable_memory_analysis,
-    pad_rows_pow2, run_engine, select_epsilon, validate_points,
+    pad_rows_pow2, run_engine, select_epsilon, validate_k,
+    validate_points,
 )
 from repro.runtime.serving import ServingConfig, ServingSupervisor
-from repro.runtime.stragglers import suggest_rho
+from repro.runtime.stragglers import OnlineRho
 from repro.utils import cdiv, pow2_bucket
 
 #: Mesh axis name reserved for replica groups (launch.make_serving_mesh):
@@ -153,8 +154,7 @@ class ShardedKNNIndex:
         self._supervisor: Optional[ServingSupervisor] = None
         self._faults: FaultInjector = FaultInjector()
         self._serve_step = 0
-        self._ewma_t1: Optional[float] = None
-        self._ewma_t2: Optional[float] = None
+        self._rho_online = OnlineRho(alpha=0.3, warmup=1)
         gen = _ShardedGeneration(
             points_ref=points_ref,
             points_r=points_r,
@@ -209,7 +209,8 @@ class ShardedKNNIndex:
         n_shards = int(np.prod([mesh.shape[a] for a in axes]))
         pts = jnp.asarray(points, jnp.float32)
         npts, ndim = pts.shape
-        assert cfg.k < npts, "K must be smaller than |D|"
+        validate_k(cfg.k, npts - 1, what="config.k",
+                   context=" (build needs k < |D|)")
         assert n_shards >= 1
         # The ≤1-pad-row-per-shard invariant (merge dedup + k_eff
         # headroom) needs every shard to own at least one real point.
@@ -423,19 +424,12 @@ class ShardedKNNIndex:
     def rho_suggestion(self) -> Optional[float]:
         """Online Eq. 6 re-suggestion from the serve-time EWMA of the
         per-engine times (the paper's load-balance lever, reused as the
-        straggler mitigation §V-F) — None before the first serve."""
-        if self._ewma_t1 is None or self._ewma_t2 is None:
-            return None
-        return suggest_rho(self._ewma_t1, self._ewma_t2)
+        straggler mitigation §V-F) — None before the first serve.  The
+        EWMA + warmup gating lives in ``stragglers.OnlineRho``."""
+        return self._rho_online.suggestion
 
     def _note_engine_times(self, t1: float, t2: float) -> None:
-        a = 0.3
-        if t1 > 0.0:
-            self._ewma_t1 = t1 if self._ewma_t1 is None else \
-                (1 - a) * self._ewma_t1 + a * t1
-        if t2 > 0.0:
-            self._ewma_t2 = t2 if self._ewma_t2 is None else \
-                (1 - a) * self._ewma_t2 + a * t2
+        self._rho_online.note(t1, t2)
 
     def _rho_override(self) -> Optional[float]:
         sup = self._supervisor
@@ -563,6 +557,8 @@ class ShardedKNNIndex:
         queries=None,
         k: Optional[int] = None,
         exclude_self: bool = False,
+        *,
+        _serve_shards: Optional[Tuple[int, ...]] = None,
     ) -> "hybrid_lib.KNNResult":
         """Hybrid KNN of ``queries`` against the sharded reference cloud
         — the single-device ``KNNIndex.query`` contract, mesh-placed.
@@ -574,18 +570,25 @@ class ShardedKNNIndex:
         candidate sets meet in the collective merge.  ``exclude_self``
         masks global reference id i for query row i at merge time.
         With mutations pending the delta buffer and tombstones fold in
-        after the collective merge (``_query_mutated``)."""
+        after the collective merge (``_query_mutated``).
+
+        ``_serve_shards`` is internal (the overload server's partial-
+        answer degrade rung, DESIGN.md §8): only the listed shard ids
+        run their sub-query; the rest contribute nothing and the result
+        is the exact top-K over the SERVED shards, flagged via
+        ``coverage`` (skipped columns False) and
+        ``stats.shards_skipped`` — the same degraded-result contract as
+        a lost shard, entered deliberately."""
         gen, mut = self._live
         if not mut.is_clean:
-            return self._query_mutated(gen, mut, queries, k, exclude_self)
+            return self._query_mutated(gen, mut, queries, k, exclude_self,
+                                       _serve_shards=_serve_shards)
         cfg = self.config
-        kq = cfg.k if k is None else int(k)
-        assert kq >= 1
         npts = gen.n_base
         max_k = npts - 1 if exclude_self else npts
-        assert kq <= max_k, (
-            f"k={kq} exceeds the {max_k} reference points available"
-            f"{' after self-exclusion' if exclude_self else ''}"
+        kq = validate_k(
+            cfg.k if k is None else k, max_k,
+            context=" after self-exclusion" if exclude_self else "",
         )
         compiles_before = self.total_compiles
 
@@ -608,14 +611,17 @@ class ShardedKNNIndex:
 
         excl = (np.arange(n_q, dtype=np.int32) if exclude_self
                 else np.full((n_q,), -2, np.int32))
-        md, mi, sources, shard_stats, t_merge, serve = self._shard_serve(
-            gen, kq, k_eff, n_q, queries_r, excl
-        )
+        md, mi, sources, shard_stats, t_merge, serve, skipped = \
+            self._shard_serve(
+                gen, kq, k_eff, n_q, queries_r, excl,
+                serve_shards=_serve_shards,
+            )
         md = md[:n_q]
         mi = mi[:n_q]
 
         stats = self._stats(
-            gen, shard_stats, t_merge, compiles_before, serve=serve
+            gen, shard_stats, t_merge, compiles_before, serve=serve,
+            skipped=skipped,
         )
         return hybrid_lib.KNNResult(
             dists=md,
@@ -625,12 +631,13 @@ class ShardedKNNIndex:
             # 2 brute) — the serving-latency-relevant label.
             source=np.max(sources, axis=0),
             stats=stats,
-            coverage=self._coverage(n_q, serve),
+            coverage=self._coverage(n_q, serve, skipped),
         )
 
     def _query_mutated(
         self, gen: _ShardedGeneration, mut: "mut_lib.MutationState",
         queries, k: Optional[int], exclude_self: bool,
+        _serve_shards: Optional[Tuple[int, ...]] = None,
     ) -> "hybrid_lib.KNNResult":
         """The dirty sharded query path: per-shard pipelines + the
         collective merge run over the BASE corpus at tombstone-
@@ -640,16 +647,15 @@ class ShardedKNNIndex:
         global id and fold the inserts in — exact for any mutation
         state.  Shards stay clean; mutations live at this level only."""
         cfg = self.config
-        kq = cfg.k if k is None else int(k)
-        assert kq >= 1
-        compiles_before = self.total_compiles
         n_base = gen.n_base
         n_live = mut.n_live(n_base)
         max_k = n_live - 1 if exclude_self else n_live
-        assert kq <= max_k, (
-            f"k={kq} exceeds the {max_k} live reference points available"
-            f"{' after self-exclusion' if exclude_self else ''}"
+        kq = validate_k(
+            cfg.k if k is None else k, max_k,
+            context=(" (live, after self-exclusion)" if exclude_self
+                     else " (live)"),
         )
+        compiles_before = self.total_compiles
 
         if queries is None:
             net, net_gids = mut.net_corpus(
@@ -684,10 +690,12 @@ class ShardedKNNIndex:
             n_base,
         )
         k_eff = min(k_out + (1 if gen.n_pad else 0), gen.shard_n)
-        md, mi, sources, shard_stats, t_merge, serve = self._shard_serve(
-            gen, k_out, k_eff, n_q, queries_r,
-            np.full((n_q,), -2, np.int32), shard_net_cells,
-        )
+        md, mi, sources, shard_stats, t_merge, serve, skipped = \
+            self._shard_serve(
+                gen, k_out, k_eff, n_q, queries_r,
+                np.full((n_q,), -2, np.int32), shard_net_cells,
+                serve_shards=_serve_shards,
+            )
         qb = int(md.shape[0])
 
         # Delta top-K + fold, through the shared AOT engine kinds
@@ -719,19 +727,20 @@ class ShardedKNNIndex:
 
         stats = self._stats(
             gen, shard_stats, t_merge, compiles_before, t_delta=t_delta,
-            serve=serve,
+            serve=serve, skipped=skipped,
         )
         return hybrid_lib.KNNResult(
             dists=np.asarray(fd)[:n_q],
             ids=np.asarray(fi)[:n_q],
             source=np.max(sources, axis=0),
             stats=stats,
-            coverage=self._coverage(n_q, serve),
+            coverage=self._coverage(n_q, serve, skipped),
         )
 
     def _shard_serve(self, gen: _ShardedGeneration, k_out: int,
                      k_eff: int, n_q: int, queries_r, excl: np.ndarray,
-                     shard_net_cells=None):
+                     shard_net_cells=None,
+                     serve_shards: Optional[Tuple[int, ...]] = None):
         """Per-shard hybrid serves + the collective top-K merge: shard
         p answers k_eff candidates over its sub-cloud (equal shapes ⇒
         shard 0 compiles, shards 1..P−1 ride the same engine-cache
@@ -764,6 +773,14 @@ class ShardedKNNIndex:
             "t_effective": 0.0,
         }
         lane_times: Dict[int, float] = {}
+        if serve_shards is not None:
+            want = set(int(p) for p in serve_shards)
+            if not want or not want <= set(range(self.n_shards)):
+                raise ValueError(
+                    f"_serve_shards={serve_shards!r}: need a non-empty "
+                    f"subset of shard ids 0..{self.n_shards - 1}")
+        skipped = [] if serve_shards is None else sorted(
+            set(range(self.n_shards)) - want)
 
         def take(p, res):
             shard_d[p] = res.dists
@@ -774,6 +791,10 @@ class ShardedKNNIndex:
             shard_stats.append(res.stats)
 
         for p, shard in enumerate(gen.shards):
+            if p in skipped:
+                # Deliberate partial serve: the (+inf, −1) baseline
+                # already is "no candidates" for the merge.
+                continue
             nc = None if shard_net_cells is None else shard_net_cells[p]
             if sup is None:
                 take(p, shard.query(queries_r, k=k_eff, _net_cells=nc,
@@ -819,22 +840,28 @@ class ShardedKNNIndex:
         md, mi = self._merge(k_out, dpad, ipad, epad, gen.n_pad)
         t_merge = time.perf_counter() - t0
         return (np.asarray(md), np.asarray(mi), sources, shard_stats,
-                t_merge, serve)
+                t_merge, serve, tuple(skipped))
 
-    def _coverage(self, n_q: int, serve) -> Optional[np.ndarray]:
+    def _coverage(self, n_q: int, serve,
+                  skipped: Tuple[int, ...] = ()) -> Optional[np.ndarray]:
         """The degraded-result contract: (|Q|, n_shards) bool, column s
-        False iff shard s contributed nothing (all replicas failed it).
-        None when no fault policy is active — coverage is then total by
-        construction."""
-        if serve is None:
+        False iff shard s contributed nothing — all replicas failed it
+        (``shards_lost``) or the caller skipped it deliberately
+        (``_serve_shards``, the overload degrade rung).  None when no
+        fault policy is active and nothing was skipped — coverage is
+        then total by construction."""
+        if serve is None and not skipped:
             return None
         cov = np.ones((n_q, self.n_shards), bool)
-        for p in serve["shards_lost"]:
+        for p in (serve["shards_lost"] if serve is not None else ()):
+            cov[:, p] = False
+        for p in skipped:
             cov[:, p] = False
         return cov
 
     def _stats(self, gen: _ShardedGeneration, shard_stats, t_merge: float,
-               compiles_before: int, t_delta: float = 0.0, serve=None):
+               compiles_before: int, t_delta: float = 0.0, serve=None,
+               skipped: Tuple[int, ...] = ()):
         if not shard_stats:
             # Every shard lost: no engine ran; report only the serve
             # accounting so the caller still sees an honest record.
@@ -848,13 +875,14 @@ class ShardedKNNIndex:
                 n_subquery_retries=serve["n_subquery_retries"],
                 n_subquery_failures=serve["n_subquery_failures"],
                 shards_lost=tuple(serve["shards_lost"]),
+                shards_skipped=skipped,
                 t_effective=t_merge + t_delta,
             )
         t1 = float(np.mean([s.t1_per_query for s in shard_stats]))
         t2 = float(np.mean([s.t2_per_query for s in shard_stats]))
         t_wall = (sum(s.t_wall for s in shard_stats) + t_merge + t_delta)
         if serve is None:
-            serve_kw = dict(t_effective=t_wall)
+            serve_kw = dict(t_effective=t_wall, shards_skipped=skipped)
         else:
             serve_kw = dict(
                 n_hedged=serve["n_hedged"],
@@ -862,6 +890,7 @@ class ShardedKNNIndex:
                 n_subquery_retries=serve["n_subquery_retries"],
                 n_subquery_failures=serve["n_subquery_failures"],
                 shards_lost=tuple(serve["shards_lost"]),
+                shards_skipped=skipped,
                 t_effective=serve["t_effective"] + t_merge + t_delta,
             )
         return hybrid_lib.JoinStats(

@@ -102,8 +102,53 @@ class StragglerDetector:
 
 def suggest_rho(t1_per_query: float, t2_per_query: float) -> float:
     """The paper's Eq. 6, reused online as the straggler-rebalance lever
-    for the hybrid join: rho = T2 / (T1 + T2)."""
+    for the hybrid join: rho = T2 / (T1 + T2).  Clamped to the valid
+    [0, 1] split range — clock skew or subtraction noise can hand in a
+    (slightly) negative per-engine time, and a ρ outside the range
+    would crash the splitter rather than degrade the balance."""
     denom = t1_per_query + t2_per_query
     if denom <= 0:
         return 0.5
-    return float(t2_per_query / denom)
+    return float(np.clip(t2_per_query / denom, 0.0, 1.0))
+
+
+class OnlineRho:
+    """Serve-time EWMA of the paper's per-engine times feeding the
+    Eq. 6 re-suggestion (DESIGN.md §7): each serve step notes its
+    measured T₁ (sparse) / T₂ (dense) per-query seconds, and
+    ``suggestion`` returns the smoothed ρ — or None until BOTH engines
+    have been observed at least ``warmup`` times, so a cold index never
+    rebalances on compile noise or on one engine's time alone."""
+
+    def __init__(self, alpha: float = 0.3, warmup: int = 1):
+        assert 0.0 < alpha <= 1.0 and warmup >= 1
+        self.alpha = alpha
+        self.warmup = warmup
+        self._t1: Optional[float] = None
+        self._t2: Optional[float] = None
+        self._n1 = 0
+        self._n2 = 0
+
+    def note(self, t1_per_query: float, t2_per_query: float) -> None:
+        """Feed one serve step's measured per-engine times; zero means
+        "engine did not run this step" and leaves its EWMA untouched."""
+        a = self.alpha
+        if t1_per_query > 0.0:
+            self._t1 = t1_per_query if self._t1 is None else \
+                (1 - a) * self._t1 + a * t1_per_query
+            self._n1 += 1
+        if t2_per_query > 0.0:
+            self._t2 = t2_per_query if self._t2 is None else \
+                (1 - a) * self._t2 + a * t2_per_query
+            self._n2 += 1
+
+    @property
+    def warmed_up(self) -> bool:
+        return self._n1 >= self.warmup and self._n2 >= self.warmup
+
+    @property
+    def suggestion(self) -> Optional[float]:
+        """The smoothed Eq. 6 ρ in [0, 1], or None during warmup."""
+        if not self.warmed_up:
+            return None
+        return suggest_rho(self._t1, self._t2)

@@ -95,8 +95,25 @@ def test_query_k_override_and_shape_checks():
     _assert_exact(r3, db, queries, 3)
     with pytest.raises(ValueError, match="3 dims"):
         index.query(queries[:, :3])
-    with pytest.raises(AssertionError, match="exceeds"):
+    # k validation is a serving-surface ValueError (like validate_points),
+    # never a deep shape error or a bare assert.
+    with pytest.raises(ValueError, match="exceeds"):
         index.query(queries, k=len(db) + 1)
+    with pytest.raises(ValueError, match=">= 1"):
+        index.query(queries, k=0)
+    with pytest.raises(ValueError, match=">= 1"):
+        index.query(queries, k=-3)
+    with pytest.raises(ValueError, match="must be an int"):
+        index.query(queries, k=2.5)
+    with pytest.raises(ValueError, match="must be an int"):
+        index.query(queries, k="3")
+    with pytest.raises(ValueError, match="must be an int"):
+        index.query(queries, k=True)
+    # np integer scalars are ints for this purpose
+    assert index.query(queries, k=np.int32(3)).dists.shape == (40, 3)
+    # build-time k validation: the self-join needs k < |D|
+    with pytest.raises(ValueError, match="config.k"):
+        KNNIndex.build(db[:4], HybridConfig(k=5, m=4))
 
 
 # ---------------------------------------------------------------------------

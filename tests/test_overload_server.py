@@ -1,0 +1,436 @@
+"""Overload-robust serving front-end (DESIGN.md §8, ISSUE 8 acceptance):
+admission bounds, deadline micro-batching, provable-miss shedding,
+cancel-in-queue expiry, the degradation ladder with hysteresis, exact
+shed/occupancy accounting at >=2x capacity, bit-identical served
+responses, and the zero-compile warm trace replay.
+
+Everything timing-dependent runs on a ``VirtualClock`` with a
+deterministic per-row service model — no sleeps, no walltime races;
+identical runs produce identical counters.  The sharded partial-answer
+rung runs in a subprocess with 4 fake XLA devices (the device count is
+fixed at first jax import)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from conftest import make_mixture
+from repro.core import HybridConfig
+from repro.runtime import (
+    Arrival, DegradationLevel, KNNIndex, KNNServer, Rejected, Served,
+    ServerConfig, VirtualClock, open_loop_trace,
+)
+
+PER_ROW = 1e-3                    # deterministic service model: seconds/row
+DIM = 6
+
+
+@pytest.fixture(scope="module")
+def index():
+    db = make_mixture(300, 120, dim=DIM, seed=0)
+    cfg = HybridConfig(k=3, m=4, n_batches=1, backend="ref",
+                       online_rebalance=False)
+    return KNNIndex.build(db, cfg)
+
+
+def _server(index, *, prime=True, **over):
+    clock = VirtualClock()
+    kw = dict(deadline=0.2, max_wait=0.02)
+    kw.update(over)
+    srv = KNNServer(index, ServerConfig(**kw), clock=clock,
+                    service_model=lambda n: PER_ROW * n)
+    if prime:
+        srv.prime_service_estimate(PER_ROW)
+    return srv, clock
+
+
+def _queries(n, seed=1):
+    r = np.random.default_rng(seed)
+    return r.normal(size=(n, DIM)).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# admission: validation and shedding
+# ---------------------------------------------------------------------------
+
+def test_submit_validates_query_k_and_deadline(index):
+    srv, _ = _server(index)
+    q = _queries(1)[0]
+    with pytest.raises(ValueError, match="dims"):
+        srv.submit(np.zeros(DIM + 1, np.float32))
+    with pytest.raises(ValueError, match=">= 1"):
+        srv.submit(q, k=0)
+    with pytest.raises(ValueError, match="exceeds"):
+        srv.submit(q, k=index.n_points + 1)
+    with pytest.raises(ValueError, match="deadline"):
+        srv.submit(q, deadline=0.0)
+    with pytest.raises(ValueError, match="deadline"):
+        srv.submit(q, deadline=-1.0)
+    # validation failures never count as submitted or shed
+    assert srv.n_submitted == 0 and sum(srv.n_shed.values()) == 0
+    # a (1, d) row is accepted as a single query
+    t = srv.submit(q[None])
+    assert not t.done and srv.queue_depth == 1
+
+
+def test_queue_full_sheds_with_retry_hint(index):
+    srv, _ = _server(index, max_queue=4, shed_on_admission=False,
+                     deadline=10.0)
+    tickets = [srv.submit(q) for q in _queries(6)]
+    assert [t.done for t in tickets] == [False] * 4 + [True] * 2
+    for t in tickets[4:]:
+        assert isinstance(t.outcome, Rejected)
+        assert t.outcome.reason == "queue-full"
+        assert t.outcome.retry_after > 0.0
+    assert srv.n_shed["queue-full"] == 2 and srv.n_submitted == 6
+
+
+def test_admission_sheds_provably_unmeetable_deadline(index):
+    """With a warm service estimate, a request whose deadline cannot be
+    met even if its batch started after the backlog drains is rejected
+    at submit — one cheap RTT instead of a wasted budget."""
+    srv, _ = _server(index, deadline=0.05, max_queue=10 ** 6)
+    tickets = [srv.submit(q) for q in _queries(200)]
+    shed = [t for t in tickets if t.done]
+    kept = [t for t in tickets if not t.done]
+    assert shed and kept, "expected a mix of admitted and shed"
+    # FIFO backlog: everything after the first rejection is rejected too
+    first = min(t.request_id for t in shed)
+    assert all(t.request_id >= first for t in shed)
+    for t in shed:
+        assert t.outcome.reason == "deadline-unmeetable"
+        assert t.outcome.retry_after > 0.0
+    # admitted backlog stays within what the deadline can absorb (the
+    # last admit saw backlog = now - its own row, plus its row)
+    assert srv.backlog_seconds() * srv.cfg.safety <= 0.05 + 1e-9
+
+
+def test_expired_rejections(index):
+    srv, clock = _server(index, prime=False, shed_on_admission=False)
+    q = _queries(1)[0]
+    # anchored arrival whose whole budget elapsed during a service
+    # burst: rejected as expired at submit
+    clock.advance(1.0)
+    t_old = srv.submit(q, deadline=0.5, arrival=0.0)
+    assert t_old.outcome.reason == "expired"
+    # cancel-in-queue: admitted with a cold estimate, then the clock
+    # passes the deadline before any flush
+    t_q = srv.submit(q, deadline=0.05)
+    clock.advance(0.1)
+    srv.pump()
+    assert t_q.outcome.reason == "expired"
+    assert srv.n_shed["expired"] == 2
+
+
+def test_cancel_in_queue_when_even_min_bucket_cannot_fit(index):
+    """Queued requests whose remaining budget is below one lone
+    min-bucket service are provably dead — pump sheds them instead of
+    burning a flush on guaranteed misses."""
+    srv, _ = _server(index, deadline=0.05, shed_on_admission=False,
+                     max_queue=10 ** 6)
+    tickets = [srv.submit(q) for q in _queries(50)]
+    assert srv.queue_depth == 50
+    srv.pump()   # floor = PER_ROW * 128 = 0.128s > every 0.05s budget
+    assert srv.queue_depth == 0
+    for t in tickets:
+        assert t.outcome.reason == "deadline-unmeetable"
+    assert srv.n_served == 0 and srv.n_deadline_misses == 0
+
+
+# ---------------------------------------------------------------------------
+# deadline micro-batching
+# ---------------------------------------------------------------------------
+
+def test_single_queries_coalesce_and_flush_on_wait_deadline(index):
+    srv, clock = _server(index, max_wait=0.02)
+    tickets = [srv.submit(q) for q in _queries(5)]
+    srv.pump()
+    assert all(not t.done for t in tickets), "flushed before max_wait"
+    assert srv.next_event() == pytest.approx(0.02)
+    clock.advance_to(srv.next_event())
+    srv.pump()
+    m = srv.metrics()
+    assert m["n_batches"] == 1 and m["mean_batch_rows"] == 5.0
+    for t in tickets:
+        out = t.outcome
+        assert isinstance(out, Served) and not out.degraded
+        assert out.t_queue == pytest.approx(0.02)
+        assert out.t_response == pytest.approx(0.02 + 5 * PER_ROW)
+        assert out.coverage is None
+    assert srv.n_deadline_misses == 0
+
+
+def test_full_bucket_flushes_without_waiting(index):
+    srv, _ = _server(index, max_batch=8, max_wait=10.0, deadline=20.0)
+    tickets = [srv.submit(q) for q in _queries(8)]
+    srv.pump()   # bucket full at t=0: no wait
+    assert all(t.done for t in tickets)
+    assert {t.outcome.batch_seq for t in tickets} == {0}
+    assert all(t.outcome.t_queue == 0.0 for t in tickets)
+
+
+def test_mixed_k_requests_batch_separately(index):
+    """k is a static engine parameter: one flush serves one k."""
+    srv, clock = _server(index, max_wait=0.01, deadline=10.0)
+    qs = _queries(6)
+    tickets = [srv.submit(q, k=(3 if i % 2 == 0 else 2))
+               for i, q in enumerate(qs)]
+    clock.advance(0.02)
+    srv.pump()
+    srv.drain()
+    assert srv.metrics()["n_batches"] == 2
+    for i, t in enumerate(tickets):
+        want_k = 3 if i % 2 == 0 else 2
+        assert t.outcome.dists.shape == (want_k,)
+        assert t.outcome.ids.shape == (want_k,)
+
+
+# ---------------------------------------------------------------------------
+# degradation ladder
+# ---------------------------------------------------------------------------
+
+_LADDER = (
+    DegradationLevel("full"),
+    DegradationLevel("no-hedge", enter_pressure=0.3, hedging=False),
+    DegradationLevel("coarse", enter_pressure=0.6, hedging=False,
+                     bucket_growth=1),
+)
+
+
+def test_ladder_steps_up_under_pressure_and_down_with_hysteresis(index):
+    srv, clock = _server(index, ladder=_LADDER, deadline=0.4,
+                         max_wait=0.0, shed_on_admission=False,
+                         max_queue=10 ** 6)
+    # burst deep enough for pressure 250 * PER_ROW / 0.4 = 0.625 >= 0.6
+    burst = [srv.submit(q) for q in _queries(250)]
+    assert srv.pressure() == pytest.approx(0.625)
+    srv.pump()
+    served_at = {t.outcome.level_name for t in burst if t.done}
+    assert "coarse" in served_at
+    coarse = [t for t in burst if t.done and t.outcome.level_name == "coarse"]
+    assert all(t.outcome.degraded for t in coarse)
+    srv.drain()
+    # hysteresis: pressure between exit (0.42) and enter (0.6) holds the
+    # level; only below enter * exit_hysteresis does it step down
+    srv.level = 2
+    mid = [srv.submit(q) for q in _queries(200)]    # pressure 0.5
+    srv._update_level()
+    assert srv.level == 2, "stepped down above the hysteresis exit"
+    srv.drain()
+    assert all(t.done for t in mid)
+    # empty queue: pressure 0 walks the ladder back to full service
+    srv._update_level()
+    assert srv.level == 0
+    m = srv.metrics()
+    assert m["n_degraded"] == sum(
+        c for name, c in m["level_occupancy"].items() if name == "coarse")
+
+
+def test_no_hedge_rung_is_not_degraded(index):
+    """Disabling hedging changes latency policy, not result bits — the
+    no-hedge rung must not be flagged degraded."""
+    assert not DegradationLevel("no-hedge", 0.3, hedging=False).degraded
+    assert DegradationLevel("c", 0.3, bucket_growth=1).degraded
+    assert DegradationLevel("p", 0.3, shard_frac=0.5).degraded
+
+
+# ---------------------------------------------------------------------------
+# the acceptance drill: 2x overload, exact accounting, bit identity
+# ---------------------------------------------------------------------------
+
+def test_overload_2x_keeps_served_p99_within_deadline(index):
+    """Offered load >= 2x capacity: the server keeps every served
+    request within deadline by shedding/degrading, and its accounting
+    (shed by reason, per-level occupancy) matches the tickets exactly."""
+    deadline = 0.2
+    srv, clock = _server(index, deadline=deadline, record_batches=True)
+    qps = 2.0 / PER_ROW                       # 2x modeled capacity
+    trace = open_loop_trace(_queries(800), qps=qps, seed=7)
+    tickets = srv.run_trace(trace)
+    m = srv.metrics()
+
+    assert m["n_submitted"] == 800
+    assert m["n_served"] + m["n_shed_total"] == 800
+    assert m["n_shed_total"] > 0, "2x load must shed"
+    assert m["n_deadline_misses"] == 0
+    lat = [t.outcome.t_response for t in tickets
+           if isinstance(t.outcome, Served)]
+    assert np.percentile(lat, 99) <= deadline + 1e-9
+    assert max(lat) <= deadline + 1e-9
+
+    # accounting is exact: recount everything from the tickets
+    shed_by_reason = {}
+    occupancy = {}
+    for t in tickets:
+        assert t.done
+        if isinstance(t.outcome, Rejected):
+            shed_by_reason[t.outcome.reason] = \
+                shed_by_reason.get(t.outcome.reason, 0) + 1
+        else:
+            occupancy[t.outcome.level_name] = \
+                occupancy.get(t.outcome.level_name, 0) + 1
+    assert {r: c for r, c in m["n_shed"].items() if c} == shed_by_reason
+    assert {n: c for n, c in m["level_occupancy"].items() if c} == occupancy
+    assert sum(m["level_occupancy"].values()) == m["n_served"]
+
+
+def test_served_responses_bit_identical_to_direct_query(index):
+    """Every request served at a non-degraded rung returns bits
+    identical to a direct ``index.query`` of the same batch at the same
+    settings — the micro-batcher adds latency policy, never answers."""
+    srv, clock = _server(index, record_batches=True)
+    trace = open_loop_trace(_queries(300), qps=1.0 / PER_ROW, seed=3)
+    tickets = srv.run_trace(trace)
+    by_rid = {t.request_id: t for t in tickets}
+    audited = 0
+    for rec in srv.batch_log:
+        if srv.cfg.ladder[rec.level].degraded:
+            continue
+        direct = index.query(rec.rows, k=rec.k)
+        for j, rid in enumerate(rec.request_ids):
+            out = by_rid[rid].outcome
+            np.testing.assert_array_equal(out.dists, direct.dists[j])
+            np.testing.assert_array_equal(out.ids, direct.ids[j])
+            audited += 1
+    assert audited == srv.n_served > 0
+
+
+def test_warm_trace_replay_compiles_zero_engines(index):
+    """Replaying the same arrival trace against a warm index must reuse
+    every compiled engine — the serving-path zero-compile invariant
+    extended through the micro-batcher."""
+    trace = open_loop_trace(_queries(300), qps=1.0 / PER_ROW, seed=5)
+    srv1, _ = _server(index)
+    srv1.run_trace(trace)                    # may pay residual compiles
+    before = index.total_compiles
+    srv2, _ = _server(index)
+    tickets = srv2.run_trace(trace)
+    assert index.total_compiles == before
+    assert srv2.n_served == sum(1 for t in tickets
+                                if isinstance(t.outcome, Served)) > 0
+
+
+def test_open_loop_trace_shapes_and_determinism():
+    q = _queries(16)
+    uniform = open_loop_trace(q, qps=100.0)
+    assert len(uniform) == 16 and uniform[0].t == 0.0
+    gaps = np.diff([a.t for a in uniform])
+    np.testing.assert_allclose(gaps, 0.01, atol=1e-12)
+    a = open_loop_trace(q, qps=100.0, seed=3)
+    b = open_loop_trace(q, qps=100.0, seed=3)
+    assert [x.t for x in a] == [x.t for x in b]
+    assert isinstance(a[0], Arrival)
+    with pytest.raises(ValueError):
+        open_loop_trace(q, qps=0.0)
+
+
+def test_sharded_partial_rung_flags_coverage():
+    """KNNServer over a 2x2 ShardedKNNIndex: under pressure the partial
+    rung serves a rotating half of the shards with coverage-flagged
+    answers, hedging is toggled per-flush and restored, full-rung
+    responses stay bit-identical to the direct sharded query, and a
+    malformed shard subset is a serving-surface ValueError."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = \
+            "--xla_force_host_platform_device_count=4"
+        import numpy as np
+        from repro.core import HybridConfig
+        from repro.runtime import (DegradationLevel, KNNIndex, KNNServer,
+                                   Served, ServerConfig, VirtualClock)
+        from repro.launch.mesh import make_serving_mesh
+
+        r = np.random.default_rng(40)
+        db = np.concatenate([
+            (0.05 * r.normal(size=(300, 6))).astype(np.float32),
+            r.uniform(-3.0, 3.0, (140, 6)).astype(np.float32)])
+        cfg = HybridConfig(k=4, m=4, gamma=0.3, rho=0.15, n_batches=2,
+                           backend="ref", online_rebalance=False)
+        sharded = KNNIndex.build(db, cfg,
+                                 mesh=make_serving_mesh(2, replicas=2))
+        assert sharded.n_shards == 2 and sharded.n_replicas == 2
+
+        PER_ROW = 1e-3
+        ladder = (DegradationLevel("full"),
+                  DegradationLevel("partial", enter_pressure=0.3,
+                                   hedging=False, shard_frac=0.5))
+        srv = KNNServer(
+            sharded,
+            ServerConfig(deadline=0.4, max_wait=0.0, max_batch=64,
+                         shed_on_admission=False, max_queue=10 ** 6,
+                         ladder=ladder, record_batches=True),
+            clock=VirtualClock(),
+            service_model=lambda n: PER_ROW * n)
+        srv.prime_service_estimate(PER_ROW)
+
+        queries = r.normal(size=(200, 6)).astype(np.float32)
+        tickets = [srv.submit(q) for q in queries]   # pressure 0.5
+        srv.pump()
+        srv.drain()
+        assert all(isinstance(t.outcome, Served) for t in tickets)
+
+        partial = [t for t in tickets
+                   if t.outcome.level_name == "partial"]
+        full = [t for t in tickets if t.outcome.level_name == "full"]
+        assert partial and full, (len(partial), len(full))
+        for t in partial:
+            cov = t.outcome.coverage
+            assert t.outcome.degraded
+            assert cov is not None and cov.shape == (2,)
+            assert cov.sum() == 1, cov        # exactly half the shards
+        for t in full:
+            assert not t.outcome.degraded
+            assert t.outcome.coverage is None or t.outcome.coverage.all()
+
+        # the served shard subset rotates across partial flushes
+        recs = [b for b in srv.batch_log if b.serve_shards is not None]
+        assert recs and all(len(b.serve_shards) == 1 for b in recs)
+        assert len(set(b.serve_shards for b in recs)) == 2, (
+            [b.serve_shards for b in recs])
+        # per-flush hedge toggling restored the serving config
+        assert sharded.supervisor.cfg.hedging
+
+        # full-rung batches replay bit-identically through the sharded
+        # index directly
+        for b in srv.batch_log:
+            if srv.cfg.ladder[b.level].degraded:
+                continue
+            direct = sharded.query(b.rows, k=b.k)
+            by_rid = {t.request_id: t for t in tickets}
+            for j, rid in enumerate(b.request_ids):
+                out = by_rid[rid].outcome
+                np.testing.assert_array_equal(out.ids, direct.ids[j])
+                np.testing.assert_array_equal(out.dists, direct.dists[j])
+
+        try:
+            sharded.query(queries[:4], _serve_shards=(9,))
+            raise SystemExit("no error for bad _serve_shards")
+        except ValueError as e:
+            assert "subset of shard ids" in str(e), e
+        print("SHARDED-OVERLOAD-OK")
+    """)
+    env = dict(os.environ, PYTHONPATH=os.pathsep.join(
+        [os.path.join(root, "src"), os.path.join(root, "tests")]))
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, (
+        f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}")
+    assert "SHARDED-OVERLOAD-OK" in proc.stdout
+
+
+def test_run_trace_makes_progress_under_service_bursts(index):
+    """A service burst can advance the virtual clock past many
+    scheduled arrivals; they must still be admitted (anchored at their
+    scheduled time) and every ticket resolved."""
+    srv, clock = _server(index, deadline=0.3)
+    # arrivals spaced tighter than one batch's service
+    trace = open_loop_trace(_queries(400), qps=4.0 / PER_ROW, seed=9)
+    tickets = srv.run_trace(trace)
+    assert all(t.done for t in tickets)
+    for t, a in zip(tickets, sorted(trace, key=lambda a: a.t)):
+        if isinstance(t.outcome, Served):
+            assert t.outcome.t_arrival == pytest.approx(a.t)

@@ -7,9 +7,9 @@ import numpy as np
 import pytest
 
 from repro.runtime import (
-    ScriptedFaults, ServingConfig, ServingSupervisor, StragglerConfig,
-    StragglerDetector, SubQueryFault, Supervisor, SupervisorConfig,
-    suggest_rho, validate_points,
+    OnlineRho, ScriptedFaults, ServingConfig, ServingSupervisor,
+    StragglerConfig, StragglerDetector, SubQueryFault, Supervisor,
+    SupervisorConfig, suggest_rho, validate_points,
 )
 
 # ---------------------------------------------------------------------------
@@ -69,6 +69,50 @@ def test_suggest_rho_direction():
     assert suggest_rho(3.0, 1.0) == pytest.approx(0.25)
     assert suggest_rho(1.0, 3.0) > suggest_rho(1.0, 1.0) > suggest_rho(3.0, 1.0)
     assert suggest_rho(0.0, 0.0) == 0.5
+
+
+def test_suggest_rho_pressure_ramp_is_monotone_and_clamped():
+    """Under a load ramp that slows one engine monotonically, the Eq. 6
+    suggestion must move monotonically in the matching direction and
+    stay a valid rho at any extremity — overload must never produce an
+    out-of-range split the scheduler would assert on."""
+    # dense engine (t2) degrading under pressure: rho ratchets up
+    ramp = [suggest_rho(1.0, t2) for t2 in np.linspace(0.5, 50.0, 25)]
+    assert all(b >= a for a, b in zip(ramp, ramp[1:]))
+    # sparse engine (t1) degrading under pressure: rho ratchets down
+    ramp = [suggest_rho(t1, 1.0) for t1 in np.linspace(0.5, 50.0, 25)]
+    assert all(b <= a for a, b in zip(ramp, ramp[1:]))
+    # extremities clamp to a valid rho instead of overshooting
+    for t1, t2 in [(0.0, 1e9), (1e9, 0.0), (1e-30, 1e30), (1e30, 1e-30),
+                   (0.0, 0.0), (-1.0, 2.0), (2.0, -1.0)]:
+        assert 0.0 <= suggest_rho(t1, t2) <= 1.0
+
+
+def test_online_rho_warmup_never_emits_then_tracks_ramp():
+    """The serving EWMA wrapper: no suggestion until BOTH engines have
+    ``warmup`` samples (a one-sided estimate would slam rho to an
+    extreme), then suggestions follow a pressure ramp monotonically and
+    stay clamped."""
+    online = OnlineRho(alpha=0.5, warmup=3)
+    for i in range(3):
+        assert online.suggestion is None          # cold: never emits
+        online.note(1.0, 1.0 + i)
+    # t1 never fed enough on its own: one-sided feeds keep it gated
+    one_sided = OnlineRho(warmup=2)
+    for _ in range(5):
+        one_sided.note(1.0, 0.0)                  # t2 <= 0: not a sample
+    assert one_sided.suggestion is None
+    # warmed up: the dense engine slowing under a ramp pushes rho up,
+    # monotonically, and never out of [0, 1]
+    assert online.suggestion is not None
+    got = []
+    for t2 in np.linspace(2.0, 100.0, 20):
+        online.note(1.0, float(t2))
+        s = online.suggestion
+        assert 0.0 <= s <= 1.0
+        got.append(s)
+    assert all(b >= a for a, b in zip(got, got[1:]))
+    assert got[-1] > 0.9                          # tracked the ramp
 
 
 def test_supervisor_elastic_hook_sees_each_restart():
