@@ -15,6 +15,13 @@ overload-latency ceiling.  Both sides of the frontier are gated: a
 change that holds throughput by letting the tail blow out fails
 exactly like one that holds the tail by serving less.
 
+Variants that report ``recall``/``recall_target`` (the --recall
+frontier sweep) are additionally held to an ABSOLUTE floor: measured
+recall@k ≥ recall_target − ``--recall-margin`` (default 0.01).  This
+one needs no committed baseline — the target rides in the record
+itself, so a throughput win bought by quietly under-serving recall
+fails even on a tag's first run.
+
 The tag encodes the configuration (mesh spelling, serving mode,
 backend), so only same-tag points are comparable; a run whose tag has
 no committed point yet gates nothing (variant names like
@@ -55,7 +62,12 @@ def _load_current(bench_path: str) -> dict:
     p99 = {name: v["p99_effective_s"]
            for name, v in variants.items()
            if isinstance(v, dict) and v.get("p99_effective_s")}
-    return {"tag": bench.get("tag"), "qps": qps, "p99": p99}
+    recall = {name: (v["recall"], v["recall_target"])
+              for name, v in variants.items()
+              if isinstance(v, dict) and v.get("recall") is not None
+              and v.get("recall_target") is not None}
+    return {"tag": bench.get("tag"), "qps": qps, "p99": p99,
+            "recall": recall}
 
 
 def _load_trajectory(path: str) -> dict:
@@ -83,6 +95,11 @@ def main(argv=None):
                          "of the committed baseline, or P99 effective "
                          "latency rises above (1 + max_drop) of it "
                          "(default 0.2)")
+    ap.add_argument("--recall-margin", type=float, default=0.01,
+                    help="fail when a variant's measured recall@k falls "
+                         "below its own recall_target minus this margin "
+                         "(absolute gate, no committed baseline needed; "
+                         "default 0.01)")
     ap.add_argument("--update", action="store_true",
                     help="append this run as the new committed point "
                          "(run after the gate passes, commit the file)")
@@ -96,6 +113,18 @@ def main(argv=None):
     base = _baseline(traj, cur["tag"])
 
     failed = []
+    # recall floor: absolute (no baseline needed) — an approximate
+    # variant must meet its own declared target within the acceptance
+    # margin, every run.  A change that buys queries/s by quietly
+    # serving below-target recall fails here even on a tag's first run.
+    for name, (got, target) in sorted(cur.get("recall", {}).items()):
+        floor = target - args.recall_margin
+        ok = got >= floor
+        print(f"[gate] {'ok  ' if ok else 'FAIL'} {name}: "
+              f"recall {got:.3f} vs target {target:g} "
+              f"(floor {floor:.3f})")
+        if not ok:
+            failed.append(f"{name} (recall)")
     if base is None:
         print(f"[gate] no committed trajectory point for tag "
               f"{cur['tag']!r} — nothing to compare (use --update to "

@@ -183,7 +183,8 @@ def emit_bench_json(path: str, tag: str, backend: str, tables: Dict,
                             "mesh_shape", "config", "memory",
                             "qps_offered", "p50_effective_s",
                             "p99_effective_s", "shed_rate",
-                            "level_occupancy")
+                            "level_occupancy", "recall", "recall_target",
+                            "recall_estimate")
                 if key in r
             }
     record = {

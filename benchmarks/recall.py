@@ -1,0 +1,128 @@
+"""Recall@k vs queries/s frontier (DESIGN.md §9.4).
+
+For each dataset and metric, sweep ``recall_target`` over a grid and
+measure BOTH sides of the approximate-search trade the calibration pass
+promises: steady-state queries/s (the win) and recall@k against the
+float64 oracle on a held-out foreign query set (the cost), alongside
+the exact baseline (``recall_target=1.0``, bit-identical to the exact
+pipeline).
+
+Per-metric approximation mechanism (the ladder calibration actually
+tunes, see retrieval/calibrate.py):
+
+  l2      — the grid lean pass (shrunk SHORTC ε, backstops off)
+  cosine  — the same lean pass over pre-normalized rows
+  ip      — the projection front stage (inner product has no triangle
+            inequality, so without a projection every ip query is
+            served exact; ``projection_dim`` makes it approximate)
+
+Each record carries the *measured* recall (oracle-checked here, on
+queries the calibration never saw) next to the index's own
+``recall_estimate``, so the gate can hold the subsystem to its
+contract: measured recall@k ≥ recall_target − 0.01.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "tests"))
+
+from benchmarks import common  # noqa: E402
+
+RECALL_TARGETS = (0.9, 0.95, 0.99)
+METRICS = ("l2", "cosine", "ip")
+N_QUERIES = 256
+IP_PROJECTION_DIM = 6
+
+
+def _frontier_recall(approx_ids, exact_ids) -> float:
+    """Mean per-row |approx ∩ exact| / k over valid ids (no self-hit
+    correction needed: benchmark queries are held out of the corpus)."""
+    from repro.retrieval.calibrate import recall_at_k
+    return recall_at_k(np.asarray(approx_ids), np.asarray(exact_ids))
+
+
+def _prepare(points: np.ndarray, metric: str):
+    """Split into (corpus, foreign queries) and normalize for cosine."""
+    from repro.retrieval import normalize_rows
+    n_q = min(N_QUERIES, points.shape[0] // 4)
+    corpus, queries = points[:-n_q], points[-n_q:]
+    if metric == "cosine":
+        corpus, queries = normalize_rows(corpus), normalize_rows(queries)
+    return np.ascontiguousarray(corpus), np.ascontiguousarray(queries)
+
+
+def run(args):
+    from oracle import oracle_knn
+
+    from repro.core.hybrid import HybridConfig
+    from repro.runtime.knn_index import KNNIndex
+
+    out = {}
+    for name in args.datasets:
+        pts = common.load_dataset(name, args.scale)
+        k = common.PAPER_K[name]
+        for metric in METRICS:
+            corpus, queries = _prepare(pts, metric)
+            _, exact_ids = oracle_knn(corpus, queries, k=k, metric=metric)
+            proj = IP_PROJECTION_DIM if metric == "ip" else 0
+            for target in (1.0,) + RECALL_TARGETS:
+                # the exact baseline is the true exact path (for ip:
+                # the brute lane) — a projected index at target 1.0 is
+                # a measured pass, not a bit-exact one
+                cfg = HybridConfig(
+                    k=k, backend=args.backend, metric=metric,
+                    recall_target=target,
+                    projection_dim=0 if target >= 1.0 else proj)
+                t0 = time.perf_counter()
+                index = KNNIndex.build(corpus, cfg)
+                t_build = time.perf_counter() - t0
+
+                res = index.query(queries)   # warm + calibrate
+                t_query, res = common.timed_trials(
+                    lambda: index.query(queries), args.trials, warmup=False)
+                rec = _frontier_recall(res.ids, exact_ids)
+                qps = queries.shape[0] / t_query
+                key = f"{name}-{metric}-t{target:g}"
+                out[key] = {
+                    "dataset": name, "metric": metric, "k": k,
+                    "n_points": int(corpus.shape[0]),
+                    "n_queries": int(queries.shape[0]),
+                    "recall_target": target,
+                    "recall": rec,
+                    "recall_estimate": float(res.recall_estimate),
+                    "queries_per_s": qps,
+                    "wall_s": t_query,
+                    "t_build_s": t_build,
+                    "projection_dim": cfg.projection_dim,
+                    "n_engine_compiles": res.stats.n_engine_compiles,
+                    "backend": args.backend,
+                    "config": dataclasses.asdict(cfg),
+                }
+                est = f"est {res.recall_estimate:.3f}"
+                print(f"[recall] {key}: recall@{k} {rec:.3f} ({est}) "
+                      f"{qps:,.0f} q/s")
+                if target >= 1.0:
+                    assert rec == 1.0, (
+                        f"{key}: recall_target=1.0 must be exact, "
+                        f"measured {rec}")
+    return out
+
+
+def main(argv=None):
+    ap = common.parser("benchmarks.recall")
+    args = ap.parse_args(argv)
+    rec = run(args)
+    common.save("recall", rec, args.out)
+    return rec
+
+
+if __name__ == "__main__":
+    main()

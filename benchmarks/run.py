@@ -15,8 +15,8 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 from benchmarks import common  # noqa: E402
 from benchmarks import (  # noqa: E402
-    fig6_refimpl_scaling, fig7_brute, fig11_vs_k, overload, serving,
-    table3_granularity, table4_param_grid, table5_rho_model,
+    fig6_refimpl_scaling, fig7_brute, fig11_vs_k, overload, recall,
+    serving, table3_granularity, table4_param_grid, table5_rho_model,
     table6_sampled_params)
 
 
@@ -32,6 +32,11 @@ def main():
                     help="serving mode only: steady-state index.query "
                          "batches against a built KNNIndex (R≠S path; "
                          "asserts zero steady-state compiles)")
+    ap.add_argument("--recall", action="store_true",
+                    help="recall mode only: the recall@k-vs-queries/s "
+                         "frontier sweep (exact baseline + recall_target "
+                         "grid, per metric) with oracle-measured recall "
+                         "(DESIGN.md §9.4)")
     ap.add_argument("--json", nargs="?", const="", default=None,
                     metavar="PATH",
                     help="emit the machine-readable BENCH_<tag>.json "
@@ -97,6 +102,28 @@ def main():
                                 f"{fault_part}{load_part}{args.backend}"))
         print(f"[bench] serving ok ({time.time() - t0:.0f}s, "
               f"{len(rec)} datasets)")
+        return
+
+    if args.recall:
+        scale_explicit = any(
+            a == "--scale" or a.startswith("--scale=") for a in sys.argv
+        )
+        if not scale_explicit:
+            args.scale = 0.1
+        print(f"[bench] RECALL backend={args.backend} "
+              f"datasets={args.datasets} scale={args.scale}")
+        rec = recall.run(args)
+        assert rec, "recall mode produced no records"
+        for name, v in rec.items():
+            # the subsystem's contract: measured recall@k on held-out
+            # queries meets the target within the acceptance margin
+            assert v["recall"] >= v["recall_target"] - 0.01, (
+                f"recall {name}: measured {v['recall']:.3f} below "
+                f"target {v['recall_target']} - 0.01")
+        _emit_json(args, {"recall": rec},
+                   tag_default=f"recall-{args.backend}")
+        print(f"[bench] recall ok ({time.time() - t0:.0f}s, "
+              f"{len(rec)} points)")
         return
 
     if args.smoke:

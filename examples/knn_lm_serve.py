@@ -1,22 +1,39 @@
 """kNN-LM serving: the paper's join inside the LM serving path.
 
-Builds a datastore of (hidden, next-token) pairs from a small corpus,
-then serves batched requests where every decode step interpolates the
-LM distribution with the kNN distribution over retrieved continuations
-(λ·p_kNN + (1−λ)·p_LM).  Shows the memorization effect: with retrieval
-ON, prompts copied from the corpus continue with the memorized text.
+Builds a datastore of (hidden, next-token) pairs from a small corpus
+and indexes the keys with the full retrieval stack (DESIGN.md §9.5):
+a **ShardedKNNIndex** built with ``metric="ip"`` — maximum-inner-product
+retrieval, the unembed's own geometry — fronted by the **KNNServer**
+admission/micro-batching layer.  Every decode step's hidden states are
+submitted as single-query requests; the server re-coalesces them into
+the pow2-bucket batches the AOT engine cache serves compile-free.
+
+Then serves batched generation where every step interpolates the LM
+distribution with the kNN distribution over retrieved continuations
+(λ·p_kNN + (1−λ)·p_LM), and shows the memorization effect: with
+retrieval ON, prompts copied from the corpus continue with the
+memorized text.
 
     PYTHONPATH=src python examples/knn_lm_serve.py
 """
 import dataclasses
+import os
+
+# Split the host CPU into 4 devices so the datastore actually shards
+# (one corpus partition per device, collective top-K merge).
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=4")
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh
 
 from repro.configs.base import RetrievalConfig, get_smoke_config
+from repro.core.hybrid import HybridConfig
 from repro.launch.serve import generate
-from repro.models import build_datastore, init_params
+from repro.models import IndexRetriever, init_params
+from repro.runtime.server import ServerConfig
 
 
 def main():
@@ -28,9 +45,15 @@ def main():
 
     rng = np.random.default_rng(0)
     corpus = jnp.asarray(rng.integers(0, cfg.vocab_size, (6, 64)), jnp.int32)
-    ds = build_datastore(params, cfg, [corpus])
-    print(f"[knn-lm] datastore: {ds.size} (hidden, next-token) pairs, "
-          f"keys {ds.keys.shape}")
+
+    mesh = Mesh(np.asarray(jax.devices()), ("shard",))
+    ds = IndexRetriever.build(
+        params, cfg, [corpus], mesh=mesh,
+        hybrid_config=HybridConfig(k=cfg.retrieval.k, metric="ip"),
+        server_config=ServerConfig(deadline=5.0))
+    print(f"[knn-lm] datastore: {ds.size} (hidden, next-token) pairs "
+          f"indexed over {ds.index.n_shards} shards, metric=ip, "
+          f"served through KNNServer")
 
     prompts = corpus[:4, :24]             # prefixes straight from the corpus
     want = np.asarray(corpus[:4, 24:32])  # their memorized continuations
@@ -44,6 +67,12 @@ def main():
     print(f"    retrieval ON  (λ={cfg.retrieval.lam}): {acc_ret:5.1%}")
     print(f"    retrieval OFF                : {acc_base:5.1%}")
     assert acc_ret > acc_base, "retrieval should help on memorized text"
+
+    m = ds.server.metrics()
+    print(f"[knn-lm] server: {m['n_served']} served / "
+          f"{m['n_shed_total']} shed over {m['n_batches']} batches, "
+          f"p50 {m['p50_response_s'] * 1e3:.1f} ms")
+    assert m["n_shed_total"] == 0, "no retrieval request should be shed"
     print("[knn-lm] retrieval head improves memorized continuations ✓")
 
 

@@ -17,7 +17,7 @@ from repro.utils import round_up
 
 
 @functools.partial(
-    jax.jit, static_argnames=("k", "corpus_chunk", "kernel_mode")
+    jax.jit, static_argnames=("k", "corpus_chunk", "kernel_mode", "metric")
 )
 def brute_knn(
     corpus: jnp.ndarray,       # (N, n) — full database (reordered space ok)
@@ -27,11 +27,15 @@ def brute_knn(
     k: int,
     corpus_chunk: int = 4096,
     kernel_mode: str = "auto",
+    metric: str = "l2",
 ):
     """Exact K nearest neighbors of each query over the whole corpus.
 
-    Returns (dists (Q, k) squared-L2 ascending, ids (Q, k), −1-padded).
-    Padding query rows (query_ids < 0) produce garbage rows the caller masks.
+    Returns (dists (Q, k) ascending raw scores — squared L2, or the
+    negated inner product −q·c under ``metric="ip"`` (the Garcia et al.
+    GPU brute shape: the matmul IS the work) — and ids (Q, k),
+    −1-padded).  Padding query rows (query_ids < 0) produce garbage
+    rows the caller masks.
     """
     n_corpus, dim = corpus.shape
     n_q = queries.shape[0]
@@ -52,7 +56,8 @@ def brute_knn(
         cpts = jax.lax.dynamic_slice_in_dim(corpus_p, sl, chunk, axis=0)
         cids = jax.lax.dynamic_slice_in_dim(corpus_ids, sl, chunk, axis=0)
         nd, ni = topk_ops.knn_topk(
-            queries, cpts, query_ids, cids, k=k, mode=kernel_mode
+            queries, cpts, query_ids, cids, k=k, mode=kernel_mode,
+            metric=metric,
         )
         return topk_ops.merge_running_topk(rd, ri, nd, ni, k=k)
 
@@ -61,11 +66,11 @@ def brute_knn(
 
 
 def self_join_brute(points: jnp.ndarray, *, k: int, corpus_chunk: int = 4096,
-                    kernel_mode: str = "auto"):
+                    kernel_mode: str = "auto", metric: str = "l2"):
     """GPU-JOINLINEAR: O(|D|²) self-join lower bound (one thread per query
     point in the paper; one streamed corpus pass per query tile here)."""
     ids = jnp.arange(points.shape[0], dtype=jnp.int32)
     return brute_knn(
         points, points, ids, k=k, corpus_chunk=corpus_chunk,
-        kernel_mode=kernel_mode,
+        kernel_mode=kernel_mode, metric=metric,
     )

@@ -115,7 +115,7 @@ def _exclusion_ids(qids, exclude_self: bool):
 
 
 def _block_fn(index: grid_lib.GridIndex, points_r, eps2, k, budget,
-              queries_r=None, qcoords=None, exclude_self=True):
+              queries_r=None, qcoords=None, exclude_self=True, metric="l2"):
     """Process one block of query ids (−1 = padding).
 
     ``queries_r`` decouples the query cloud from the indexed one (R≠S):
@@ -137,8 +137,11 @@ def _block_fn(index: grid_lib.GridIndex, points_r, eps2, k, budget,
         cand_pts = index.points_sorted[pos]                        # (B, budget, n)
         qpts = queries[safe]                                       # (B, n)
 
-        diff = qpts[:, None, :] - cand_pts
-        d2 = jnp.sum(diff * diff, axis=-1)                         # (B, budget)
+        if metric == "ip":
+            d2 = -jnp.einsum("bn,bcn->bc", qpts, cand_pts)         # (B, budget)
+        else:
+            diff = qpts[:, None, :] - cand_pts
+            d2 = jnp.sum(diff * diff, axis=-1)                     # (B, budget)
 
         self_pair = cand_ids == _exclusion_ids(qids, exclude_self)[:, None]
         keep = valid & ~self_pair & (d2 <= eps2)
@@ -186,7 +189,8 @@ def _shared_tile_candidates(index: grid_lib.GridIndex, points_r, qids,
 
 
 def _tile_fn(index: grid_lib.GridIndex, points_r, eps2, k, budget, block_c,
-             kernel_mode, queries_r=None, qcoords=None, exclude_self=True):
+             kernel_mode, queries_r=None, qcoords=None, exclude_self=True,
+             metric="l2"):
     """Process one cell-sorted query tile against its shared candidate
     block (−1 = padding).  The distance tile is one MXU matmul."""
     cand_budget = round_up(budget, block_c)
@@ -201,7 +205,10 @@ def _tile_fn(index: grid_lib.GridIndex, points_r, eps2, k, budget, block_c,
         d2 = pairwise_ops.pairwise_sq_l2(
             qpts, cand_pts,
             block_q=nq, block_c=block_c,
-            shortc_eps2=eps2, mode=kernel_mode,
+            # SHORTC's monotone-partial-sum premise is L2-only; under ip
+            # the ε² cutoff still applies below, as a plain score filter.
+            shortc_eps2=None if metric == "ip" else eps2,
+            metric=metric, mode=kernel_mode,
         )                                                          # (TQ, TC)
 
         excl = _exclusion_ids(qids, exclude_self)
@@ -231,7 +238,7 @@ def _tile_fn(index: grid_lib.GridIndex, points_r, eps2, k, budget, block_c,
 
 def _fused_tile_fn(index: grid_lib.GridIndex, points_r, eps2, k, budget,
                    block_c, kernel_mode, queries_r=None, qcoords=None,
-                   exclude_self=True):
+                   exclude_self=True, metric="l2"):
     """Streaming one-pass tile processor (DESIGN.md §2.6): the shared
     candidate block streams through the fused kernel in ``block_c``
     sub-blocks; distance, ε filter, top-K, and ``found`` all happen in
@@ -250,6 +257,7 @@ def _fused_tile_fn(index: grid_lib.GridIndex, points_r, eps2, k, budget,
         kdists, kids, found = stream_ops.knn_stream_topk(
             qpts, cand_pts, _exclusion_ids(qids, exclude_self), cand_ids,
             eps2, k=k, block_q=nq, block_c=block_c, mode=kernel_mode,
+            metric=metric,
         )
         # Same per-tile §V-E overflow semantics as the two-pass tiled path.
         failed = (found < k) | tile_overflow
@@ -271,6 +279,7 @@ def dense_join(
     block_c: int = 128,
     backend: str = "ref",
     exclude_self: bool = True,
+    metric: str = "l2",
 ) -> DenseJoinResult:
     """Run GPU-JOIN over the given query ids (see ``dense_join_jit``).
 
@@ -282,13 +291,15 @@ def dense_join(
         index, points_r, query_ids, epsilon, queries_r,
         k=k, budget=budget, query_block=query_block, block_c=block_c,
         backend=resolve_backend(backend), exclude_self=exclude_self,
+        metric=metric,
     )
 
 
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "k", "budget", "query_block", "block_c", "backend", "exclude_self"
+        "k", "budget", "query_block", "block_c", "backend", "exclude_self",
+        "metric",
     ),
 )
 def dense_join_jit(
@@ -306,9 +317,15 @@ def dense_join_jit(
     block_c: int = 128,
     backend: str = "ref",
     exclude_self: bool = True,
+    metric: str = "l2",
 ) -> DenseJoinResult:
     """Run GPU-JOIN over the given query ids.  Results are aligned with
     ``query_ids`` (row i ↔ query_ids[i]); padding rows are failed.
+
+    ``metric`` selects the kernel score space (``"l2"`` squared L2 —
+    which cosine indexes reuse over unit rows — or ``"ip"`` the negated
+    inner product, where ε² acts as a plain score threshold and SHORTC
+    is disabled); it is part of every engine-cache key.
 
     ``backend`` must be a concrete (already-resolved) execution path
     (module docstring) — AOT callers (``KNNIndex``/``JoinSession``)
@@ -347,7 +364,7 @@ def dense_join_jit(
         blocks = qids.reshape(-1, query_block)
         out = jax.lax.map(
             _block_fn(index, points_r, eps2, k, budget,
-                      queries_r, qcoords, exclude_self),
+                      queries_r, qcoords, exclude_self, metric),
             blocks,
         )
         kd, ki, found, failed, total = jax.tree_util.tree_map(
@@ -358,11 +375,12 @@ def dense_join_jit(
             tile_fn = _fused_tile_fn(
                 index, points_r, eps2, k, budget, block_c,
                 _stream_kernel_mode(), queries_r, qcoords, exclude_self,
+                metric,
             )
         else:
             tile_fn = _tile_fn(
                 index, points_r, eps2, k, budget, block_c, backend,
-                queries_r, qcoords, exclude_self,
+                queries_r, qcoords, exclude_self, metric,
             )
         tiles, perm = grid_lib.group_queries_by_cell(
             index, qids, query_block, qcoords

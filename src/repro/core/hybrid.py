@@ -85,6 +85,26 @@ class HybridConfig:
     # or the tombstone set exceeds this fraction of the base corpus
     # (0.0 compacts after every mutation; math.inf never auto-compacts).
     mutation_compact_frac: float = 0.25
+    # retrieval subsystem (DESIGN.md §9): distance metric, recall target,
+    # and the projection front stage.  metric is part of every engine-
+    # cache key; cosine demands pre-normalized rows (retrieval.metrics);
+    # raw ip (no projection) serves through the exact brute lane.
+    metric: str = "l2"            # l2 | ip | cosine
+    # recall_target < 1.0 engages the calibrated approximate candidate
+    # stage: a tier ladder of (eps_scale, cand_mult) knobs is measured
+    # against an exact reference on a held-out corpus sample and the
+    # fastest tier meeting the target wins (KNNResult.recall_estimate
+    # reports the measured value).  1.0 = the exact path, bit-identical
+    # to a config without the knob.
+    recall_target: float = 1.0
+    calib_queries: int = 128      # held-out sample size for calibration
+    # projection front stage (retrieval/projection.py): project d-dim
+    # rows to projection_dim ≤ 8 dims, grid/search in projected space,
+    # exact full-dimension rescore of the surviving candidates.
+    # 0 disables the stage.
+    projection_dim: int = 0
+    projection_kind: str = "pca"  # pca | random (seeded)
+    rescore_mult: int = 8         # projected candidates per output slot
     seed: int = 0
 
     def __post_init__(self):
@@ -93,9 +113,26 @@ class HybridConfig:
         assert self.n_batches >= 1 and self.rebalance_sync_batches >= 0
         assert self.mutation_compact_frac >= 0.0
         from repro.core.dense_join import BACKENDS
+        from repro.retrieval.metrics import validate_metric
 
         assert self.backend in BACKENDS, self.backend
         assert self.block_c >= 1
+        validate_metric(self.metric, "HybridConfig.metric")
+        if not 0.0 < self.recall_target <= 1.0:
+            raise ValueError(
+                f"recall_target must be in (0, 1], got {self.recall_target}"
+            )
+        if not 0 <= self.projection_dim <= 8:
+            raise ValueError(
+                "projection_dim must be 0 (off) or 1..8 (the grid's "
+                f"low-dim sweet spot), got {self.projection_dim}"
+            )
+        if self.projection_kind not in ("pca", "random"):
+            raise ValueError(
+                f"projection_kind must be 'pca' or 'random', "
+                f"got {self.projection_kind!r}"
+            )
+        assert self.rescore_mult >= 1 and self.calib_queries >= 1
 
 
 @dataclasses.dataclass
@@ -154,7 +191,9 @@ class JoinStats:
 
 @dataclasses.dataclass
 class KNNResult:
-    dists: np.ndarray     # (|D|, K) Euclidean distance, ascending
+    dists: np.ndarray     # (|D|, K) finalized distance, ascending: Euclidean
+                          # (l2), cosine distance 1 − cos (cosine), or −q·c
+                          # (ip — may be negative)
     ids: np.ndarray       # (|D|, K) neighbor ids
     source: np.ndarray    # (|D|,) 0=dense engine, 1=sparse engine, 2=brute lane
     stats: JoinStats
@@ -164,6 +203,10 @@ class KNNResult:
     # top-K over the SURVIVING shards (never silently wrong, never an
     # exception).  None on single-device queries (coverage is total).
     coverage: Optional[np.ndarray] = None
+    # Approximate-mode contract (DESIGN.md §9): the calibration-measured
+    # recall@k estimate of the serving tier.  1.0 on every exact path
+    # (recall_target=1.0, which is bit-identical to the pre-knob code).
+    recall_estimate: float = 1.0
 
     @property
     def fully_covered(self) -> bool:

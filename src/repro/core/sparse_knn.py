@@ -78,8 +78,9 @@ class SparseKNNResult(NamedTuple):
     total_candidates: jnp.ndarray  # (Q,) i32 — work proxy (T₁ numerator)
 
 
-def _gathered_sq_l2(qpts, cand_pts, backend):
-    """(B, n) queries vs per-query (B, C, n) candidates -> (B, C) d².
+def _gathered_sq_l2(qpts, cand_pts, backend, metric="l2"):
+    """(B, n) queries vs per-query (B, C, n) candidates -> (B, C) scores
+    (squared L2, or −q·c under ``metric="ip"``).
 
     ``"ref"`` keeps the broadcast-subtract oracle.  The kernel backends use
     the matmul identity ‖q‖² + ‖c‖² − 2·q·cᵀ as a *batched* dot_general —
@@ -87,6 +88,11 @@ def _gathered_sq_l2(qpts, cand_pts, backend):
     irregular low-density work), so the shared-tile Pallas kernel does not
     apply, but the inner product still lands on the MXU and nothing of
     shape (B, C, n) is ever materialized."""
+    if metric == "ip":
+        return -jax.lax.dot_general(
+            qpts, cand_pts, (((1,), (2,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32,
+        )                                                      # (B, C)
     if backend == "ref":
         diff = qpts[:, None, :] - cand_pts
         return jnp.sum(diff * diff, axis=-1)
@@ -99,7 +105,7 @@ def _gathered_sq_l2(qpts, cand_pts, backend):
     return jnp.maximum(qq + cc - 2.0 * qc, 0.0)
 
 
-def _streamed_topk(points_r, qpts, cand_ids, keep, k):
+def _streamed_topk(points_r, qpts, cand_ids, keep, k, metric="l2"):
     """One-pass streaming top-K for per-query candidate sets (the
     ``"fused"`` sparse path): scan the budget in ``STREAM_CHUNK``-wide
     chunks, gathering / computing / merging per chunk.  The carry is the
@@ -118,7 +124,7 @@ def _streamed_topk(points_r, qpts, cand_ids, keep, k):
         run_d, run_i = carry
         ids_c, keep_c = xs                                     # (B, chunk)
         pts_c = points_r[ids_c]                                # (B, chunk, n)
-        d2 = _gathered_sq_l2(qpts, pts_c, "interpret")         # batched MXU
+        d2 = _gathered_sq_l2(qpts, pts_c, "interpret", metric)  # batched MXU
         d2m = jnp.where(keep_c, d2, jnp.inf)
         idm = jnp.where(keep_c, ids_c, -1)
         return topk_ops.merge_running_topk(
@@ -134,7 +140,7 @@ def _streamed_topk(points_r, qpts, cand_ids, keep, k):
 
 
 def _query_level(pyr: Pyramid, points_r, queries, orders, starts, counts,
-                 qids, excl, safe, sel, k, budget, backend):
+                 qids, excl, safe, sel, k, budget, backend, metric="l2"):
     """Gather + distance + top-K at per-query pyramid level ``sel`` (B,).
 
     ``orders`` (L, |D|) and ``starts``/``counts`` (L, B, R) are hoisted by
@@ -159,10 +165,10 @@ def _query_level(pyr: Pyramid, points_r, queries, orders, starts, counts,
     keep = valid & (cand_ids != excl[:, None])
 
     if backend == "fused":
-        kd, ki = _streamed_topk(points_r, qpts, cand_ids, keep, k)
+        kd, ki = _streamed_topk(points_r, qpts, cand_ids, keep, k, metric)
     else:
         cand_pts = points_r[cand_ids]                         # (B, budget, n)
-        d2 = _gathered_sq_l2(qpts, cand_pts, backend)
+        d2 = _gathered_sq_l2(qpts, cand_pts, backend, metric)
         d2m = jnp.where(keep, d2, jnp.inf)
         neg, selk = jax.lax.top_k(-d2m, k)
         kd = -neg
@@ -172,14 +178,21 @@ def _query_level(pyr: Pyramid, points_r, queries, orders, starts, counts,
 
     found = jnp.sum(jnp.isfinite(kd), axis=1)
     cert_r = pyr.cert_radii[sel]
-    certified = (
-        (found >= k) & (kd[:, k - 1] <= cert_r**2) & ~overflow & (qids >= 0)
-    )
+    if metric == "ip":
+        # Inner product has no triangle inequality: a grid neighborhood
+        # certifies NOTHING about ip neighbors.  Every query stays
+        # uncertified, so the caller's brute backstop keeps exactness.
+        certified = jnp.zeros_like(qids >= 0)
+    else:
+        certified = (
+            (found >= k) & (kd[:, k - 1] <= cert_r**2) & ~overflow
+            & (qids >= 0)
+        )
     return kd, ki, certified, overflow, total.astype(jnp.int32)
 
 
 def _block_fn(pyr: Pyramid, points_r, k, budget, sel_factor, backend,
-              queries_r=None, exclude_self=True):
+              queries_r=None, exclude_self=True, metric="l2"):
     """Two-pass adaptive level search (the TPU kd-tree descent analogue).
 
     Pass 1 picks the finest level whose *projected* 3^m-neighborhood holds
@@ -235,7 +248,7 @@ def _block_fn(pyr: Pyramid, points_r, k, budget, sel_factor, backend,
 
         kd1, ki1, cert1, _, tot1 = _query_level(
             pyr, points_r, queries, orders, starts, counts, qids, excl,
-            safe, sel1, k, budget, backend
+            safe, sel1, k, budget, backend, metric
         )
 
         # Escalation level: first ℓ with cert_r(ℓ)² ≥ pass-1 kth (∞ → coarsest).
@@ -245,7 +258,7 @@ def _block_fn(pyr: Pyramid, points_r, k, budget, sel_factor, backend,
 
         kd2, ki2, cert2, _, tot2 = _query_level(
             pyr, points_r, queries, orders, starts, counts, qids, excl,
-            safe, sel2, k, budget, backend
+            safe, sel2, k, budget, backend, metric
         )
 
         use1 = cert1[:, None]
@@ -270,6 +283,7 @@ def sparse_knn(
     sel_factor: int = 4,
     backend: str = "ref",
     exclude_self: bool = True,
+    metric: str = "l2",
 ) -> SparseKNNResult:
     """Resolving wrapper (see ``dense_join.dense_join``): collapses
     ``backend`` outside the jit boundary so the executable cache is
@@ -278,13 +292,15 @@ def sparse_knn(
         pyr, points_r, query_ids, queries_r,
         k=k, budget=budget, query_block=query_block, sel_factor=sel_factor,
         backend=dense_lib.resolve_backend(backend), exclude_self=exclude_self,
+        metric=metric,
     )
 
 
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "k", "budget", "query_block", "sel_factor", "backend", "exclude_self"
+        "k", "budget", "query_block", "sel_factor", "backend", "exclude_self",
+        "metric",
     ),
 )
 def sparse_knn_jit(
@@ -300,6 +316,7 @@ def sparse_knn_jit(
     sel_factor: int = 4,
     backend: str = "ref",
     exclude_self: bool = True,
+    metric: str = "l2",
 ) -> SparseKNNResult:
     if backend == "auto":
         # Same staleness guard as dense_join_jit: "auto" in the jit
@@ -314,7 +331,7 @@ def sparse_knn_jit(
     blocks = qids.reshape(-1, query_block)
     out = jax.lax.map(
         _block_fn(pyr, points_r, k, budget, sel_factor, backend,
-                  queries_r, exclude_self),
+                  queries_r, exclude_self, metric),
         blocks,
     )
     kd, ki, cert, lvl, total = jax.tree_util.tree_map(

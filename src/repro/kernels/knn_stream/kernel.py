@@ -74,7 +74,7 @@ def _stream_kernel(
     eps_ref, q_ref, c_ref, qid_ref, cid_ref,
     outd_ref, outi_ref, outf_ref,
     run_d, run_i, run_f,
-    *, k: int,
+    *, k: int, metric: str,
 ):
     j = pl.program_id(1)
     nj = pl.num_programs(1)
@@ -88,12 +88,17 @@ def _stream_kernel(
 
     q = q_ref[...].astype(jnp.float32)                             # (TQ, D)
     c = c_ref[...].astype(jnp.float32)                             # (TC, D)
-    qq = jnp.sum(q * q, axis=1, keepdims=True)                     # (TQ, 1)
-    cc = jnp.sum(c * c, axis=1, keepdims=True).T                   # (1, TC)
     qc = jax.lax.dot_general(
         q, c, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
     )                                                              # MXU
-    d = jnp.maximum(qq + cc - 2.0 * qc, 0.0)                       # (TQ, TC)
+    if metric == "ip":
+        # Negated inner product: the matmul IS the score — no norm
+        # terms, no max-0 clamp (ip scores are legitimately negative).
+        d = -qc                                                    # (TQ, TC)
+    else:
+        qq = jnp.sum(q * q, axis=1, keepdims=True)                 # (TQ, 1)
+        cc = jnp.sum(c * c, axis=1, keepdims=True).T               # (1, TC)
+        d = jnp.maximum(qq + cc - 2.0 * qc, 0.0)                   # (TQ, TC)
 
     qids = qid_ref[...]                                            # (TQ, 1)
     cids = cid_ref[...]                                            # (1, TC)
@@ -122,7 +127,7 @@ def _stream_kernel(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("k", "block_q", "block_c", "interpret")
+    jax.jit, static_argnames=("k", "block_q", "block_c", "metric", "interpret")
 )
 def knn_stream_topk_padded(
     queries: jnp.ndarray,      # (Q, D) padded: Q % block_q == 0
@@ -134,6 +139,7 @@ def knn_stream_topk_padded(
     k: int,
     block_q: int = 128,
     block_c: int = 128,
+    metric: str = "l2",
     interpret: bool = False,
 ):
     """One-pass streaming ε-filtered top-K (pre-padded operands).
@@ -152,7 +158,7 @@ def knn_stream_topk_padded(
     assert q_n % block_q == 0 and c_n % block_c == 0
     grid = (q_n // block_q, c_n // block_c)
 
-    kernel = functools.partial(_stream_kernel, k=k)
+    kernel = functools.partial(_stream_kernel, k=k, metric=metric)
     outd, outi, outf = pl.pallas_call(
         kernel,
         grid=grid,

@@ -24,7 +24,7 @@ def _use_pallas(mode: str) -> bool:
 
 
 @functools.partial(
-    jax.jit, static_argnames=("k", "block_q", "block_c", "mode")
+    jax.jit, static_argnames=("k", "block_q", "block_c", "mode", "metric")
 )
 def knn_stream_topk(
     queries: jnp.ndarray,      # (Q, D)
@@ -37,6 +37,7 @@ def knn_stream_topk(
     block_q: int = 128,
     block_c: int = 128,
     mode: str = "auto",
+    metric: str = "l2",
 ):
     """One-pass ε-filtered top-K over arbitrary (unpadded) shapes.
 
@@ -48,7 +49,7 @@ def knn_stream_topk(
     itself past ``MAX_UNROLLED_K``)."""
     if not _use_pallas(mode) or k > _kernel.MAX_UNROLLED_K:
         return _ref.knn_stream_topk_ref(
-            queries, candidates, query_ids, cand_ids, eps2, k=k
+            queries, candidates, query_ids, cand_ids, eps2, k=k, metric=metric
         )
 
     q_n, dim = queries.shape
@@ -62,6 +63,6 @@ def knn_stream_topk(
 
     kd, ki, found = _kernel.knn_stream_topk_padded(
         q, c, qid, cid, eps2, k=k, block_q=block_q, block_c=block_c,
-        interpret=(mode == "interpret"),
+        metric=metric, interpret=(mode == "interpret"),
     )
     return kd[:q_n], ki[:q_n], found[:q_n]

@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 
-@functools.partial(jax.jit, static_argnames=("k",))
+@functools.partial(jax.jit, static_argnames=("k", "metric"))
 def knn_stream_topk_ref(
     queries: jnp.ndarray,     # (Q, D)
     candidates: jnp.ndarray,  # (C, D)
@@ -23,15 +23,20 @@ def knn_stream_topk_ref(
     eps2: jnp.ndarray,        # () f32
     *,
     k: int,
+    metric: str = "l2",
 ):
     """ε-filtered exact K nearest candidates per query.
 
     Returns (dists (Q, k) f32 ascending inf-padded, ids (Q, k) i32
-    −1-padded, found (Q,) i32)."""
+    −1-padded, found (Q,) i32).  ``metric="ip"`` scores are −q·c (pass
+    eps2=+inf to disable the score-threshold filter)."""
     q = queries.astype(jnp.float32)
     c = candidates.astype(jnp.float32)
-    diff = q[:, None, :] - c[None, :, :]
-    d = jnp.sum(diff * diff, axis=-1)                          # (Q, C)
+    if metric == "ip":
+        d = -(q @ c.T)                                         # (Q, C)
+    else:
+        diff = q[:, None, :] - c[None, :, :]
+        d = jnp.sum(diff * diff, axis=-1)                      # (Q, C)
     keep = (
         (cand_ids[None, :] >= 0)
         & (query_ids[:, None] != cand_ids[None, :])

@@ -53,15 +53,21 @@ def _tile_topk(d: jnp.ndarray, k: int):
     return jnp.stack(vals, axis=1), jnp.stack(cols, axis=1).astype(jnp.int32)
 
 
-def _knn_topk_kernel(q_ref, c_ref, qid_ref, cid_ref, outd_ref, outi_ref, *, k: int):
+def _knn_topk_kernel(q_ref, c_ref, qid_ref, cid_ref, outd_ref, outi_ref,
+                     *, k: int, metric: str):
     q = q_ref[...].astype(jnp.float32)                              # (TQ, D)
     c = c_ref[...].astype(jnp.float32)                              # (TC, D)
-    qq = jnp.sum(q * q, axis=1, keepdims=True)
-    cc = jnp.sum(c * c, axis=1, keepdims=True).T
     qc = jax.lax.dot_general(
         q, c, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
     )
-    d = jnp.maximum(qq + cc - 2.0 * qc, 0.0)                        # (TQ, TC)
+    if metric == "ip":
+        # Negated inner product: same MXU matmul, no norm terms, and no
+        # max-0 clamp — ip scores are legitimately negative.
+        d = -qc                                                     # (TQ, TC)
+    else:
+        qq = jnp.sum(q * q, axis=1, keepdims=True)
+        cc = jnp.sum(c * c, axis=1, keepdims=True).T
+        d = jnp.maximum(qq + cc - 2.0 * qc, 0.0)                    # (TQ, TC)
 
     qids = qid_ref[...]                                             # (TQ, 1) i32
     cids = cid_ref[...]                                             # (1, TC) i32
@@ -78,7 +84,7 @@ def _knn_topk_kernel(q_ref, c_ref, qid_ref, cid_ref, outd_ref, outi_ref, *, k: i
 
 
 @functools.partial(
-    jax.jit, static_argnames=("k", "block_q", "block_c", "interpret")
+    jax.jit, static_argnames=("k", "block_q", "block_c", "metric", "interpret")
 )
 def knn_tile_topk(
     queries: jnp.ndarray,      # (Q, D) padded: Q % block_q == 0
@@ -89,6 +95,7 @@ def knn_tile_topk(
     k: int,
     block_q: int = 128,
     block_c: int = 256,
+    metric: str = "l2",
     interpret: bool = False,
 ):
     """Per (query, candidate-tile) top-K.
@@ -108,7 +115,7 @@ def knn_tile_topk(
     n_c = c_n // block_c
     grid = (q_n // block_q, n_c)
 
-    kernel = functools.partial(_knn_topk_kernel, k=k)
+    kernel = functools.partial(_knn_topk_kernel, k=k, metric=metric)
     return pl.pallas_call(
         kernel,
         grid=grid,

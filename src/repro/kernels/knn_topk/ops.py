@@ -19,7 +19,7 @@ def _use_pallas(mode: str) -> bool:
 
 
 @functools.partial(
-    jax.jit, static_argnames=("k", "block_q", "block_c", "mode")
+    jax.jit, static_argnames=("k", "block_q", "block_c", "mode", "metric")
 )
 def knn_topk(
     queries: jnp.ndarray,      # (Q, D)
@@ -31,15 +31,18 @@ def knn_topk(
     block_q: int = 128,
     block_c: int = 256,
     mode: str = "auto",
+    metric: str = "l2",
 ):
     """Exact K nearest candidates per query (self/invalid excluded).
 
-    Returns (dists (Q, k) f32 ascending — squared L2 — and ids (Q, k) i32,
-    −1 where fewer than k candidates exist)."""
+    Returns (dists (Q, k) f32 ascending — squared L2, or −q·c under
+    ``metric="ip"`` — and ids (Q, k) i32, −1 where fewer than k
+    candidates exist)."""
     # Oversized K: the kernel's unrolled min-pass extraction stops paying
     # for itself (see kernel.MAX_UNROLLED_K) — take the ref merge path.
     if not _use_pallas(mode) or k > _kernel.MAX_UNROLLED_K:
-        return _ref.knn_topk_ref(queries, candidates, query_ids, cand_ids, k=k)
+        return _ref.knn_topk_ref(queries, candidates, query_ids, cand_ids,
+                                 k=k, metric=metric)
 
     q_n, d = queries.shape
     c_n, _ = candidates.shape
@@ -52,7 +55,7 @@ def knn_topk(
 
     pd, pi = _kernel.knn_tile_topk(
         q, c, qid, cid, k=k, block_q=block_q, block_c=block_c,
-        interpret=(mode == "interpret"),
+        metric=metric, interpret=(mode == "interpret"),
     )                                                   # (nC, Qp, k) each
     dists, ids = _ref.merge_topk_ref(pd, pi, k=k)
     return dists[:q_n], ids[:q_n]

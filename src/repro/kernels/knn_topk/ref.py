@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 
 
-@functools.partial(jax.jit, static_argnames=("k",))
+@functools.partial(jax.jit, static_argnames=("k", "metric"))
 def knn_topk_ref(
     queries: jnp.ndarray,     # (Q, D)
     candidates: jnp.ndarray,  # (C, D)
@@ -15,13 +15,19 @@ def knn_topk_ref(
     cand_ids: jnp.ndarray,    # (C,) i32, −1 = invalid
     *,
     k: int,
+    metric: str = "l2",
 ):
     """Exact K nearest candidates per query: (dists (Q,k) f32 ascending,
-    ids (Q,k) i32, −1 where fewer than k valid candidates exist)."""
+    ids (Q,k) i32, −1 where fewer than k valid candidates exist).
+    ``metric="ip"`` scores are the negated inner product −q·c (may be
+    negative); the default is squared L2."""
     q = queries.astype(jnp.float32)
     c = candidates.astype(jnp.float32)
-    diff = q[:, None, :] - c[None, :, :]
-    d = jnp.sum(diff * diff, axis=-1)
+    if metric == "ip":
+        d = -(q @ c.T)
+    else:
+        diff = q[:, None, :] - c[None, :, :]
+        d = jnp.sum(diff * diff, axis=-1)
     invalid = (cand_ids[None, :] < 0) | (query_ids[:, None] == cand_ids[None, :])
     d = jnp.where(invalid, jnp.inf, d)
     neg, idx = jax.lax.top_k(-d, k)

@@ -29,7 +29,8 @@ from jax.experimental.pallas import tpu as pltpu
 _CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
 
 
-def _pairwise_kernel(*refs, shortc_eps2: float | None, shortc_dynamic: bool):
+def _pairwise_kernel(*refs, shortc_eps2: float | None, shortc_dynamic: bool,
+                     metric: str):
     if shortc_dynamic:
         eps_ref, q_ref, c_ref, out_ref = refs
         shortc_eps2 = eps_ref[0, 0]
@@ -44,12 +45,17 @@ def _pairwise_kernel(*refs, shortc_eps2: float | None, shortc_dynamic: bool):
     def _accumulate():
         q = q_ref[...].astype(jnp.float32)                 # (TQ, TD)
         c = c_ref[...].astype(jnp.float32)                 # (TC, TD)
-        qq = jnp.sum(q * q, axis=1, keepdims=True)         # (TQ, 1)
-        cc = jnp.sum(c * c, axis=1, keepdims=True).T       # (1, TC)
         qc = jax.lax.dot_general(
             q, c, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
         )                                                  # (TQ, TC) on the MXU
-        out_ref[...] += qq + cc - 2.0 * qc
+        if metric == "ip":
+            # Same MXU matmul, no norm terms: the d-chunk axis
+            # accumulates the negated inner product directly.
+            out_ref[...] += -qc
+        else:
+            qq = jnp.sum(q * q, axis=1, keepdims=True)     # (TQ, 1)
+            cc = jnp.sum(c * c, axis=1, keepdims=True).T   # (1, TC)
+            out_ref[...] += qq + cc - 2.0 * qc
 
     if shortc_eps2 is None and not shortc_dynamic:
         _accumulate()
@@ -63,7 +69,8 @@ def _pairwise_kernel(*refs, shortc_eps2: float | None, shortc_dynamic: bool):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("block_q", "block_c", "block_d", "shortc_eps2", "interpret"),
+    static_argnames=("block_q", "block_c", "block_d", "shortc_eps2",
+                     "metric", "interpret"),
 )
 def pairwise_sq_l2(
     queries: jnp.ndarray,     # (Q, D) — Q % block_q == 0, D % block_d == 0
@@ -73,14 +80,23 @@ def pairwise_sq_l2(
     block_c: int = 128,
     block_d: int = 128,
     shortc_eps2: float | None = None,
+    metric: str = "l2",
     interpret: bool = False,
 ) -> jnp.ndarray:
-    """Squared L2 distances (Q, C) in float32.  Inputs must be pre-padded
-    to tile multiples (see ops.py for the padding wrapper)."""
+    """Squared L2 distances (Q, C) in float32 (−q·c under
+    ``metric="ip"``, which forbids SHORTC: partial ip sums are not
+    monotone).  Inputs must be pre-padded to tile multiples (see ops.py
+    for the padding wrapper)."""
+    if metric == "ip" and shortc_eps2 is not None:
+        raise ValueError(
+            "SHORTC requires monotone non-decreasing partial sums; "
+            "metric='ip' partial scores can shrink — call with "
+            "shortc_eps2=None"
+        )
     return _pallas_pairwise(
         queries, candidates, None,
         block_q=block_q, block_c=block_c, block_d=block_d,
-        shortc_eps2=shortc_eps2, interpret=interpret,
+        shortc_eps2=shortc_eps2, metric=metric, interpret=interpret,
     )
 
 
@@ -100,17 +116,18 @@ def pairwise_sq_l2_dyn_shortc(
 ) -> jnp.ndarray:
     """SHORTC variant taking ε² as a runtime operand: the cutoff rides in a
     (1, 1) block the kernel reads, so sweeping ε never forces a recompile
-    (the engines trace ε as a device scalar)."""
+    (the engines trace ε as a device scalar).  L2 only — SHORTC's
+    monotone-partial-sum premise does not hold for ip."""
     return _pallas_pairwise(
         queries, candidates, jnp.reshape(shortc_eps2, (1, 1)).astype(jnp.float32),
         block_q=block_q, block_c=block_c, block_d=block_d,
-        shortc_eps2=None, interpret=interpret,
+        shortc_eps2=None, metric="l2", interpret=interpret,
     )
 
 
 def _pallas_pairwise(
     queries, candidates, eps2_arr, *, block_q, block_c, block_d,
-    shortc_eps2, interpret,
+    shortc_eps2, metric, interpret,
 ):
     q_n, d = queries.shape
     c_n, d2 = candidates.shape
@@ -120,7 +137,8 @@ def _pallas_pairwise(
     dynamic = eps2_arr is not None
     grid = (q_n // block_q, c_n // block_c, d // block_d)
     kernel = functools.partial(
-        _pairwise_kernel, shortc_eps2=shortc_eps2, shortc_dynamic=dynamic
+        _pairwise_kernel, shortc_eps2=shortc_eps2, shortc_dynamic=dynamic,
+        metric=metric,
     )
     in_specs = [
         pl.BlockSpec((block_q, block_d), lambda i, j, k: (i, k)),

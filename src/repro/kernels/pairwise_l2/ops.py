@@ -32,22 +32,37 @@ def pairwise_sq_l2(
     block_c: int = 128,
     block_d: int = 128,
     shortc_eps2=None,
+    metric: str = "l2",
     mode: str = "auto",
 ) -> jnp.ndarray:
-    """Squared L2 distances (Q, C) float32 for arbitrary (unpadded) shapes.
+    """Squared L2 distances (Q, C) float32 for arbitrary (unpadded) shapes
+    (negated inner product −q·c under ``metric="ip"``).
 
     Padded query/candidate rows never reach the caller (sliced off); padded
     feature columns are zero so they contribute nothing to distances.
 
     ``shortc_eps2`` may be a Python float (baked into the kernel as a
     compile-time constant) or a traced jax scalar (passed as a runtime
-    operand, so ε sweeps reuse one executable).  This outer function is a
-    trace-time dispatcher; the per-path workers below carry the jit caches.
+    operand, so ε sweeps reuse one executable).  SHORTC is L2-only —
+    partial ip sums are not monotone, so ``metric="ip"`` requires
+    ``shortc_eps2=None``.  This outer function is a trace-time
+    dispatcher; the per-path workers below carry the jit caches.
     """
+    if metric == "ip":
+        if shortc_eps2 is not None:
+            raise ValueError(
+                "pairwise_sq_l2(metric='ip') cannot take shortc_eps2: "
+                "the SHORTC cutoff assumes monotone partial distances "
+                "(L2 only) — pass shortc_eps2=None"
+            )
+        return _pairwise_static(
+            queries, candidates, block_q=block_q, block_c=block_c,
+            block_d=block_d, shortc_eps2=None, metric="ip", mode=mode,
+        )
     if shortc_eps2 is None or isinstance(shortc_eps2, (int, float)):
         return _pairwise_static(
             queries, candidates, block_q=block_q, block_c=block_c,
-            block_d=block_d, shortc_eps2=shortc_eps2, mode=mode,
+            block_d=block_d, shortc_eps2=shortc_eps2, metric="l2", mode=mode,
         )
     return _pairwise_dynamic(
         queries, candidates, shortc_eps2, block_q=block_q, block_c=block_c,
@@ -68,20 +83,24 @@ def _pad_operands(queries, candidates, block_q, block_c, block_d):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("block_q", "block_c", "block_d", "shortc_eps2", "mode"),
+    static_argnames=("block_q", "block_c", "block_d", "shortc_eps2",
+                     "metric", "mode"),
 )
 def _pairwise_static(
-    queries, candidates, *, block_q, block_c, block_d, shortc_eps2, mode,
+    queries, candidates, *, block_q, block_c, block_d, shortc_eps2,
+    metric="l2", mode,
 ):
     q_n, _ = queries.shape
     c_n, _ = candidates.shape
     if not _use_pallas(mode):
+        if metric == "ip":
+            return _ref.pairwise_neg_ip_ref(queries, candidates)
         return _ref.pairwise_sq_l2_ref(queries, candidates)
     q, c = _pad_operands(queries, candidates, block_q, block_c, block_d)
     out = _kernel.pairwise_sq_l2(
         q, c,
         block_q=block_q, block_c=block_c, block_d=block_d,
-        shortc_eps2=shortc_eps2,
+        shortc_eps2=shortc_eps2, metric=metric,
         interpret=(mode == "interpret"),
     )
     return out[:q_n, :c_n]

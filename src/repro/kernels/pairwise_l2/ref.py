@@ -16,6 +16,15 @@ def pairwise_sq_l2_ref(queries: jnp.ndarray, candidates: jnp.ndarray) -> jnp.nda
 
 
 @jax.jit
+def pairwise_neg_ip_ref(queries: jnp.ndarray, candidates: jnp.ndarray) -> jnp.ndarray:
+    """(Q, D) × (C, D) -> (Q, C) negated inner product −q·c, float32
+    (ascending = best-first, matching the L2 score convention)."""
+    q = queries.astype(jnp.float32)
+    c = candidates.astype(jnp.float32)
+    return -(q @ c.T)
+
+
+@jax.jit
 def pairwise_sq_l2_matmul_ref(queries: jnp.ndarray, candidates: jnp.ndarray) -> jnp.ndarray:
     """Matmul-form oracle — bit-comparable to the kernel's arithmetic."""
     q = queries.astype(jnp.float32)

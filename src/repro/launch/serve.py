@@ -19,20 +19,58 @@ from repro.launch.mesh import make_host_mesh
 from repro.models import (
     Datastore, build_datastore, decode_step, decode_step_retrieval, prefill,
 )
-from repro.models import transformer
+from repro.models import knn_lm, transformer
 from repro.sharding import ShardingCtx
 
 
 def generate(params, cfg, prompts, gen_len: int, *, ds=None, shd=None,
              temperature: float = 0.0, seed: int = 0):
-    """Greedy (or sampled) generation: returns (B, gen_len) tokens."""
+    """Greedy (or sampled) generation: returns (B, gen_len) tokens.
+
+    ``ds`` attaches the kNN-LM head: a ``Datastore`` pytree runs the
+    lookup inside the jitted step; an ``IndexRetriever`` (index-backed,
+    optionally behind a ``KNNServer``) runs it host-side between steps
+    — the jitted half emits (logits, hidden), retrieval and λ-mixing
+    happen outside."""
     b, p_len = prompts.shape
     cache_len = p_len + gen_len
-    logits, cache = prefill(params, cfg, prompts, cache_len, shd)
-    step = jax.jit(
-        (lambda pr, tok, ca, pos: decode_step_retrieval(
-            pr, cfg, tok, ca, pos, ds, shd)) if ds is not None else
-        (lambda pr, tok, ca, pos: decode_step(pr, cfg, tok, ca, pos, shd)))
+    retriever = ds if isinstance(ds, knn_lm.IndexRetriever) else None
+    if ds is None:
+        logits, cache = prefill(params, cfg, prompts, cache_len, shd)
+    else:
+        # Retrieval applies to the FIRST generated token too: the
+        # prompt's last hidden state is as much a retrieval query as any
+        # decode step's — skipping it, a memorized continuation loses
+        # its first token to the bare LM and never recovers.
+        logits, h_last, cache = transformer.prefill_hidden(
+            params, cfg, prompts, cache_len, shd)
+        if retriever is not None:
+            d, vals = retriever.lookup(np.asarray(h_last),
+                                       k=cfg.retrieval.k)
+        else:
+            d, vals = knn_lm.lookup(ds, h_last, k=cfg.retrieval.k)
+        logits = knn_lm.interpolate_retrieval(cfg, logits, d, vals)
+    if retriever is not None:
+        from repro.models import layers as L
+
+        @jax.jit
+        def step_hidden(pr, tok, ca, pos):
+            hidden, new_cache = transformer.decode_step_hidden(
+                pr, cfg, tok, ca, pos, shd)
+            lg = L.unembed(pr["embed"], cfg, hidden[:, None])[:, 0]
+            return lg, hidden, new_cache
+
+        def step(pr, tok, ca, pos):
+            lg, hidden, new_cache = step_hidden(pr, tok, ca, pos)
+            d, vals = retriever.lookup(np.asarray(hidden),
+                                       k=cfg.retrieval.k)
+            return knn_lm.interpolate_retrieval(cfg, lg, d, vals), new_cache
+    else:
+        step = jax.jit(
+            (lambda pr, tok, ca, pos: decode_step_retrieval(
+                pr, cfg, tok, ca, pos, ds, shd)) if ds is not None else
+            (lambda pr, tok, ca, pos: decode_step(pr, cfg, tok, ca, pos,
+                                                  shd)))
     out = []
     key = jax.random.PRNGKey(seed)
     for t in range(gen_len):

@@ -3,16 +3,18 @@ ModelConfig covers all ten assigned architectures; `knn_lm` attaches the
 paper's join to the serving path."""
 from repro.models.transformer import (
     decode_step, decode_step_hidden, forward_seq, init_cache, init_params,
-    layer_plan, loss_fn, prefill,
+    layer_plan, loss_fn, prefill, prefill_hidden,
 )
 from repro.models.knn_lm import (
-    Datastore, build_datastore, decode_step_retrieval, knn_probs, lookup,
+    Datastore, IndexRetriever, build_datastore, collect_pairs,
+    decode_step_retrieval, interpolate_retrieval, knn_probs, lookup,
     sharded_lookup,
 )
 
 __all__ = [
     "decode_step", "decode_step_hidden", "forward_seq", "init_cache",
-    "init_params", "layer_plan", "loss_fn", "prefill",
-    "Datastore", "build_datastore", "decode_step_retrieval", "knn_probs",
+    "init_params", "layer_plan", "loss_fn", "prefill", "prefill_hidden",
+    "Datastore", "IndexRetriever", "build_datastore", "collect_pairs",
+    "decode_step_retrieval", "interpolate_retrieval", "knn_probs",
     "lookup", "sharded_lookup",
 ]

@@ -555,3 +555,15 @@ def prefill(params, cfg: ModelConfig, tokens, cache_len: int,
         collect=True, cache_len=cache_len)
     logits = L.unembed(params["embed"], cfg, hidden[:, -1:])[:, 0]
     return logits, states
+
+
+def prefill_hidden(params, cfg: ModelConfig, tokens, cache_len: int,
+                   shd: Optional[ShardingCtx] = None):
+    """``prefill`` that also returns the last-position final-norm hidden
+    (B, D) — the retrieval query for the FIRST generated token.  Without
+    it a kNN-LM serve path starts from the bare LM logits and the very
+    first token already diverges from any memorized continuation."""
+    hidden, _, states = forward_seq(
+        params, cfg, tokens, shd, collect=True, cache_len=cache_len)
+    logits = L.unembed(params["embed"], cfg, hidden[:, -1:])[:, 0]
+    return logits, hidden[:, -1], states

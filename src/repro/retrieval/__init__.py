@@ -1,0 +1,13 @@
+"""Approximate retrieval subsystem (DESIGN.md §9).
+
+Layered over ``KNNIndex``: metric diversity (l2 | ip | cosine) at the
+kernel level, a ``recall_target`` knob calibrated against a measured
+recall@k, and a projection front stage routing high-dimensional corpora
+through the low-dimensional grid as a coarse filter with exact
+full-dimension rescoring.
+"""
+from repro.retrieval.metrics import (  # noqa: F401
+    METRICS, finalize, kernel_metric, normalize_rows, prepare_rows,
+    validate_metric,
+)
+from repro.retrieval.projection import Projection  # noqa: F401

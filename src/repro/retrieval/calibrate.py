@@ -1,0 +1,165 @@
+"""Recall calibration (DESIGN.md §9.4): measure, don't guess.
+
+``HybridConfig.recall_target`` is a *measured* contract, not a heuristic
+knob: before the first approximate query of a generation, a seeded
+held-out sample of corpus rows is served both by an exact reference
+(the cached brute engine) and by each rung of a tier ladder — cheapest
+first — and the first tier whose measured recall@k meets the target
+wins.  The measurement rides on every result as
+``KNNResult.recall_estimate``; when no tier qualifies, BOTH paths fall
+back to exact serving (estimate 1.0): the grid path re-enters the exact
+pipeline, the projected path serves full-dimension brute — the target
+is a contract, never quietly under-served.
+
+Two ladders, one per approximate mechanism:
+
+  * grid path  — ``GRID_EPS_TIERS``: the SHORTC ε shrinks (a runtime
+    operand, so every rung reuses the exact path's executables) and the
+    failure-reassignment/brute backstops are dropped (the lean pass).
+  * projected  — ``PROJ_CAND_TIERS``: candidate-pool multiples (×k) for
+    the projected candidate stage, capped at ``rescore_mult``.
+
+Calibration is cached on the generation (``_Generation.calib``), so it
+runs once per (path, k, target) per built generation; steady-state
+queries recompile and re-measure nothing.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import grid as grid_lib
+from repro.core import splitter as split_lib
+
+# Lean-pass ε scales, cheapest first.  1.0 is still approximate (the
+# backstops are off); exactness needs the fallback, not a rung.
+GRID_EPS_TIERS = (0.5, 0.7, 0.85, 1.0)
+
+# Projected candidate-pool multiples (×k), cheapest first.
+PROJ_CAND_TIERS = (1, 2, 4, 8)
+
+
+def recall_at_k(approx_ids: np.ndarray, exact_ids: np.ndarray,
+                exclude: Optional[np.ndarray] = None) -> float:
+    """Mean per-query overlap |approx ∩ exact| / |exact| over valid
+    (≥ 0) ids — the standard recall@k, tolerant of short rows.
+
+    ``exclude`` drops one id per row from BOTH sides before comparing:
+    calibration queries are corpus rows, so their own id is a
+    guaranteed rank-0 hit for reference and candidate alike — counting
+    it would inflate the estimate by ~(1−recall)/k, right where the
+    target−0.01 acceptance margin lives."""
+    approx_ids = np.asarray(approx_ids)
+    exact_ids = np.asarray(exact_ids)
+    hits = 0
+    denom = 0
+    for j, (row_a, row_e) in enumerate(zip(approx_ids, exact_ids)):
+        a = set(row_a[row_a >= 0])
+        e = set(row_e[row_e >= 0])
+        if exclude is not None:
+            a.discard(int(exclude[j]))
+            e.discard(int(exclude[j]))
+        hits += len(a & e)
+        denom += len(e)
+    return hits / max(1, denom)
+
+
+def _sample_rows(n_base: int, cfg) -> np.ndarray:
+    n_s = min(cfg.calib_queries, n_base)
+    rng = np.random.default_rng(cfg.seed + 0x5EED)
+    rows = rng.choice(n_base, size=n_s, replace=False)
+    rows.sort()
+    return rows
+
+
+def grid_tier(index, gen, kq: int) -> Tuple[Optional[float], float]:
+    """Calibrate the grid path's lean candidate stage: returns
+    ``(eps_scale, measured_recall)`` for the cheapest qualifying tier,
+    or ``(None, 1.0)`` when none met the target (serve exact)."""
+    from repro.runtime import knn_index as ki
+
+    cfg = index.config
+    key = ("grid", kq, cfg.recall_target)
+    hit = gen.calib.get(key)
+    if hit is not None:
+        return hit
+
+    rows = _sample_rows(gen.n_base, cfg)
+    n_s = len(rows)
+    queries_r = jnp.asarray(np.asarray(gen.points_r)[rows])
+    queries_rp = ki.pad_rows_pow2(queries_r, cfg.query_block)
+    # Exact reference through the cached brute engine.  exclude_self is
+    # off on BOTH sides: the sampled row is a legitimate rank-0 hit for
+    # reference and candidate alike, so the overlap is like-for-like.
+    _, ref_i = index._brute_fn(gen, kq, queries_rp, False)(
+        np.arange(n_s, dtype=np.int32))
+
+    q_coords = grid_lib.compute_cell_coords(
+        gen.grid, queries_r[:, : gen.grid.m])
+    split = split_lib.split_queries(
+        gen.grid, q_coords, kq, cfg.gamma, cfg.rho)
+    to_dense = np.asarray(split.to_dense)
+    dense_ids = np.nonzero(to_dense)[0].astype(np.int32)
+    sparse_ids = np.nonzero(~to_dense)[0].astype(np.int32)
+
+    out: Tuple[Optional[float], float] = (None, 1.0)
+    for scale in GRID_EPS_TIERS:
+        _, ids, _, _ = index._lean_pass(
+            gen, kq, n_s, queries_rp, dense_ids, sparse_ids, False, scale)
+        r = recall_at_k(ids, ref_i, exclude=rows)
+        if r >= cfg.recall_target:
+            out = (scale, r)
+            break
+    gen.calib[key] = out
+    return out
+
+
+def projected_tier(index, gen, kq: int) -> Tuple[Optional[int], float]:
+    """Calibrate the projection front stage's candidate-pool size:
+    returns ``(cand_mult, measured_recall)`` — the cheapest qualifying
+    rung of ``PROJ_CAND_TIERS`` (capped at ``rescore_mult``) — or
+    ``(None, 1.0)`` when no rung met the target on the held-out sample
+    (serve exact full-dimension brute).  A too-small ``projection_dim``
+    can collapse candidate coverage entirely (for ip, the MIPS
+    augmentation itself costs one effective dimension), so the fallback
+    is what makes ``recall_target`` a contract rather than a hope."""
+    from repro.runtime import knn_index as ki
+
+    cfg = index.config
+    key = ("proj", kq, cfg.recall_target)
+    hit = gen.calib.get(key)
+    if hit is not None:
+        return hit
+
+    rows = _sample_rows(gen.n_base, cfg)
+    n_s = len(rows)
+    q_full = np.asarray(gen.points_full)[rows]
+    qfp = ki.pad_rows_pow2(jnp.asarray(q_full), cfg.query_block)
+    # Exact FULL-dimension reference: the brute engine over the full
+    # corpus in the true metric (a distinct cache key from the grid-
+    # space brute — different avals, different metric kwarg).  The same
+    # executable serves the exact fallback when no rung qualifies.
+    _, ref_i = index._full_brute_fn(gen, kq, qfp, False)(
+        np.arange(n_s, dtype=np.int32))
+
+    qproj_rp = ki.pad_rows_pow2(
+        jnp.asarray(gen.projection.apply(q_full)), cfg.query_block)
+    if cfg.recall_target >= 1.0:
+        mults = [cfg.rescore_mult]      # measurement-only pass
+    else:
+        mults = sorted({min(m, cfg.rescore_mult) for m in PROJ_CAND_TIERS}
+                       | {cfg.rescore_mult})
+    out: Tuple[Optional[int], float] = (None, 1.0)
+    for cm in mults:
+        k_cand = max(kq, min(cm * kq, gen.n_base))
+        _, ids, *_ = index._projected_pass(
+            gen, kq, k_cand, n_s, qproj_rp, jnp.asarray(q_full),
+            False, cfg.rho)
+        r = recall_at_k(ids, ref_i, exclude=rows)
+        if r >= cfg.recall_target:
+            out = (cm, r)
+            break
+    gen.calib[key] = out
+    return out

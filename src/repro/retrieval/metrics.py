@@ -1,0 +1,107 @@
+"""Metric registry: score spaces, row preparation, and finalization.
+
+The MXU matmul core of every kernel is metric-agnostic — ``q·cᵀ`` is the
+hot loop regardless — so metric diversity costs only the norm terms and
+the finalization step (DESIGN.md §9.1).  Three metrics, two kernel
+variants:
+
+  * ``l2``     — raw score is squared L2 (``‖q‖² + ‖c‖² − 2q·c``,
+                 clamped at 0); finalized to Euclidean distance by √.
+  * ``cosine`` — REDUCED TO L2 over unit rows: for ‖q‖=‖c‖=1,
+                 ``d² = 2(1 − cos)``, a strictly monotone map, so the
+                 grid, SHORTC, certificates and every L2 engine apply
+                 unchanged.  Rows MUST be pre-normalized
+                 (``normalize_rows``); finalized to cosine *distance*
+                 ``1 − cos = d²/2``.
+  * ``ip``     — raw score is the NEGATED inner product ``−q·c`` (so
+                 ascending order = best-first, matching every top-K
+                 buffer).  Scores may be negative: finalization is the
+                 identity and NOTHING on the ip path may clamp at 0.
+                 Inner product is not a metric (no triangle
+                 inequality), so without a projection front stage ip
+                 queries route through the brute lane.
+
+``kernel_metric`` collapses the three to the two kernel variants; the
+raw score space is what every engine, merge buffer and delta fold
+operates in, and ``finalize`` maps it to the reported distances on
+``KNNResult`` — applied exactly once, at the index/sharded boundary.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+METRICS = ("l2", "ip", "cosine")
+
+# Tolerance for the cosine unit-row contract: generous enough for
+# float32 embedding pipelines, tight enough that a genuinely raw
+# (unnormalized) row is always caught.
+UNIT_ROW_ATOL = 1e-3
+
+
+def validate_metric(metric: str, context: str = "") -> str:
+    """Return ``metric`` or raise an actionable ValueError naming the
+    accepted spellings (mirrors ``validate_points``' error style)."""
+    if metric not in METRICS:
+        where = f" ({context})" if context else ""
+        raise ValueError(
+            f"unknown metric {metric!r}{where}: expected one of "
+            f"{'|'.join(METRICS)}"
+        )
+    return metric
+
+
+def kernel_metric(metric: str) -> str:
+    """The kernel-level distance variant for ``metric``: cosine rides
+    the L2 machinery (unit rows make d² a monotone map of cos), only
+    ip changes the kernel arithmetic."""
+    return "ip" if metric == "ip" else "l2"
+
+
+def normalize_rows(arr: np.ndarray) -> np.ndarray:
+    """L2-normalize rows (float32): the caller-side helper for building
+    cosine indexes/queries.  Zero rows are left at zero (they can never
+    be a cosine neighbor and will sort last)."""
+    a = np.asarray(arr, np.float32)
+    n = np.linalg.norm(a, axis=-1, keepdims=True)
+    return a / np.where(n > 0.0, n, 1.0)
+
+
+def unit_rows_ok(arr: np.ndarray) -> bool:
+    """True iff every row has (approximately) unit L2 norm."""
+    a = np.asarray(arr, np.float32)
+    if a.size == 0:
+        return True
+    n = np.linalg.norm(a, axis=-1)
+    return bool(np.all(np.abs(n - 1.0) <= UNIT_ROW_ATOL))
+
+
+def prepare_rows(arr: np.ndarray, metric: str, what: str,
+                 context: str = "") -> np.ndarray:
+    """Validate rows against the metric contract at an ingest boundary
+    (build / insert / query).  Cosine demands pre-normalized rows —
+    silently normalizing here would make the stored corpus differ from
+    what the caller handed us, so a raw row is an error, not a fixup."""
+    a = np.asarray(arr, np.float32)
+    if metric == "cosine" and not unit_rows_ok(a):
+        where = f" ({context})" if context else ""
+        raise ValueError(
+            f"{what} rows are not unit-normalized but the index metric "
+            f"is 'cosine'{where}: cosine indexes store and compare "
+            "pre-normalized rows (d² = 2(1 − cos) only holds on the "
+            "unit sphere) — pass them through "
+            "repro.retrieval.normalize_rows first"
+        )
+    return a
+
+
+def finalize(raw, metric: str):
+    """Map raw engine scores to the reported distance space (ascending
+    in both): l2 → Euclidean √; cosine → cosine distance 1 − cos =
+    d²/2; ip → identity (scores are −q·c and MAY be negative — no
+    clamp).  +inf padding rows pass through unchanged in every metric.
+    Works on numpy and jax arrays (pure ufuncs)."""
+    if metric == "ip":
+        return raw
+    if metric == "cosine":
+        return np.maximum(raw, 0.0) / 2.0
+    return np.sqrt(np.maximum(raw, 0.0))

@@ -55,6 +55,8 @@ from repro.core import grid as grid_lib
 from repro.core import queue as queue_lib
 from repro.core import sparse_knn as sparse_lib
 from repro.core import splitter as split_lib
+from repro.retrieval import metrics as met_lib
+from repro.retrieval import projection as proj_lib
 from repro.runtime import mutation as mut_lib
 from repro.utils import pad_to, pow2_bucket
 
@@ -192,10 +194,11 @@ def executable_memory_analysis(executables: Dict[str, object]):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("k", "corpus_chunk", "kernel_mode", "exclude_self"),
+    static_argnames=("k", "corpus_chunk", "kernel_mode", "exclude_self",
+                     "metric"),
 )
 def _brute_engine(points_r, query_ids, queries_r=None, *, k, corpus_chunk,
-                  kernel_mode, exclude_self=True):
+                  kernel_mode, exclude_self=True, metric="l2"):
     """Brute lane with the query gather fused in, so the AOT signature is
     (corpus, padded ids[, padded foreign queries]) only."""
     queries = points_r if queries_r is None else queries_r
@@ -204,7 +207,37 @@ def _brute_engine(points_r, query_ids, queries_r=None, *, k, corpus_chunk,
         points_r, queries[safe],
         dense_lib._exclusion_ids(query_ids, exclude_self),
         k=k, corpus_chunk=corpus_chunk, kernel_mode=kernel_mode,
+        metric=metric,
     )
+
+
+@functools.partial(jax.jit, static_argnames=("k", "metric"))
+def _rescore_engine(points_full, queries_f, cand_ids, excl, *, k, metric):
+    """Full-dimension exact rescore of the projection front stage's
+    surviving candidates (engine kind ``"rescore"``, DESIGN.md §9.3):
+    gather each query's candidate rows from the full-dim corpus,
+    compute true-metric scores as one batched MXU dot_general, and keep
+    the K best.  Returns raw scores (squared L2 / −q·c) aligned with
+    the padded query rows; invalid candidates (−1 ids from the
+    candidate stage) and the per-query excluded id are masked."""
+    safe = jnp.clip(cand_ids, 0, points_full.shape[0] - 1)
+    cand_pts = points_full[safe]                       # (Qp, kc, d)
+    if metric == "ip":
+        d = -jax.lax.dot_general(
+            queries_f, cand_pts, (((1,), (2,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32,
+        )                                              # (Qp, kc)
+    else:
+        diff = queries_f[:, None, :] - cand_pts
+        d = jnp.sum(diff * diff, axis=-1)
+    valid = (cand_ids >= 0) & (cand_ids != excl[:, None])
+    dm = jnp.where(valid, d, jnp.inf)
+    neg, sel = jax.lax.top_k(-dm, k)
+    kd = -neg
+    ki = jnp.where(
+        jnp.isinf(kd), -1, jnp.take_along_axis(cand_ids, sel, axis=1)
+    )
+    return kd, ki
 
 
 @dataclasses.dataclass
@@ -224,12 +257,23 @@ class _Generation:
     grid: grid_lib.GridIndex
     pyramid: sparse_lib.Pyramid
     home_counts: np.ndarray                 # (|D|,) self-cloud densities
+    # Projection front stage (DESIGN.md §9.3): when set, ``points_r``/
+    # grid/pyramid live in PROJECTED (m ≤ 8 dim) space and
+    # ``points_full`` holds the full-dim corpus the rescore engine
+    # reads.  None on a direct (unprojected) index.
+    projection: Optional[proj_lib.Projection] = None
+    points_full: Optional[jnp.ndarray] = None
     # Self-split cache per (k, ρ): (dense_ids, sparse_ids, threshold) —
     # generation-owned because it derives from this grid's densities.
     # ρ keys the cache because serving may override the config floor
     # online (straggler-driven Eq. 6 re-suggestion, DESIGN.md §7).
     self_splits: Dict[Tuple[int, float],
                       Tuple[np.ndarray, np.ndarray, float]] = (
+        dataclasses.field(default_factory=dict)
+    )
+    # Calibration cache (DESIGN.md §9.4): key -> (tier, recall_estimate)
+    # measured once per generation against a held-out corpus sample.
+    calib: Dict[tuple, Tuple[Optional[float], float]] = (
         dataclasses.field(default_factory=dict)
     )
 
@@ -279,6 +323,8 @@ class KNNIndex:
         compile_counts: Optional[Dict[str, int]] = None,
         executables: Optional[Dict[str, object]] = None,
         epsilon_arg: Optional[float] = None,
+        projection: Optional[proj_lib.Projection] = None,
+        points_full: Optional[jnp.ndarray] = None,
     ):
         self.config = config
         self.backend = backend
@@ -291,10 +337,15 @@ class KNNIndex:
             grid=grid,
             pyramid=pyramid,
             home_counts=home_counts,
+            projection=projection,
+            points_full=points_full,
         )
+        # Delta rows arrive in the corpus' ORIGINAL (full) dim order.
+        mut_dims = (projection.in_dim if projection is not None
+                    else int(points_r.shape[1]))
         # The atomic (generation, mutations) pair — see _Generation.
         self._live: Tuple[_Generation, mut_lib.MutationState] = (
-            gen, mut_lib.MutationState.empty(int(points_r.shape[1]))
+            gen, mut_lib.MutationState.empty(mut_dims)
         )
         self.generation = 0
         # The ε *argument* build() was given (None = re-select), replayed
@@ -343,10 +394,17 @@ class KNNIndex:
         strategy, see ``core.distributed.merge_strategy``).
 
         ``_prebuilt`` is internal (checkpoint restore): a
-        ``(points_r, dim_perm, eps, eps_beta)`` tuple replaying a saved
-        generation's REORDER + ε verbatim, so ``load`` never recomputes
-        either."""
+        ``(points_r, dim_perm, eps, eps_beta[, projection])`` tuple
+        replaying a saved generation's REORDER + ε (+ fitted projection)
+        verbatim, so ``load`` never recomputes any of them."""
         if mesh is not None:
+            if config.projection_dim > 0:
+                raise ValueError(
+                    "projection_dim > 0 is single-device in this release "
+                    "— the projection front stage and the sharded "
+                    "cell-order partition do not compose yet.  Build "
+                    "without a mesh, or drop the projection."
+                )
             from repro.runtime.sharded_index import ShardedKNNIndex
 
             return ShardedKNNIndex.build(
@@ -356,27 +414,56 @@ class KNNIndex:
                 executables=executables, _prebuilt=_prebuilt,
             )
         cfg = config
-        pts = jnp.asarray(points, jnp.float32)
-        npts, ndim = pts.shape
+        # Metric contract on the corpus (DESIGN.md §9.2): cosine demands
+        # unit rows — reject, with a pointer to normalize_rows, before
+        # anything is indexed.
+        pts_np = met_lib.prepare_rows(
+            validate_points(points, None, what="indexed points"),
+            cfg.metric, "indexed points", context="KNNIndex.build",
+        )
+        npts, ndim = pts_np.shape
         # k < |D| at build time: the self-join must find k OTHER points.
         validate_k(cfg.k, npts - 1, what="config.k",
                    context=" (build needs k < |D|)")
-        m = min(cfg.m, ndim)
 
+        projection = None
+        points_full = None
         if _prebuilt is not None:
-            points_r, dim_perm, eps, eps_beta = _prebuilt
+            points_r, dim_perm, eps, eps_beta = _prebuilt[:4]
+            if len(_prebuilt) > 4:
+                projection = _prebuilt[4]
             points_r = jnp.asarray(points_r, jnp.float32)
             t_select = 0.0
         else:
+            if cfg.projection_dim > 0:
+                # Projection front stage (DESIGN.md §9.3): grid/pyramid
+                # over the m-dim projected corpus; REORDER is skipped
+                # (the PCA fit already orders directions by variance,
+                # and a random map has none to exploit).
+                # An ip index fits over the MIPS→L2 augmented corpus so
+                # projected-L2 candidate ranking tracks inner-product
+                # ranking (see retrieval.projection.Projection).
+                projection = proj_lib.fit_projection(
+                    pts_np, cfg.projection_dim,
+                    kind=cfg.projection_kind, seed=cfg.seed,
+                    mips=(cfg.metric == "ip"),
+                )
+                points_r = jnp.asarray(projection.apply(pts_np,
+                                                        corpus=True))
+                dim_perm = None
             # (1) REORDER — distances are dim-perm invariant (§IV-D).
-            if cfg.reorder:
-                points_r, dim_perm = grid_lib.reorder_by_variance(pts)
+            elif cfg.reorder:
+                points_r, dim_perm = grid_lib.reorder_by_variance(
+                    jnp.asarray(pts_np))
             else:
-                points_r, dim_perm = pts, None
+                points_r, dim_perm = jnp.asarray(pts_np), None
 
             # (2) ε selection (§V-C2) — skipped when the caller pins ε.
             eps, eps_beta, t_select = select_epsilon(
                 points_r, cfg, epsilon, npts)
+        if projection is not None:
+            points_full = jnp.asarray(pts_np)
+        m = min(cfg.m, int(points_r.shape[1]))
 
         # (3) grid + pyramid indices (owned by this object).
         t0 = time.perf_counter()
@@ -406,6 +493,8 @@ class KNNIndex:
             compile_counts=compile_counts,
             executables=executables,
             epsilon_arg=epsilon,
+            projection=projection,
+            points_full=points_full,
         )
 
     # -- introspection -----------------------------------------------------
@@ -485,7 +574,19 @@ class KNNIndex:
 
     @property
     def n_dims(self) -> int:
-        return int(self._live[0].points_r.shape[1])
+        """Query-facing dimensionality: what ``query``/``insert`` rows
+        must have — the FULL corpus dim even when the grid lives in
+        projected space."""
+        gen = self._live[0]
+        if gen.projection is not None:
+            return gen.projection.in_dim
+        return int(gen.points_r.shape[1])
+
+    @property
+    def projection(self) -> Optional[proj_lib.Projection]:
+        """The live generation's fitted projection front stage (None on
+        a direct index)."""
+        return self._live[0].projection
 
     @property
     def total_compiles(self) -> int:
@@ -540,10 +641,21 @@ class KNNIndex:
     # Each closure binds one _Generation explicitly (NOT self.grid etc.)
     # so a compact() mid-query cannot mix generations' state.
 
+    def _grid_metric(self, gen: _Generation) -> str:
+        """The metric the grid-space engines run in: cosine collapses
+        onto the l2 kernels (pre-normalized rows), and a projected grid
+        is ALWAYS l2 space — the true metric returns at rescore time."""
+        if gen.projection is not None:
+            return "l2"
+        return met_lib.kernel_metric(self.config.metric)
+
     def _dense_fn(self, gen: _Generation, k: int, queries_rp,
-                  exclude_self: bool):
+                  exclude_self: bool, eps_scale: Optional[float] = None):
         cfg = self.config
-        eps_arg = jnp.float32(gen.eps)
+        # ε is a RUNTIME operand: the approximate mode's scaled ε
+        # (DESIGN.md §9.4) reuses the exact path's executable.
+        eps_arg = jnp.float32(
+            gen.eps if eps_scale is None else gen.eps * eps_scale)
 
         def dense_fn(ids: np.ndarray):
             qp = hybrid_lib._pad_ids(ids, cfg.query_block)
@@ -553,7 +665,7 @@ class KNNIndex:
             kwargs = dict(
                 k=k, budget=cfg.dense_budget, query_block=cfg.query_block,
                 block_c=cfg.block_c, backend=self.backend,
-                exclude_self=exclude_self,
+                exclude_self=exclude_self, metric=self._grid_metric(gen),
             )
             ex = self._engine("dense", dense_lib.dense_join_jit, args, kwargs)
             t0 = time.perf_counter()
@@ -582,6 +694,7 @@ class KNNIndex:
                 k=k, budget=cfg.sparse_budget,
                 query_block=cfg.query_block, sel_factor=cfg.sel_factor,
                 backend=self.backend, exclude_self=exclude_self,
+                metric=self._grid_metric(gen),
             )
             ex = self._engine("sparse", sparse_lib.sparse_knn_jit, args, kwargs)
             raw = ex(*args)     # async dispatch: returns un-blocked arrays
@@ -610,6 +723,33 @@ class KNNIndex:
             kwargs = dict(
                 k=k, corpus_chunk=cfg.brute_chunk,
                 kernel_mode=cfg.kernel_mode, exclude_self=exclude_self,
+                metric=self._grid_metric(gen),
+            )
+            ex = self._engine("brute", _brute_engine, args, kwargs)
+            d, i = jax.block_until_ready(ex(*args))
+            n = len(ids)
+            return np.asarray(d[:n]), np.asarray(i[:n])
+
+        return brute_fn
+
+    def _full_brute_fn(self, gen: _Generation, k: int, queries_fp,
+                       exclude_self: bool):
+        """Brute engine over the FULL-dimension corpus in the true
+        kernel metric — the projected path's exact fallback and its
+        calibration reference.  (The projected grid's own brute lane
+        runs in projected l2 space; this one answers in the index's
+        real geometry.)"""
+        cfg = self.config
+
+        def brute_fn(ids: np.ndarray):
+            qp = hybrid_lib._pad_ids(ids, cfg.query_block)
+            args = (gen.points_full, qp)
+            if queries_fp is not None:
+                args = args + (queries_fp,)
+            kwargs = dict(
+                k=k, corpus_chunk=cfg.brute_chunk,
+                kernel_mode=cfg.kernel_mode, exclude_self=exclude_self,
+                metric=met_lib.kernel_metric(cfg.metric),
             )
             ex = self._engine("brute", _brute_engine, args, kwargs)
             d, i = jax.block_until_ready(ex(*args))
@@ -649,7 +789,12 @@ class KNNIndex:
         ids assigned to them, valid as of this call's return (i.e.
         post-compaction ids when the insert tripped the auto-compact
         threshold).  O(1) amortized; queries stay exact."""
-        validate_points(points, self.n_dims, what="inserted points")
+        self._check_mutable()
+        points = met_lib.prepare_rows(
+            validate_points(points, self.n_dims, what="inserted points"),
+            self.config.metric, "inserted points",
+            context="KNNIndex.insert",
+        )
         gen, mut = self._live
         new_mut, gids = mut.with_insert(points, gen.n_base, self.n_dims)
         self._live = (gen, new_mut)
@@ -662,9 +807,19 @@ class KNNIndex:
         """Remove points by global id (tombstones).  Raises ValueError
         on unknown or already-deleted ids — a silent double-delete is a
         silent recall bug."""
+        self._check_mutable()
         gen, mut = self._live
         self._live = (gen, mut.with_delete(ids, gen.n_base))
         self._maybe_autocompact()
+
+    def _check_mutable(self) -> None:
+        if self._live[0].projection is not None:
+            raise ValueError(
+                "insert/delete are not supported on a projection-fronted "
+                "index (the fitted projection would go stale against a "
+                "drifting corpus) — rebuild with KNNIndex.build(...) on "
+                "the updated points, or set projection_dim=0"
+            )
 
     def net_points(self) -> np.ndarray:
         """The LIVE corpus in original dim order, ascending global id —
@@ -812,6 +967,16 @@ class KNNIndex:
         overrides the config's ρ floor for this call (the sharded
         serving layer's online Eq. 6 re-suggestion) — pure work routing,
         results are exact either way.
+
+        Metric/approximation routing (DESIGN.md §9): cosine runs the
+        l2 machinery over pre-normalized rows; raw ip (no projection)
+        serves every query through the exact brute lane (ip admits no
+        triangle inequality, so the grid cannot bound it); a
+        projection-fronted index runs the candidate stage in projected
+        space and rescores full-dim (``_query_projected``); and
+        ``recall_target < 1.0`` swaps the work queue for the calibrated
+        lean candidate stage (``_query_approx``) — ``recall_target=1.0``
+        takes this exact path bit-identically.
         """
         gen, mut = self._live
         if not mut.is_clean:
@@ -828,15 +993,31 @@ class KNNIndex:
         compiles_before = self.total_compiles
 
         is_self = queries is None or queries is gen.points_ref
+        q_np = None
         if is_self:
             n_q = npts_ref
+        else:
+            # Metric contract on the query side (DESIGN.md §9.2): cosine
+            # demands unit rows, with a pointer to normalize_rows.
+            q_np = met_lib.prepare_rows(
+                validate_points(queries, self.n_dims),
+                cfg.metric, "queries", context="KNNIndex.query",
+            )
+            n_q = int(q_np.shape[0])
+
+        if gen.projection is not None:
+            return self._query_projected(
+                gen, kq, n_q, q_np, exclude_self, rho, compiles_before)
+        if cfg.metric == "ip":
+            return self._query_brute_all(
+                gen, kq, n_q, q_np, exclude_self, compiles_before)
+
+        if is_self:
             queries_rp = None
             dense_ids, sparse_ids, threshold = self._self_split(gen, kq, rho)
             home_counts = gen.home_counts
         else:
-            validate_points(queries, self.n_dims)
-            q = jnp.asarray(queries, jnp.float32)
-            n_q = int(q.shape[0])
+            q = jnp.asarray(q_np)
             queries_r = q[:, gen.dim_perm] if gen.dim_perm is not None else q
             # The query-shape bucket: engine-cache keys see this padded
             # aval, so variable batch sizes share executables.
@@ -862,6 +1043,12 @@ class KNNIndex:
             home_counts = np.asarray(split.home_counts)
             threshold = float(split.threshold)
 
+        if cfg.recall_target < 1.0 and _net_cells is None:
+            return self._query_approx(
+                gen, kq, n_q, queries_rp, dense_ids, sparse_ids,
+                home_counts, threshold, exclude_self, rho, compiles_before,
+            )
+
         final_d, final_i, source, report = self._drain(
             gen, kq, n_q, queries_rp, dense_ids, sparse_ids, home_counts,
             exclude_self, rho=rho,
@@ -871,10 +1058,252 @@ class KNNIndex:
             compiles_before,
         )
         return hybrid_lib.KNNResult(
-            dists=np.sqrt(np.maximum(final_d, 0.0)),
+            dists=met_lib.finalize(final_d, cfg.metric),
             ids=final_i,
             source=source,
             stats=stats,
+        )
+
+    # -- metric / approximation query paths (DESIGN.md §9) -----------------
+
+    def _query_brute_all(
+        self, gen: _Generation, kq: int, n_q: int, q_np,
+        exclude_self: bool, compiles_before: int,
+    ) -> "hybrid_lib.KNNResult":
+        """Raw inner-product serving (§9.2): ip admits no triangle
+        inequality, so neither the grid's geometric routing nor the
+        sparse certificates can bound it — every query serves through
+        the exact brute lane (one padded batch).  Approximate ip wants
+        the projection front stage."""
+        cfg = self.config
+        if q_np is None:
+            queries_rp = None
+        else:
+            q = jnp.asarray(q_np)
+            queries_r = q[:, gen.dim_perm] if gen.dim_perm is not None else q
+            queries_rp = pad_rows_pow2(queries_r, cfg.query_block)
+        t0 = time.perf_counter()
+        d, i = self._brute_fn(gen, kq, queries_rp, exclude_self)(
+            np.arange(n_q, dtype=np.int32))
+        dt = time.perf_counter() - t0
+        stats = hybrid_lib.JoinStats(
+            epsilon=gen.eps,
+            epsilon_beta=gen.eps_beta,
+            t_brute=dt,
+            t_wall=dt,
+            n_engine_compiles=self.total_compiles - compiles_before,
+        )
+        return hybrid_lib.KNNResult(
+            dists=met_lib.finalize(d, cfg.metric),
+            ids=i,
+            source=np.full((n_q,), 2, np.int32),
+            stats=stats,
+        )
+
+    def _query_full_brute(
+        self, gen: _Generation, kq: int, n_q: int, q_np,
+        exclude_self: bool, compiles_before: int,
+    ) -> "hybrid_lib.KNNResult":
+        """The projected path's exact fallback (§9.4): no candidate rung
+        met ``recall_target`` on the held-out sample, so serve exact
+        full-dimension brute (estimate 1.0 by construction) — the same
+        executable calibration used for its reference — rather than
+        quietly under-serving the contract."""
+        cfg = self.config
+        qfp = (None if q_np is None
+               else pad_rows_pow2(jnp.asarray(q_np), cfg.query_block))
+        t0 = time.perf_counter()
+        d, i = self._full_brute_fn(gen, kq, qfp, exclude_self)(
+            np.arange(n_q, dtype=np.int32))
+        dt = time.perf_counter() - t0
+        stats = hybrid_lib.JoinStats(
+            epsilon=gen.eps,
+            epsilon_beta=gen.eps_beta,
+            t_brute=dt,
+            t_wall=dt,
+            n_engine_compiles=self.total_compiles - compiles_before,
+        )
+        return hybrid_lib.KNNResult(
+            dists=met_lib.finalize(d, cfg.metric),
+            ids=i,
+            source=np.full((n_q,), 2, np.int32),
+            stats=stats,
+        )
+
+    def _lean_pass(
+        self, gen: _Generation, kq: int, n_q: int, queries_rp,
+        dense_ids: np.ndarray, sparse_ids: np.ndarray,
+        exclude_self: bool, eps_scale: float,
+    ):
+        """One-shot approximate candidate stage (§9.4): sparse engine
+        dispatched async, dense engine once at scaled ε (a runtime
+        operand — the exact path's executable, zero recompiles), then
+        NO failure reassignment and NO brute certification — the missing
+        backstops are what the calibrated tier's measured recall pays
+        for."""
+        d_out = np.full((n_q, kq), np.inf, np.float32)
+        i_out = np.full((n_q, kq), -1, np.int32)
+        source = np.zeros((n_q,), np.int32)
+        t0 = time.perf_counter()
+        t_dense = t_sparse = 0.0
+        n_failed = n_uncert = 0
+        call = None
+        if len(sparse_ids):
+            call = self._sparse_fn(gen, kq, queries_rp, exclude_self)(
+                sparse_ids)
+        if len(dense_ids):
+            dd, di, dfail, t_dense = self._dense_fn(
+                gen, kq, queries_rp, exclude_self, eps_scale=eps_scale
+            )(dense_ids)
+            d_out[dense_ids] = dd
+            i_out[dense_ids] = di
+            n_failed = int(np.sum(dfail))
+        if call is not None:
+            sd, si, cert = call.get()
+            t_sparse = call.elapsed or 0.0
+            d_out[sparse_ids] = sd
+            i_out[sparse_ids] = si
+            source[sparse_ids] = 1
+            n_uncert = int(np.sum(~cert))
+        report = queue_lib.QueueReport(
+            batch_sizes=[len(dense_ids)] if len(dense_ids) else [],
+            t_batches=[t_dense] if len(dense_ids) else [],
+            n_dense_batches=1 if len(dense_ids) else 0,
+            n_sparse_rounds=1 if len(sparse_ids) else 0,
+            n_failed=n_failed,
+            n_uncertified=n_uncert,
+            n_sparse_engine_total=len(sparse_ids),
+            t_dense=t_dense,
+            t_sparse=t_sparse,
+            t_wall=time.perf_counter() - t0,
+        )
+        return d_out, i_out, source, report
+
+    def _query_approx(
+        self, gen: _Generation, kq: int, n_q: int, queries_rp,
+        dense_ids, sparse_ids, home_counts, threshold: float,
+        exclude_self: bool, rho: float, compiles_before: int,
+    ) -> "hybrid_lib.KNNResult":
+        """recall_target < 1.0 (§9.4): serve the calibrated lean tier —
+        or fall back to the exact pipeline (estimate 1.0) when no lean
+        tier met the target on the held-out sample."""
+        from repro.retrieval import calibrate as cal_lib
+
+        cfg = self.config
+        eps_scale, est = cal_lib.grid_tier(self, gen, kq)
+        if eps_scale is None:
+            final_d, final_i, source, report = self._drain(
+                gen, kq, n_q, queries_rp, dense_ids, sparse_ids,
+                home_counts, exclude_self, rho=rho,
+            )
+        else:
+            final_d, final_i, source, report = self._lean_pass(
+                gen, kq, n_q, queries_rp, dense_ids, sparse_ids,
+                exclude_self, eps_scale,
+            )
+        stats = self._stats(
+            gen, len(dense_ids), len(sparse_ids), threshold, report,
+            compiles_before,
+        )
+        return hybrid_lib.KNNResult(
+            dists=met_lib.finalize(final_d, cfg.metric),
+            ids=final_i,
+            source=source,
+            stats=stats,
+            recall_estimate=est,
+        )
+
+    def _projected_pass(
+        self, gen: _Generation, kq: int, k_cand: int, n_q: int,
+        queries_rp, qf, exclude_self: bool, rho: float,
+    ):
+        """Projection front stage (§9.3), one batch: the FULL exact
+        pipeline (work queue + brute certification) in projected space
+        at ``k_cand``, then the full-dim true-metric rescore engine
+        (kind ``"rescore"``) reduces each candidate pool to the k best.
+        ``queries_rp`` is the padded PROJECTED batch (None = self-join
+        over the projected corpus); ``qf`` the full-dim query rows the
+        rescore reads."""
+        cfg = self.config
+        if queries_rp is None:
+            dense_ids, sparse_ids, threshold = self._self_split(
+                gen, k_cand, rho)
+            home_counts = gen.home_counts
+        else:
+            q_coords = grid_lib.compute_cell_coords(
+                gen.grid, queries_rp[:n_q, : gen.grid.m]
+            )
+            split = split_lib.split_queries(
+                gen.grid, q_coords, k_cand, cfg.gamma, rho)
+            to_dense = np.asarray(split.to_dense)
+            dense_ids = np.nonzero(to_dense)[0].astype(np.int32)
+            sparse_ids = np.nonzero(~to_dense)[0].astype(np.int32)
+            home_counts = np.asarray(split.home_counts)
+            threshold = float(split.threshold)
+        cd, ci, source, report = self._drain(
+            gen, k_cand, n_q, queries_rp, dense_ids, sparse_ids,
+            home_counts, exclude_self, rho=rho,
+        )
+        t0 = time.perf_counter()
+        qb = pow2_bucket(n_q, cfg.query_block)
+        qfp = pad_rows_pow2(jnp.asarray(qf), cfg.query_block)
+        ci_p = np.full((qb, k_cand), -1, np.int32)
+        ci_p[:n_q] = ci
+        excl_p = np.full((qb,), -2, np.int32)
+        if exclude_self:
+            excl_p[:n_q] = np.arange(n_q, dtype=np.int32)
+        rargs = (gen.points_full, qfp, jnp.asarray(ci_p),
+                 jnp.asarray(excl_p))
+        rkw = dict(k=kq, metric=met_lib.kernel_metric(cfg.metric))
+        rd, ri = jax.block_until_ready(
+            self._engine("rescore", _rescore_engine, rargs, rkw)(*rargs)
+        )
+        t_rescore = time.perf_counter() - t0
+        return (
+            np.asarray(rd)[:n_q], np.asarray(ri)[:n_q], source, report,
+            threshold, len(dense_ids), len(sparse_ids), t_rescore,
+        )
+
+    def _query_projected(
+        self, gen: _Generation, kq: int, n_q: int, q_np,
+        exclude_self: bool, rho: float, compiles_before: int,
+    ) -> "hybrid_lib.KNNResult":
+        """Projection-fronted query (§9.3): candidate pool size comes
+        from the calibrated tier ladder (``retrieval.calibrate``); when
+        no rung met the target on the held-out sample (``cand_mult``
+        None), serve exact full-dimension brute instead — the projected
+        twin of the grid path's exact fallback."""
+        from repro.retrieval import calibrate as cal_lib
+
+        cfg = self.config
+        cand_mult, est = cal_lib.projected_tier(self, gen, kq)
+        if cand_mult is None:
+            return self._query_full_brute(
+                gen, kq, n_q, q_np, exclude_self, compiles_before)
+        if q_np is None:
+            queries_rp = None
+            qf = gen.points_full
+        else:
+            qproj = gen.projection.apply(q_np)
+            queries_rp = pad_rows_pow2(
+                jnp.asarray(qproj), cfg.query_block)
+            qf = jnp.asarray(q_np)
+        max_k = gen.n_base - 1 if exclude_self else gen.n_base
+        k_cand = max(kq, min(cand_mult * kq, max_k))
+        rd, ri, source, report, threshold, n_dense, n_sparse, t_rescore = (
+            self._projected_pass(
+                gen, kq, k_cand, n_q, queries_rp, qf, exclude_self, rho)
+        )
+        stats = self._stats(
+            gen, n_dense, n_sparse, threshold, report, compiles_before)
+        stats.t_merge += t_rescore
+        stats.t_wall += t_rescore
+        return hybrid_lib.KNNResult(
+            dists=met_lib.finalize(rd, cfg.metric),
+            ids=ri,
+            source=source,
+            stats=stats,
+            recall_estimate=est,
         )
 
     def _query_mutated(
@@ -907,35 +1336,17 @@ class KNNIndex:
             excl = (net_gids.astype(np.int32) if exclude_self
                     else np.full((len(net),), -2, np.int32))
         else:
-            validate_points(queries, self.n_dims)
-            q = jnp.asarray(queries, jnp.float32)
+            q_np = met_lib.prepare_rows(
+                validate_points(queries, self.n_dims),
+                cfg.metric, "queries", context="KNNIndex.query",
+            )
+            q = jnp.asarray(q_np)
             excl = (np.arange(q.shape[0], dtype=np.int32) if exclude_self
                     else np.full((int(q.shape[0]),), -2, np.int32))
         n_q = int(q.shape[0])
         queries_r = q[:, gen.dim_perm] if gen.dim_perm is not None else q
         queries_rp = pad_rows_pow2(queries_r, cfg.query_block)
         qb = int(queries_rp.shape[0])
-
-        # §V-D split against the NET density: base grid counts corrected
-        # by the delta/tombstone cell populations (splitter.net_adjust).
-        pts_r = np.asarray(gen.points_r)
-        delta_live_r = mut.delta_r(gen.dim_perm)[mut.delta_live]
-        tomb_pts_r = pts_r[mut.base_tombs]
-        q_coords = grid_lib.compute_cell_coords(
-            gen.grid, queries_r[:, : gen.grid.m]
-        )
-        q_cells = np.asarray(grid_lib.linearize(q_coords, gen.grid.radices))
-        net_adjust = jnp.asarray(mut_lib.net_cell_adjustment(
-            gen.grid, q_cells, delta_live_r, tomb_pts_r
-        ))
-        split = split_lib.split_queries(
-            gen.grid, q_coords, kq, cfg.gamma, cfg.rho,
-            net_adjust=net_adjust,
-        )
-        to_dense = np.asarray(split.to_dense)
-        dense_ids = np.nonzero(to_dense)[0].astype(np.int32)
-        sparse_ids = np.nonzero(~to_dense)[0].astype(np.int32)
-        home_counts = np.asarray(split.home_counts)
 
         # Main pipeline, widened so merge-time masking cannot starve the
         # top-k: engine-level exclusion is OFF (exclusion is by global
@@ -945,10 +1356,47 @@ class KNNIndex:
             kq + mut_lib.headroom_bucket(mut.n_base_tombs, exclude_self),
             n_base,
         )
-        final_d, final_i, source, report = self._drain(
-            gen, k_main, n_q, queries_rp, dense_ids, sparse_ids,
-            home_counts, False,
-        )
+        if cfg.metric == "ip":
+            # Raw ip (DESIGN.md §9.2): grid routing cannot bound inner
+            # product — the widened main pipeline IS the brute lane.
+            dense_ids = np.empty((0,), np.int32)
+            sparse_ids = np.empty((0,), np.int32)
+            threshold = 0.0
+            t0 = time.perf_counter()
+            final_d, final_i = self._brute_fn(
+                gen, k_main, queries_rp, False
+            )(np.arange(n_q, dtype=np.int32))
+            dt = time.perf_counter() - t0
+            source = np.full((n_q,), 2, np.int32)
+            report = queue_lib.QueueReport(t_brute=dt, t_wall=dt)
+        else:
+            # §V-D split against the NET density: base grid counts
+            # corrected by the delta/tombstone cell populations
+            # (splitter.net_adjust).
+            pts_r = np.asarray(gen.points_r)
+            delta_live_r = mut.delta_r(gen.dim_perm)[mut.delta_live]
+            tomb_pts_r = pts_r[mut.base_tombs]
+            q_coords = grid_lib.compute_cell_coords(
+                gen.grid, queries_r[:, : gen.grid.m]
+            )
+            q_cells = np.asarray(
+                grid_lib.linearize(q_coords, gen.grid.radices))
+            net_adjust = jnp.asarray(mut_lib.net_cell_adjustment(
+                gen.grid, q_cells, delta_live_r, tomb_pts_r
+            ))
+            split = split_lib.split_queries(
+                gen.grid, q_coords, kq, cfg.gamma, cfg.rho,
+                net_adjust=net_adjust,
+            )
+            to_dense = np.asarray(split.to_dense)
+            dense_ids = np.nonzero(to_dense)[0].astype(np.int32)
+            sparse_ids = np.nonzero(~to_dense)[0].astype(np.int32)
+            home_counts = np.asarray(split.home_counts)
+            threshold = float(split.threshold)
+            final_d, final_i, source, report = self._drain(
+                gen, k_main, n_q, queries_rp, dense_ids, sparse_ids,
+                home_counts, False,
+            )
 
         # Delta top-K + fold, through the same AOT engine cache.
         t0 = time.perf_counter()
@@ -958,7 +1406,8 @@ class KNNIndex:
         excl_p[:n_q] = excl
         dargs = (queries_rp, jnp.asarray(delta_pts_p),
                  jnp.asarray(excl_p), jnp.asarray(delta_gids))
-        dkw = dict(k=k_delta, mode=cfg.kernel_mode)
+        dkw = dict(k=k_delta, mode=cfg.kernel_mode,
+                   metric=met_lib.kernel_metric(cfg.metric))
         dd, di = self._engine("delta", mut_lib.delta_topk, dargs, dkw)(*dargs)
 
         md = np.full((qb, k_main), np.inf, np.float32)
@@ -976,11 +1425,11 @@ class KNNIndex:
         fi = np.asarray(fi)[:n_q]
 
         stats = self._stats(
-            gen, len(dense_ids), len(sparse_ids), float(split.threshold),
+            gen, len(dense_ids), len(sparse_ids), threshold,
             report, compiles_before, t_delta=t_delta,
         )
         return hybrid_lib.KNNResult(
-            dists=np.sqrt(np.maximum(fd, 0.0)),
+            dists=met_lib.finalize(fd, cfg.metric),
             ids=fi,
             # Source labels the main-pipeline engine; delta-buffer hits
             # don't relabel (the fold is uniform merge work).

@@ -252,16 +252,19 @@ def headroom_bucket(n_tombs: int, need_self: bool) -> int:
 # The two mutation engines (AOT-cached by the index classes)
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("k", "mode"))
-def delta_topk(queries_rp, delta_pts, excl, delta_gids, *, k, mode):
+@functools.partial(jax.jit, static_argnames=("k", "mode", "metric"))
+def delta_topk(queries_rp, delta_pts, excl, delta_gids, *, k, mode,
+               metric="l2"):
     """Per-query top-K over the delta buffer (engine kind ``"delta"``):
     the existing ``knn_topk`` kernel, with the exclusion ids riding in
     the query-id operand (its id-inequality test IS the exclusion — the
     same trick the dense engines use) and tombstoned/padding rows
-    already −1 in ``delta_gids``.  Returns squared distances, matching
-    the work queue's pre-√ output so the fold merges like with like."""
+    already −1 in ``delta_gids``.  Returns raw scores (squared L2, or
+    −q·c for ip), matching the work queue's pre-finalize output so the
+    fold merges like with like."""
     return topk_ops.knn_topk(
-        queries_rp, delta_pts, excl, delta_gids, k=k, mode=mode
+        queries_rp, delta_pts, excl, delta_gids, k=k, mode=mode,
+        metric=metric,
     )
 
 

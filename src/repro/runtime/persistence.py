@@ -70,6 +70,14 @@ def save_index(index, directory: str, *, manager=None) -> int:
     }
     if gen.dim_perm is not None:
         tree["dim_perm"] = np.asarray(gen.dim_perm, np.int32)
+    projection = getattr(gen, "projection", None)
+    if projection is not None:
+        # The fitted projection is generation state (DESIGN.md §9.3):
+        # replayed verbatim at load — a re-fit could differ across BLAS
+        # builds and silently change which candidates the front stage
+        # surfaces.
+        tree["proj_matrix"] = np.asarray(projection.matrix, np.float32)
+        tree["proj_mean"] = np.asarray(projection.mean, np.float32)
     extra = {
         "format": FORMAT,
         "config": dataclasses.asdict(index.config),
@@ -79,6 +87,9 @@ def save_index(index, directory: str, *, manager=None) -> int:
                         else float(index._epsilon_arg)),
         "generation": int(index.generation),
     }
+    if projection is not None:
+        extra["projection_kind"] = projection.kind
+        extra["projection_mips_m"] = float(projection.mips_m)
     latest = mgr.latest_step()
     step = 0 if latest is None else latest + 1
     mgr.save(step, tree, extra=extra)
@@ -122,6 +133,14 @@ def load_index(directory: str, *, mesh=None, mesh_axis=None,
         float(extra["eps"]),
         float(extra["eps_beta"]),
     )
+    if "proj_matrix" in tree:
+        from repro.retrieval.projection import Projection
+        prebuilt = prebuilt + (Projection(
+            kind=extra.get("projection_kind", cfg.projection_kind),
+            matrix=np.asarray(tree["proj_matrix"], np.float32),
+            mean=np.asarray(tree["proj_mean"], np.float32),
+            mips_m=float(extra.get("projection_mips_m", 0.0)),
+        ),)
     index = KNNIndex.build(
         tree["points_ref"], cfg, extra["epsilon_arg"],
         backend=backend, compile_counts=compile_counts,

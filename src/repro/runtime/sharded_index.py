@@ -53,6 +53,7 @@ from repro.core import dense_join as dense_lib
 from repro.core import distributed as dist_lib
 from repro.core import grid as grid_lib
 from repro.core import splitter as split_lib
+from repro.retrieval import metrics as met_lib
 from repro.runtime import mutation as mut_lib
 from repro.runtime.faults import FaultInjector
 from repro.runtime.knn_index import (
@@ -205,9 +206,21 @@ class ShardedKNNIndex:
         ``_prebuilt`` replays a saved generation's REORDER + ε
         (``runtime.persistence``) so restarts recompute neither."""
         cfg = config
+        if cfg.projection_dim > 0:
+            raise ValueError(
+                "projection_dim > 0 is single-device in this release — "
+                "the projection front stage and the sharded cell-order "
+                "partition do not compose yet.  Build without a mesh, "
+                "or drop the projection."
+            )
         axes = _resolve_axes(mesh, mesh_axis)
         n_shards = int(np.prod([mesh.shape[a] for a in axes]))
-        pts = jnp.asarray(points, jnp.float32)
+        # Metric contract on the corpus (DESIGN.md §9.2) — same check
+        # as the single-device build, before anything is partitioned.
+        pts = jnp.asarray(met_lib.prepare_rows(
+            validate_points(points, None, what="indexed points"),
+            cfg.metric, "indexed points", context="KNNIndex.build",
+        ))
         npts, ndim = pts.shape
         validate_k(cfg.k, npts - 1, what="config.k",
                    context=" (build needs k < |D|)")
@@ -485,7 +498,11 @@ class ShardedKNNIndex:
         """Add points (delta buffer).  Returns their global ids, valid
         as of this call's return (post-compaction ids if the insert
         tripped the auto-compact threshold)."""
-        validate_points(points, self.n_dims, what="inserted points")
+        points = met_lib.prepare_rows(
+            validate_points(points, self.n_dims, what="inserted points"),
+            self.config.metric, "inserted points",
+            context="KNNIndex.insert",
+        )
         gen, mut = self._live
         new_mut, gids = mut.with_insert(points, gen.n_base, self.n_dims)
         self._live = (gen, new_mut)
@@ -597,8 +614,10 @@ class ShardedKNNIndex:
             queries_r = gen.points_r
             n_q = npts
         else:
-            validate_points(queries, self.n_dims)
-            q = jnp.asarray(queries, jnp.float32)
+            q = jnp.asarray(met_lib.prepare_rows(
+                validate_points(queries, self.n_dims),
+                cfg.metric, "queries", context="KNNIndex.query",
+            ))
             n_q = int(q.shape[0])
             queries_r = q[:, gen.dim_perm] if gen.dim_perm is not None else q
 
@@ -611,7 +630,7 @@ class ShardedKNNIndex:
 
         excl = (np.arange(n_q, dtype=np.int32) if exclude_self
                 else np.full((n_q,), -2, np.int32))
-        md, mi, sources, shard_stats, t_merge, serve, skipped = \
+        md, mi, sources, shard_stats, t_merge, serve, skipped, ests = \
             self._shard_serve(
                 gen, kq, k_eff, n_q, queries_r, excl,
                 serve_shards=_serve_shards,
@@ -632,6 +651,9 @@ class ShardedKNNIndex:
             source=np.max(sources, axis=0),
             stats=stats,
             coverage=self._coverage(n_q, serve, skipped),
+            # Approximate shards (recall_target < 1.0) bound the merged
+            # result from below by the weakest shard's measurement.
+            recall_estimate=min(ests) if ests else 1.0,
         )
 
     def _query_mutated(
@@ -665,8 +687,10 @@ class ShardedKNNIndex:
             excl = (net_gids.astype(np.int32) if exclude_self
                     else np.full((len(net),), -2, np.int32))
         else:
-            validate_points(queries, self.n_dims)
-            q = jnp.asarray(queries, jnp.float32)
+            q = jnp.asarray(met_lib.prepare_rows(
+                validate_points(queries, self.n_dims),
+                cfg.metric, "queries", context="KNNIndex.query",
+            ))
             excl = (np.arange(q.shape[0], dtype=np.int32) if exclude_self
                     else np.full((int(q.shape[0]),), -2, np.int32))
         n_q = int(q.shape[0])
@@ -690,7 +714,7 @@ class ShardedKNNIndex:
             n_base,
         )
         k_eff = min(k_out + (1 if gen.n_pad else 0), gen.shard_n)
-        md, mi, sources, shard_stats, t_merge, serve, skipped = \
+        md, mi, sources, shard_stats, t_merge, serve, skipped, ests = \
             self._shard_serve(
                 gen, k_out, k_eff, n_q, queries_r,
                 np.full((n_q,), -2, np.int32), shard_net_cells,
@@ -708,14 +732,16 @@ class ShardedKNNIndex:
         excl_p[:n_q] = excl
         dargs = (queries_rp, jnp.asarray(delta_pts_p),
                  jnp.asarray(excl_p), jnp.asarray(delta_gids))
-        dkw = dict(k=k_delta, mode=cfg.kernel_mode)
+        dkw = dict(k=k_delta, mode=cfg.kernel_mode,
+                   metric=met_lib.kernel_metric(cfg.metric))
         dd, di = run_engine(
             self, "delta", mut_lib.delta_topk, dargs, dkw
         )(*dargs)
-        # Shard distances are post-√ while the delta engine returns
-        # squared values — bring the delta block into the merged space
-        # before folding.
-        dd = np.sqrt(np.maximum(np.asarray(dd), 0.0))
+        # Shard distances are FINALIZED while the delta engine returns
+        # raw scores — bring the delta block into the merged space
+        # before folding (finalize is monotone per metric, so the fold
+        # compares like with like).
+        dd = met_lib.finalize(np.asarray(dd), cfg.metric)
         fargs = (jnp.asarray(md), jnp.asarray(mi), jnp.asarray(dd),
                  jnp.asarray(np.asarray(di)),
                  jnp.asarray(mut.tombstone_table()), jnp.asarray(excl_p))
@@ -735,6 +761,7 @@ class ShardedKNNIndex:
             source=np.max(sources, axis=0),
             stats=stats,
             coverage=self._coverage(n_q, serve, skipped),
+            recall_estimate=min(ests) if ests else 1.0,
         )
 
     def _shard_serve(self, gen: _ShardedGeneration, k_out: int,
@@ -767,6 +794,7 @@ class ShardedKNNIndex:
         shard_i = np.full((self.n_shards, n_q, k_eff), -1, np.int32)
         sources = np.zeros((self.n_shards, n_q), np.int32)
         shard_stats = []
+        estimates = []
         serve = None if sup is None else {
             "n_hedged": 0, "n_hedge_wins": 0, "n_subquery_retries": 0,
             "n_subquery_failures": 0, "shards_lost": [],
@@ -789,6 +817,7 @@ class ShardedKNNIndex:
             shard_i[p] = np.where(li >= 0, gid[np.clip(li, 0, None)], -1)
             sources[p] = res.source
             shard_stats.append(res.stats)
+            estimates.append(res.recall_estimate)
 
         for p, shard in enumerate(gen.shards):
             if p in skipped:
@@ -840,7 +869,7 @@ class ShardedKNNIndex:
         md, mi = self._merge(k_out, dpad, ipad, epad, gen.n_pad)
         t_merge = time.perf_counter() - t0
         return (np.asarray(md), np.asarray(mi), sources, shard_stats,
-                t_merge, serve, tuple(skipped))
+                t_merge, serve, tuple(skipped), estimates)
 
     def _coverage(self, n_q: int, serve,
                   skipped: Tuple[int, ...] = ()) -> Optional[np.ndarray]:

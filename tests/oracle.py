@@ -13,7 +13,7 @@ import numpy as np
 
 
 def oracle_knn(points, queries=None, *, k, exclude_self=False,
-               squared=False):
+               squared=False, metric="l2"):
     """O(|Q|·|D|) float64 materialized oracle: ``(dists, ids)``.
 
     Distances are ascending per row; the argsort is stable, so ties
@@ -21,17 +21,38 @@ def oracle_knn(points, queries=None, *, k, exclude_self=False,
     (queries = points).  ``exclude_self`` masks ``d[i, i]`` for
     ``i < min(|Q|, |D|)`` — the positional-identity exclusion the
     engines implement, meaningful for self-queries and for query sets
-    aliasing a prefix of the corpus.  ``squared=True`` returns squared
-    L2 (the kernels' pre-√ space)."""
+    aliasing a prefix of the corpus.
+
+    ``metric`` selects the engines' finalized score space
+    (repro.retrieval.metrics):
+
+      l2      — √(squared L2); ``squared=True`` returns the kernels'
+                pre-√ space instead
+      ip      — −⟨q, c⟩ (maximum inner product as a min-score search;
+                may be negative, ``squared`` is ignored)
+      cosine  — 1 − cos(q, c); the oracle normalizes internally, so it
+                accepts raw rows and matches the engines' contract of
+                L2-over-unit-vectors on pre-normalized inputs
+    """
     pts = np.asarray(points, np.float64)
     q = pts if queries is None else np.asarray(queries, np.float64)
-    d2 = ((q[:, None, :] - pts[None, :, :]) ** 2).sum(-1)
+    if metric == "ip":
+        d2 = -(q @ pts.T)
+    elif metric == "cosine":
+        qn = q / np.maximum(np.linalg.norm(q, axis=1, keepdims=True), 1e-30)
+        pn = pts / np.maximum(np.linalg.norm(pts, axis=1, keepdims=True),
+                              1e-30)
+        d2 = 1.0 - qn @ pn.T
+    else:
+        d2 = ((q[:, None, :] - pts[None, :, :]) ** 2).sum(-1)
     if exclude_self:
         n = min(q.shape[0], pts.shape[0])
         d2[np.arange(n), np.arange(n)] = np.inf
     ids = np.argsort(d2, axis=1, kind="stable")[:, :k]
     d = np.take_along_axis(d2, ids, axis=1)
-    return (d if squared else np.sqrt(d)), ids
+    if metric == "l2" and not squared:
+        d = np.sqrt(np.maximum(d, 0.0))
+    return d, ids
 
 
 def mutated_oracle(base, inserts=(), deletes=()):

@@ -1,0 +1,192 @@
+"""Projection front stage (DESIGN.md §9.3, ISSUE 9 acceptance tests):
+deterministic fits, MIPS augmentation, candidate-then-rescore recall on
+structured data, save/load round-trip bit-identity, and the guards
+(mutation, mesh, bad dims) that keep the stage honest."""
+import numpy as np
+import pytest
+
+from oracle import oracle_knn
+from repro.core import HybridConfig
+from repro.retrieval.projection import Projection, fit_projection
+from repro.runtime import KNNIndex
+
+
+def _lowrank(n=600, d=32, rank=5, seed=0, noise=0.05, mix_seed=42):
+    """Low-rank structured cloud: linear projections can preserve its
+    neighborhoods (isotropic Gaussians are projection-hostile and would
+    make recall assertions meaningless).  The mixing matrix is shared
+    across calls (``mix_seed``) so corpus and queries drawn with
+    different ``seed``s live in the SAME latent subspace — calibration
+    on corpus rows is only a valid proxy for in-distribution queries."""
+    mix = np.random.default_rng(mix_seed).standard_normal(
+        (rank, d)).astype(np.float32)
+    r = np.random.default_rng(seed)
+    lat = r.standard_normal((n, rank)).astype(np.float32)
+    return (lat @ mix + noise * r.standard_normal((n, d))
+            ).astype(np.float32)
+
+
+def _recall(got_ids, want_ids):
+    return float(np.mean([len(set(a) & set(e)) / len(e)
+                          for a, e in zip(np.asarray(got_ids), want_ids)]))
+
+
+# ---------------------------------------------------------------------------
+# the fit itself
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["pca", "random"])
+def test_fit_is_deterministic(kind):
+    pts = _lowrank(seed=1)
+    p1 = fit_projection(pts, 4, kind=kind, seed=3)
+    p2 = fit_projection(pts, 4, kind=kind, seed=3)
+    np.testing.assert_array_equal(p1.matrix, p2.matrix)
+    np.testing.assert_array_equal(p1.mean, p2.mean)
+    assert p1.in_dim == 32 and p1.out_dim == 4
+
+
+def test_fit_rejects_bad_dims_and_kind():
+    pts = _lowrank(n=50, d=8)
+    with pytest.raises(ValueError, match="1 <= m < corpus dim"):
+        fit_projection(pts, 8)
+    with pytest.raises(ValueError, match="1 <= m < corpus dim"):
+        fit_projection(pts, 0)
+    with pytest.raises(ValueError, match="unknown projection kind"):
+        fit_projection(pts, 4, kind="umap")
+    with pytest.raises(ValueError, match="projection expects"):
+        fit_projection(pts, 4).apply(pts[:, :5])
+
+
+def test_mips_fit_augments_corpus_side_only():
+    # m = latent rank + 1: the MIPS augmentation costs one effective
+    # dimension, so the projection needs rank+1 dims to track ip order
+    pts = _lowrank(n=200, d=16, seed=2)
+    proj = fit_projection(pts, 6, mips=True)
+    assert proj.mips_m > 0
+    assert proj.in_dim == 16              # raw-row dim, augment internal
+    assert proj.matrix.shape == (17, 6)   # fitted over augmented space
+    pc = proj.apply(pts, corpus=True)
+    pq = proj.apply(pts)                  # query side: zero-augmented
+    assert pc.shape == pq.shape == (200, 6)
+    assert not np.allclose(pc, pq)
+    # the augmentation makes projected L2 track ip ranking: nearest
+    # projected corpus row for a query should usually be its ip argmax
+    ip_rank = np.argmax(pts @ pts.T - np.eye(200) * 1e9, axis=1)
+    d2 = ((pq[:, None, :] - pc[None]) ** 2).sum(-1) + np.eye(200) * 1e9
+    agree = np.mean(np.argmin(d2, axis=1) == ip_rank)
+    assert agree > 0.9
+
+
+# ---------------------------------------------------------------------------
+# the projected index: candidate stage + full-dim rescore
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["pca", "random"])
+def test_projected_index_recall(kind):
+    pts = _lowrank(seed=4)
+    q = _lowrank(n=90, seed=5)
+    cfg = HybridConfig(k=8, projection_dim=5, projection_kind=kind,
+                       recall_target=0.9, online_rebalance=False)
+    index = KNNIndex.build(pts, cfg)
+    assert index.projection is not None and index.n_dims == 32
+    res = index.query(q)
+    _, want_i = oracle_knn(pts, q, k=8)
+    rec = _recall(res.ids, want_i)
+    assert rec >= 0.85, f"projected recall {rec} on structured data"
+    assert 0.0 < res.recall_estimate <= 1.0
+    # rescored distances are true full-dim metric values
+    want_d, _ = oracle_knn(pts, q, k=8)
+    assert np.all(np.sort(np.asarray(res.dists), 1)[:, 0]
+                  >= want_d[:, 0] - 1e-4)
+
+
+def test_projected_ip_index_recall():
+    """MIPS augmentation end-to-end: an ip index behind the projection
+    front stage keeps candidate recall on structured data."""
+    pts = _lowrank(seed=6)
+    q = _lowrank(n=80, seed=7)
+    cfg = HybridConfig(k=8, metric="ip", projection_dim=5,
+                       recall_target=0.9, online_rebalance=False)
+    index = KNNIndex.build(pts, cfg)
+    res = index.query(q)
+    _, want_i = oracle_knn(pts, q, k=8, metric="ip")
+    rec = _recall(res.ids, want_i)
+    assert rec >= 0.85, f"projected ip recall {rec}"
+    # and the reported distances are true inner-product scores
+    realized = -np.einsum("qd,qkd->qk", q.astype(np.float64),
+                          pts.astype(np.float64)[np.asarray(res.ids)])
+    np.testing.assert_allclose(np.sort(np.asarray(res.dists), 1),
+                               np.sort(realized, 1), atol=1e-4)
+
+
+def test_projected_steady_state_compile_free():
+    pts = _lowrank(seed=8)
+    q = _lowrank(n=64, seed=9)
+    cfg = HybridConfig(k=4, projection_dim=4, recall_target=0.95,
+                       online_rebalance=False)
+    index = KNNIndex.build(pts, cfg)
+    index.query(q)                     # warm + calibrate
+    res = index.query(q[:48])          # same pow2 bucket
+    assert res.stats.n_engine_compiles == 0
+
+
+# ---------------------------------------------------------------------------
+# persistence + guards
+# ---------------------------------------------------------------------------
+
+def test_projected_save_load_bit_identical(tmp_path):
+    pts = _lowrank(seed=10)
+    q = _lowrank(n=40, seed=11)
+    cfg = HybridConfig(k=6, projection_dim=5, recall_target=0.9,
+                       online_rebalance=False)
+    index = KNNIndex.build(pts, cfg)
+    want = index.query(q)
+    index.save(str(tmp_path))
+    loaded = KNNIndex.load(str(tmp_path))
+    assert loaded.projection is not None
+    np.testing.assert_array_equal(loaded.projection.matrix,
+                                  index.projection.matrix)
+    got = loaded.query(q)
+    np.testing.assert_array_equal(np.asarray(want.dists),
+                                  np.asarray(got.dists))
+    np.testing.assert_array_equal(np.asarray(want.ids),
+                                  np.asarray(got.ids))
+
+
+def test_projected_mips_save_load_round_trip(tmp_path):
+    pts = _lowrank(seed=12)
+    cfg = HybridConfig(k=4, metric="ip", projection_dim=4)
+    index = KNNIndex.build(pts, cfg)
+    assert index.projection.mips_m > 0
+    index.save(str(tmp_path))
+    loaded = KNNIndex.load(str(tmp_path))
+    assert loaded.projection.mips_m == index.projection.mips_m
+    q = _lowrank(n=30, seed=13)
+    np.testing.assert_array_equal(np.asarray(index.query(q).ids),
+                                  np.asarray(loaded.query(q).ids))
+
+
+def test_projected_index_rejects_mutation():
+    pts = _lowrank(n=200, seed=14)
+    index = KNNIndex.build(pts, HybridConfig(k=3, projection_dim=4))
+    with pytest.raises(ValueError, match="projection-fronted"):
+        index.insert(pts[:5])
+    with pytest.raises(ValueError, match="projection-fronted"):
+        index.delete([0, 1])
+
+
+def test_projected_index_rejects_mesh():
+    jax = pytest.importorskip("jax")
+    from jax.sharding import Mesh
+    mesh = Mesh(np.asarray(jax.devices()), ("shard",))
+    pts = _lowrank(n=200, seed=15)
+    with pytest.raises(ValueError, match="projection"):
+        KNNIndex.build(pts, HybridConfig(k=3, projection_dim=4),
+                       mesh=mesh)
+
+
+def test_projection_dim_validation():
+    with pytest.raises(ValueError, match="projection_dim"):
+        HybridConfig(k=3, projection_dim=9)
+    with pytest.raises(ValueError, match="projection_dim"):
+        HybridConfig(k=3, projection_dim=-1)
