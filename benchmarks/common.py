@@ -180,7 +180,7 @@ def emit_bench_json(path: str, tag: str, backend: str, tables: Dict,
                 key: r[key]
                 for key in ("wall_s", "response_s", "queries_per_s",
                             "n_engine_compiles", "n_points", "backend",
-                            "mesh_shape", "config", "memory",
+                            "mesh_shape", "config", "memory", "roofline",
                             "qps_offered", "p50_effective_s",
                             "p99_effective_s", "shed_rate",
                             "level_occupancy", "recall", "recall_target",

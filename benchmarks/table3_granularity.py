@@ -29,12 +29,20 @@ import dataclasses
 from repro.core import HybridConfig
 from repro.runtime import JoinSession
 
+from benchmarks import roofline
 from benchmarks.common import (PAPER_K, load_dataset, parser, print_table, save,
                     timed_trials)
 
 # Re-swept for the streaming engine (ISSUE 3): with no (block, budget)
 # distance tile the budget stops being the memory cap, so the grid now
 # brackets the raised defaults (dense_budget=2048, n_batches=2).
+#
+# Re-swept again for the scalar-prefetch path (ISSUE 10): the kernel
+# grid is static (n_tiles, nblk) with nblk ~ budget/block_c, so every
+# tile pays nblk DMA steps even when its deduped union is small —
+# raising dense_budget past 2048 only adds masked steps (budget4096
+# measured ~1.3× slower than default on the smoke sweep) and block_c
+# 128→256 is flat.  Defaults stay dense_budget=2048 / block_c=128.
 TILE_SWEEP = [
     ("block32", dict(query_block=32, dense_budget=512)),
     ("block128", dict(query_block=128, dense_budget=1024)),
@@ -74,6 +82,10 @@ def active_sweep(backend: str):
 def run(args):
     backend = getattr(args, "backend", "auto")
     sweep = active_sweep(backend)
+    # analytic census gate (ISSUE 10): re-validate on every BENCH
+    # emission that the default granularity keeps the fp32 fused path on
+    # the compute side of the roofline before publishing numbers for it
+    roofline.assert_default_compute_bound()
     rows = []
     rec = {}
     for ds in args.datasets:
@@ -100,6 +112,18 @@ def run(args):
                 "memory": session.memory_analysis(),
                 **res.stats.__dict__,
             }
+            if session.backend != "ref":
+                # kernel census (ISSUE 10): the compute/DMA verdict for
+                # exactly this tile geometry, per modeled part
+                rec[f"{ds}/{name}"]["roofline"] = {
+                    arch: roofline.fused_dense_census(
+                        query_block=cfg.query_block,
+                        dense_budget=cfg.dense_budget,
+                        block_c=cfg.block_c, dim=int(pts.shape[1]),
+                        k=k, distance_dtype=cfg.distance_dtype,
+                        arch=arch)
+                    for arch in roofline.KERNEL_ARCH
+                }
         rows.append(row)
     print_table(
         f"Table III analogue: tile geometry + queue granularity "

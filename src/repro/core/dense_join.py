@@ -30,12 +30,18 @@ Three execution backends share those semantics (DESIGN.md §2.5, §2.6):
     the SHORTC ε² tile short-circuit, followed by a second top-K pass
     over the materialized (TQ, TC) tile;
   * ``"fused"`` — the streaming one-pass engine (``kernels/knn_stream``):
-    same cell-tiled shared candidate block, but the candidate axis is an
-    inner kernel grid dimension — each (TQ×D)·(D×TCsub) distance
-    sub-tile merges into a per-query running top-K carried in VMEM
-    scratch, with ε/found bookkeeping folded into the same pass, so no
-    (block, budget) distance tile ever exists in HBM.  Runs the Pallas
-    kernel compiled on TPU and in interpret mode elsewhere (CPU CI).
+    the candidate axis is an inner kernel grid dimension — each
+    (TQ×D)·(D×TCsub) distance sub-tile merges into a per-query running
+    top-K carried in VMEM scratch, with ε/found bookkeeping folded into
+    the same pass, so no (block, budget) distance tile ever exists in
+    HBM.  Since ISSUE 10 the kernel also pulls its own candidates: the
+    tile's deduped cell ranges become a scalar-prefetch DMA schedule
+    (``_fused_prefetch_join``) driving block reads straight from the
+    HBM-resident cell-sorted corpus, so no gathered (tiles, budget, D)
+    candidate copy exists either — the corpus is read in place and the
+    budget bounds only metadata.  Runs the Pallas kernel compiled on
+    TPU and in interpret mode elsewhere (CPU CI).  ``distance_dtype``
+    ("fp32"/"bf16") selects the kernel accumulation dtype here.
 
 ``"auto"`` resolves once per process state to fused on TPU and ref
 elsewhere; the ``REPRO_BACKEND`` env var overrides the auto resolution
@@ -56,11 +62,33 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import grid as grid_lib
+from repro.kernels.knn_stream import kernel as stream_kernel
 from repro.kernels.knn_stream import ops as stream_ops
 from repro.kernels.pairwise_l2 import ops as pairwise_ops
-from repro.utils import round_up
+from repro.utils import INT32_SENTINEL, round_up
 
 BACKENDS = ("ref", "pallas", "interpret", "fused", "auto")
+
+# Distance-accumulation dtype (DESIGN.md §10).  "fp32" is the exact
+# path.  "bf16" computes kernel distance tiles from bf16-cast operands
+# (halving candidate-DMA bytes and engaging the MXU's native
+# low-precision path), over-fetches BF16_OVERFETCH extra slots, and
+# restores exact fp32 distances by rescoring the survivors; the ε
+# keep-threshold is inflated by BF16_EPS_SLACK so cast rounding near
+# the ε² boundary drops (almost) nothing the exact filter would keep —
+# the rescore then applies the exact ε² and any capture shortfall is a
+# conservative §V-E failure, never a silent wrong answer.
+DISTANCE_DTYPES = ("fp32", "bf16")
+BF16_OVERFETCH = 8
+BF16_EPS_SLACK = 0.125
+
+# Extra corpus-block slots past ceil(budget/block_c) in the prefetch
+# path's per-tile DMA schedule: the deduped cell ranges are rounded to
+# block_c-aligned corpus blocks, so fragmentation (many small ranges
+# straddling block edges) can touch a few more blocks than the budget's
+# worth of rows.  Exceeding the padded schedule is a per-tile overflow
+# failure, exactly like exceeding the row budget.
+PREFETCH_BLOCK_SLACK = 2
 
 
 def resolve_backend(backend: str) -> str:
@@ -188,6 +216,176 @@ def _shared_tile_candidates(index: grid_lib.GridIndex, points_r, qids,
     return qpts, cand_ids, cand_pts, own_total, tile_overflow
 
 
+def _tile_block_tables(index: grid_lib.GridIndex, coords_all, queries,
+                       tiles, nblk, n_cb, budget, block_c):
+    """The prefetch path's XLA-side metadata pass: per query tile, turn
+    the deduped 3^m cell ranges into (a) the list of ``block_c``-aligned
+    corpus blocks the kernel must DMA and (b) a block-aligned candidate-id
+    operand whose rows OUTSIDE the deduped union carry −1.
+
+    The id masking makes block rounding exact: the kernel's keep
+    predicate drops the over-fetched rows, so the scored candidate set
+    equals ``tile_shared_candidates``'s union bit-for-bit, independent of
+    metric or ε.  Only int32 metadata is built here — no (budget, D)
+    candidate copy, which is the whole point.
+
+    Returns (block_table (T, nblk) i32, cand_ids (T, nblk·block_c) i32,
+    own_total (T, TQ) i32, tile_overflow (T,) bool).  Overflow covers
+    both failure modes: union rows > budget (the row budget, same as the
+    gather path) and touched blocks > nblk (block fragmentation past the
+    padded DMA schedule)."""
+    npts = index.n_points
+
+    def one(qids):
+        safe = jnp.clip(qids, 0, queries.shape[0] - 1)
+        coords = coords_all[safe]                                  # (TQ, m)
+        starts, counts = grid_lib.neighbor_ranges(index, coords)   # (TQ, R)
+        # Padding rows clip to point 0 — zero their ranges (same guard
+        # as _shared_tile_candidates).
+        counts = jnp.where((qids >= 0)[:, None], counts, 0)
+        own_total = jnp.sum(counts, axis=1).astype(jnp.int32)
+
+        flat_s = starts.reshape(-1)
+        flat_c = counts.reshape(-1)
+        # Dedup by range start (a start uniquely keys its cell): sort,
+        # mark repeats — identical to tile_shared_candidates' dedup.
+        key = jnp.where(flat_c > 0, flat_s, INT32_SENTINEL)
+        order = jnp.argsort(key)
+        key_s = key[order]
+        s_sorted = flat_s[order]
+        c_sorted = flat_c[order]
+        dup = jnp.concatenate([jnp.zeros((1,), bool), key_s[1:] == key_s[:-1]])
+        uniq = (key_s != INT32_SENTINEL) & ~dup
+        total = jnp.sum(jnp.where(uniq, c_sorted, 0))
+
+        # Touched corpus blocks by interval stabbing: +1 at each unique
+        # range's first block, −1 after its last, running-sum > 0.
+        first = jnp.clip(s_sorted // block_c, 0, n_cb - 1)
+        last = jnp.clip((s_sorted + c_sorted - 1) // block_c, 0, n_cb - 1)
+        marks = jnp.zeros((n_cb + 1,), jnp.int32)
+        marks = marks.at[jnp.where(uniq, first, n_cb)].add(
+            jnp.where(uniq, 1, 0))
+        marks = marks.at[jnp.where(uniq, last + 1, n_cb)].add(
+            jnp.where(uniq, -1, 0))
+        touched = jnp.cumsum(marks[:-1]) > 0                       # (n_cb,)
+        n_touched = jnp.sum(touched.astype(jnp.int32))
+        # Stable argsort of ~touched lists touched blocks first, in
+        # ascending block order; unused slots re-DMA block 0 with
+        # all-masked ids (the kernel skips their merge entirely).
+        blk = jnp.argsort(~touched, stable=True).astype(jnp.int32)[:nblk]
+        slot_ok = jnp.arange(nblk, dtype=jnp.int32) < n_touched
+        blk = jnp.where(slot_ok, blk, 0)
+
+        # Membership of each aligned row: cell slices are disjoint, so
+        # row p belongs to the union iff the last range with start ≤ p
+        # still covers it.  Duplicate ranges share identical (start,
+        # count) — searching the UNdeduped sorted ranges means the
+        # rightmost hit always carries the full extent.
+        pos = (blk[:, None] * block_c
+               + jnp.arange(block_c, dtype=jnp.int32)[None, :]).reshape(-1)
+        j = jnp.searchsorted(key_s, pos, side="right") - 1
+        js = jnp.clip(j, 0, key_s.shape[0] - 1)
+        member = (
+            (j >= 0)
+            & (key_s[js] != INT32_SENTINEL)
+            & (pos < s_sorted[js] + c_sorted[js])
+            & jnp.repeat(slot_ok, block_c)
+        )
+        cand = jnp.where(
+            member, index.order[jnp.clip(pos, 0, npts - 1)], -1
+        ).astype(jnp.int32)
+        overflow = (total > budget) | (n_touched > nblk)
+        return blk, cand, own_total, overflow
+
+    return jax.vmap(one)(tiles)
+
+
+def _rescore_fp32(points_r, qpts, ki, eps2, k, metric="l2"):
+    """Exact fp32 rescore of the low-precision pass's over-fetched
+    survivors: gather the (Q, k_run, n) candidate rows BY ID (k_run ≤
+    MAX_UNROLLED_K — tiny, nothing budget-shaped), recompute distances
+    at full precision, re-apply the exact ε² filter, and keep the k
+    best.  Returns (kd (Q, k) f32, ki (Q, k) i32, n_true (Q,) i32 —
+    survivors within the exact ε², the §V-E failure evidence)."""
+    safe = jnp.clip(ki, 0, points_r.shape[0] - 1)
+    cand = points_r[safe]                                  # (Q, k_run, n)
+    q = qpts.astype(jnp.float32)
+    if metric == "ip":
+        d = -jnp.einsum("qn,qcn->qc", q, cand)
+    else:
+        diff = q[:, None, :] - cand
+        d = jnp.sum(diff * diff, axis=-1)
+    keep = (ki >= 0) & (d <= eps2)
+    dm = jnp.where(keep, d, jnp.inf)
+    neg, sel = jax.lax.top_k(-dm, k)
+    kd = -neg
+    kid = jnp.where(jnp.isinf(kd), -1, jnp.take_along_axis(ki, sel, axis=1))
+    return kd, kid, jnp.sum(keep, axis=1).astype(jnp.int32)
+
+
+def _fused_prefetch_join(index: grid_lib.GridIndex, points_r, qids, eps2, k,
+                         budget, query_block, block_c, kernel_mode,
+                         queries_r=None, qcoords=None, exclude_self=True,
+                         metric="l2", distance_dtype="fp32"):
+    """The fused backend's scalar-prefetch path (DESIGN.md §10): ONE
+    kernel launch over every tile, with the per-tile DMA schedule from
+    ``_tile_block_tables`` riding as a scalar-prefetch operand so the
+    kernel pulls its own candidates from the HBM-resident cell-sorted
+    corpus.  No gathered (tiles, budget, D) candidate copy exists at any
+    layer.  Returns (kd, ki, found, failed, total), already scattered
+    back to original query order."""
+    queries = points_r if queries_r is None else queries_r
+    coords_all = index.point_coords if qcoords is None else qcoords
+    tiles, perm = grid_lib.group_queries_by_cell(
+        index, qids, query_block, qcoords
+    )
+
+    n_cb = max(1, -(-index.n_points // block_c))       # corpus blocks
+    c_pad = n_cb * block_c
+    nblk = min(
+        round_up(budget, block_c) // block_c + PREFETCH_BLOCK_SLACK, n_cb
+    )
+    blk, cand, own_total, tile_ovf = _tile_block_tables(
+        index, coords_all, queries, tiles, nblk, n_cb, budget, block_c
+    )
+
+    flat = tiles.reshape(-1)                           # (Qpad,) cell-sorted
+    safe = jnp.clip(flat, 0, queries.shape[0] - 1)
+    qpts = queries[safe]                               # queries read once
+    excl = _exclusion_ids(flat, exclude_self)
+    corpus = index.points_sorted                       # read in place
+    if c_pad != corpus.shape[0]:
+        corpus = jnp.zeros(
+            (c_pad, corpus.shape[1]), corpus.dtype
+        ).at[: corpus.shape[0]].set(corpus)
+
+    bf16 = distance_dtype == "bf16"
+    k_run = k + (BF16_OVERFETCH if bf16 else 0)
+    # ε slack is multiplicative on the runtime operand, so the recall
+    # ladder's eps_scale sweeps reuse this executable unchanged; abs()
+    # keeps the inflation an inflation for ip's negative thresholds.
+    eps_keep = eps2 + BF16_EPS_SLACK * jnp.abs(eps2) if bf16 else eps2
+    qk = qpts.astype(jnp.bfloat16) if bf16 else qpts
+    ck = corpus.astype(jnp.bfloat16) if bf16 else corpus
+
+    kd, ki, found = stream_ops.knn_stream_topk_prefetch(
+        qk, ck, blk, excl, cand, eps_keep,
+        k=k_run, block_q=query_block, block_c=block_c,
+        mode=kernel_mode, metric=metric,
+    )
+    if bf16:
+        kd, ki, n_true = _rescore_fp32(points_r, qpts, ki, eps2, k, metric)
+        # found counts at the inflated threshold (an over-estimate near
+        # the boundary); n_true < k proves the exact-ε survivors fall
+        # short, so the failure test stays conservative.
+        failed_rows = (found < k) | (n_true < k)
+    else:
+        failed_rows = found < k
+    failed = failed_rows | jnp.repeat(tile_ovf, query_block)
+    out = (kd, ki, found, failed, own_total.reshape(-1))
+    return tuple(jnp.zeros_like(x).at[perm].set(x) for x in out)
+
+
 def _tile_fn(index: grid_lib.GridIndex, points_r, eps2, k, budget, block_c,
              kernel_mode, queries_r=None, qcoords=None, exclude_self=True,
              metric="l2"):
@@ -280,6 +478,7 @@ def dense_join(
     backend: str = "ref",
     exclude_self: bool = True,
     metric: str = "l2",
+    distance_dtype: str = "fp32",
 ) -> DenseJoinResult:
     """Run GPU-JOIN over the given query ids (see ``dense_join_jit``).
 
@@ -291,7 +490,7 @@ def dense_join(
         index, points_r, query_ids, epsilon, queries_r,
         k=k, budget=budget, query_block=query_block, block_c=block_c,
         backend=resolve_backend(backend), exclude_self=exclude_self,
-        metric=metric,
+        metric=metric, distance_dtype=distance_dtype,
     )
 
 
@@ -299,7 +498,7 @@ def dense_join(
     jax.jit,
     static_argnames=(
         "k", "budget", "query_block", "block_c", "backend", "exclude_self",
-        "metric",
+        "metric", "distance_dtype",
     ),
 )
 def dense_join_jit(
@@ -318,9 +517,17 @@ def dense_join_jit(
     backend: str = "ref",
     exclude_self: bool = True,
     metric: str = "l2",
+    distance_dtype: str = "fp32",
 ) -> DenseJoinResult:
     """Run GPU-JOIN over the given query ids.  Results are aligned with
     ``query_ids`` (row i ↔ query_ids[i]); padding rows are failed.
+
+    ``distance_dtype`` (module constants, DESIGN.md §10) selects the
+    kernel accumulation dtype on the fused backend: ``"bf16"`` halves
+    candidate-DMA bytes and over-fetches, then an exact fp32 rescore of
+    the survivors restores exact distances and the exact ε² filter.
+    The ref/tiled backends always serve fp32 (more precision is never
+    wrong); the knob is part of every engine-cache key regardless.
 
     ``metric`` selects the kernel score space (``"l2"`` squared L2 —
     which cosine indexes reuse over unit rows — or ``"ip"`` the negated
@@ -350,6 +557,11 @@ def dense_join_jit(
             "\"auto\" first (use dense_join or resolve_backend)"
         )
     backend = resolve_backend(backend)
+    if distance_dtype not in DISTANCE_DTYPES:
+        raise ValueError(
+            f"distance_dtype must be one of {DISTANCE_DTYPES}, "
+            f"got {distance_dtype!r}"
+        )
     qpad = round_up(query_ids.shape[0], query_block)
     qids = jnp.full((qpad,), -1, jnp.int32).at[: query_ids.shape[0]].set(query_ids)
     eps2 = jnp.asarray(epsilon, jnp.float32) ** 2
@@ -358,6 +570,14 @@ def dense_join_jit(
     qcoords = (
         None if queries_r is None
         else grid_lib.compute_cell_coords(index, queries_r[:, : index.m])
+    )
+    # The fused backend's streaming kernel unrolls k (+ the bf16
+    # over-fetch) merge passes; past the ceiling the gathered tile path
+    # below takes over and its stream op reroutes to the ref oracle
+    # (ops logs the cliff once) — always at fp32.
+    fused_k_run = k + (BF16_OVERFETCH if distance_dtype == "bf16" else 0)
+    use_prefetch = (
+        backend == "fused" and fused_k_run <= stream_kernel.MAX_UNROLLED_K
     )
 
     if backend == "ref":
@@ -369,6 +589,12 @@ def dense_join_jit(
         )
         kd, ki, found, failed, total = jax.tree_util.tree_map(
             lambda x: x.reshape((qpad,) + x.shape[2:]), out
+        )
+    elif use_prefetch:
+        kd, ki, found, failed, total = _fused_prefetch_join(
+            index, points_r, qids, eps2, k, budget, query_block, block_c,
+            _stream_kernel_mode(), queries_r, qcoords, exclude_self,
+            metric, distance_dtype,
         )
     else:
         if backend == "fused":

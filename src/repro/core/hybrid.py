@@ -81,6 +81,16 @@ class HybridConfig:
     # overrides).  Part of the AOT engine-cache key; resolved ONCE per
     # session (dense_join.resolve_backend).
     backend: str = "auto"
+    # distance accumulation dtype (DESIGN.md §10): "fp32" exact; "bf16"
+    # computes kernel distance tiles from bf16-cast operands (half the
+    # candidate-DMA bytes, the MXU's native low-precision path),
+    # over-fetches k+8 slots, and restores exact fp32 distances by
+    # rescoring the survivors — ids stay identical to fp32 away from
+    # the ε² boundary, and boundary shortfalls fail conservatively into
+    # the sparse/brute reassignment.  Honored by the fused dense engine
+    # and the kernel-formulation sparse backends; ref/tiled paths and
+    # the brute lane always serve fp32.  Part of every engine-cache key.
+    distance_dtype: str = "fp32"  # fp32 | bf16
     # mutable index (DESIGN.md §6): auto-compact when the delta buffer
     # or the tombstone set exceeds this fraction of the base corpus
     # (0.0 compacts after every mutation; math.inf never auto-compacts).
@@ -112,11 +122,16 @@ class HybridConfig:
         assert 0.0 <= self.rho <= 1.0 and self.k >= 1 and self.m >= 1
         assert self.n_batches >= 1 and self.rebalance_sync_batches >= 0
         assert self.mutation_compact_frac >= 0.0
-        from repro.core.dense_join import BACKENDS
+        from repro.core.dense_join import BACKENDS, DISTANCE_DTYPES
         from repro.retrieval.metrics import validate_metric
 
         assert self.backend in BACKENDS, self.backend
         assert self.block_c >= 1
+        if self.distance_dtype not in DISTANCE_DTYPES:
+            raise ValueError(
+                f"distance_dtype must be one of {DISTANCE_DTYPES}, "
+                f"got {self.distance_dtype!r}"
+            )
         validate_metric(self.metric, "HybridConfig.metric")
         if not 0.0 < self.recall_target <= 1.0:
             raise ValueError(

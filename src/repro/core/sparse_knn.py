@@ -96,8 +96,14 @@ def _gathered_sq_l2(qpts, cand_pts, backend, metric="l2"):
     if backend == "ref":
         diff = qpts[:, None, :] - cand_pts
         return jnp.sum(diff * diff, axis=-1)
-    qq = jnp.sum(qpts * qpts, axis=-1)[:, None]               # (B, 1)
-    cc = jnp.sum(cand_pts * cand_pts, axis=-1)                # (B, C)
+    # Norm terms upcast first (bf16→f32 is exact) while the dot consumes
+    # the stored dtype, so under distance_dtype="bf16" every score is an
+    # exact-f32 function of the bf16-cast operands — same contract as
+    # the dense streaming kernel.
+    qf = qpts.astype(jnp.float32)
+    cf = cand_pts.astype(jnp.float32)
+    qq = jnp.sum(qf * qf, axis=-1)[:, None]                   # (B, 1)
+    cc = jnp.sum(cf * cf, axis=-1)                            # (B, C)
     qc = jax.lax.dot_general(
         qpts, cand_pts, (((1,), (2,)), ((0,), (0,))),
         preferred_element_type=jnp.float32,
@@ -123,7 +129,9 @@ def _streamed_topk(points_r, qpts, cand_ids, keep, k, metric="l2"):
     def step(carry, xs):
         run_d, run_i = carry
         ids_c, keep_c = xs                                     # (B, chunk)
-        pts_c = points_r[ids_c]                                # (B, chunk, n)
+        # The chunk inherits the query dtype: under the bf16 trade the
+        # caller passes bf16 queries and the gathered rows cast to match.
+        pts_c = points_r[ids_c].astype(qpts.dtype)             # (B, chunk, n)
         d2 = _gathered_sq_l2(qpts, pts_c, "interpret", metric)  # batched MXU
         d2m = jnp.where(keep_c, d2, jnp.inf)
         idm = jnp.where(keep_c, ids_c, -1)
@@ -140,7 +148,8 @@ def _streamed_topk(points_r, qpts, cand_ids, keep, k, metric="l2"):
 
 
 def _query_level(pyr: Pyramid, points_r, queries, orders, starts, counts,
-                 qids, excl, safe, sel, k, budget, backend, metric="l2"):
+                 qids, excl, safe, sel, k, budget, backend, metric="l2",
+                 distance_dtype="fp32"):
     """Gather + distance + top-K at per-query pyramid level ``sel`` (B,).
 
     ``orders`` (L, |D|) and ``starts``/``counts`` (L, B, R) are hoisted by
@@ -164,16 +173,30 @@ def _query_level(pyr: Pyramid, points_r, queries, orders, starts, counts,
     qpts = queries[safe]
     keep = valid & (cand_ids != excl[:, None])
 
+    # Low-precision scoring pass (DESIGN.md §10): score in bf16 at
+    # k + overfetch, then rescore the survivors in exact fp32 — the
+    # certificate below is evaluated on exact distances.  The ref
+    # backend stays the fp32 oracle.
+    lowp = distance_dtype == "bf16" and backend != "ref"
+    k_run = min(k + dense_lib.BF16_OVERFETCH, budget) if lowp else k
+    qk = qpts.astype(jnp.bfloat16) if lowp else qpts
+
     if backend == "fused":
-        kd, ki = _streamed_topk(points_r, qpts, cand_ids, keep, k, metric)
+        kd, ki = _streamed_topk(points_r, qk, cand_ids, keep, k_run, metric)
     else:
         cand_pts = points_r[cand_ids]                         # (B, budget, n)
-        d2 = _gathered_sq_l2(qpts, cand_pts, backend, metric)
+        if lowp:
+            cand_pts = cand_pts.astype(jnp.bfloat16)
+        d2 = _gathered_sq_l2(qk, cand_pts, backend, metric)
         d2m = jnp.where(keep, d2, jnp.inf)
-        neg, selk = jax.lax.top_k(-d2m, k)
+        neg, selk = jax.lax.top_k(-d2m, k_run)
         kd = -neg
         ki = jnp.where(
             jnp.isinf(kd), -1, jnp.take_along_axis(cand_ids, selk, axis=1)
+        )
+    if lowp:
+        kd, ki, _ = dense_lib._rescore_fp32(
+            points_r, qpts, ki, jnp.inf, k, metric
         )
 
     found = jnp.sum(jnp.isfinite(kd), axis=1)
@@ -192,7 +215,8 @@ def _query_level(pyr: Pyramid, points_r, queries, orders, starts, counts,
 
 
 def _block_fn(pyr: Pyramid, points_r, k, budget, sel_factor, backend,
-              queries_r=None, exclude_self=True, metric="l2"):
+              queries_r=None, exclude_self=True, metric="l2",
+              distance_dtype="fp32"):
     """Two-pass adaptive level search (the TPU kd-tree descent analogue).
 
     Pass 1 picks the finest level whose *projected* 3^m-neighborhood holds
@@ -248,7 +272,7 @@ def _block_fn(pyr: Pyramid, points_r, k, budget, sel_factor, backend,
 
         kd1, ki1, cert1, _, tot1 = _query_level(
             pyr, points_r, queries, orders, starts, counts, qids, excl,
-            safe, sel1, k, budget, backend, metric
+            safe, sel1, k, budget, backend, metric, distance_dtype
         )
 
         # Escalation level: first ℓ with cert_r(ℓ)² ≥ pass-1 kth (∞ → coarsest).
@@ -258,7 +282,7 @@ def _block_fn(pyr: Pyramid, points_r, k, budget, sel_factor, backend,
 
         kd2, ki2, cert2, _, tot2 = _query_level(
             pyr, points_r, queries, orders, starts, counts, qids, excl,
-            safe, sel2, k, budget, backend, metric
+            safe, sel2, k, budget, backend, metric, distance_dtype
         )
 
         use1 = cert1[:, None]
@@ -284,6 +308,7 @@ def sparse_knn(
     backend: str = "ref",
     exclude_self: bool = True,
     metric: str = "l2",
+    distance_dtype: str = "fp32",
 ) -> SparseKNNResult:
     """Resolving wrapper (see ``dense_join.dense_join``): collapses
     ``backend`` outside the jit boundary so the executable cache is
@@ -292,7 +317,7 @@ def sparse_knn(
         pyr, points_r, query_ids, queries_r,
         k=k, budget=budget, query_block=query_block, sel_factor=sel_factor,
         backend=dense_lib.resolve_backend(backend), exclude_self=exclude_self,
-        metric=metric,
+        metric=metric, distance_dtype=distance_dtype,
     )
 
 
@@ -300,7 +325,7 @@ def sparse_knn(
     jax.jit,
     static_argnames=(
         "k", "budget", "query_block", "sel_factor", "backend", "exclude_self",
-        "metric",
+        "metric", "distance_dtype",
     ),
 )
 def sparse_knn_jit(
@@ -317,6 +342,7 @@ def sparse_knn_jit(
     backend: str = "ref",
     exclude_self: bool = True,
     metric: str = "l2",
+    distance_dtype: str = "fp32",
 ) -> SparseKNNResult:
     if backend == "auto":
         # Same staleness guard as dense_join_jit: "auto" in the jit
@@ -326,12 +352,17 @@ def sparse_knn_jit(
             "\"auto\" first (use sparse_knn or resolve_backend)"
         )
     backend = dense_lib.resolve_backend(backend)
+    if distance_dtype not in dense_lib.DISTANCE_DTYPES:
+        raise ValueError(
+            f"distance_dtype must be one of {dense_lib.DISTANCE_DTYPES}, "
+            f"got {distance_dtype!r}"
+        )
     qpad = round_up(query_ids.shape[0], query_block)
     qids = jnp.full((qpad,), -1, jnp.int32).at[: query_ids.shape[0]].set(query_ids)
     blocks = qids.reshape(-1, query_block)
     out = jax.lax.map(
         _block_fn(pyr, points_r, k, budget, sel_factor, backend,
-                  queries_r, exclude_self, metric),
+                  queries_r, exclude_self, metric, distance_dtype),
         blocks,
     )
     kd, ki, cert, lvl, total = jax.tree_util.tree_map(

@@ -86,10 +86,19 @@ def _stream_kernel(
         run_i[...] = jnp.full(run_i.shape, -1, jnp.int32)
         run_f[...] = jnp.zeros(run_f.shape, jnp.int32)
 
-    q = q_ref[...].astype(jnp.float32)                             # (TQ, D)
-    c = c_ref[...].astype(jnp.float32)                             # (TC, D)
+    # The dot consumes the operands at their STORED dtype (f32, or bf16
+    # under distance_dtype="bf16" — half the candidate-DMA bytes and the
+    # MXU's native low-precision path) while accumulating in f32.  The
+    # norm terms upcast first: bf16→f32 is exact, so every distance is
+    # an exact-f32 function of the (possibly bf16-cast) inputs and the
+    # fp32 path is bit-identical to the pre-bf16 kernel.
+    q_raw = q_ref[...]                                             # (TQ, D)
+    c_raw = c_ref[...]                                             # (TC, D)
+    q = q_raw.astype(jnp.float32)
+    c = c_raw.astype(jnp.float32)
     qc = jax.lax.dot_general(
-        q, c, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        q_raw, c_raw, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
     )                                                              # MXU
     if metric == "ip":
         # Negated inner product: the matmul IS the score — no norm
@@ -124,6 +133,110 @@ def _stream_kernel(
         outd_ref[...] = vals
         outi_ref[...] = jnp.where(jnp.isinf(vals), -1, run_i[...])
         outf_ref[...] = run_f[...]
+
+
+def _prefetch_kernel(blk_ref, *refs, k: int, metric: str):
+    """Scalar-prefetch wrapper: the block-table ref arrives first (Pallas
+    passes scalar-prefetch operands ahead of the tensor refs) and is
+    consumed ONLY by the BlockSpec index maps — the compute body is the
+    unchanged streaming kernel."""
+    del blk_ref
+    _stream_kernel(*refs, k=k, metric=metric)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "block_q", "block_c", "metric", "interpret")
+)
+def knn_stream_topk_prefetch(
+    queries: jnp.ndarray,      # (T·block_q, D) cell-sorted query rows
+    corpus: jnp.ndarray,       # (C, D) HBM-resident cell-sorted corpus,
+                               #        C % block_c == 0 (read in place)
+    block_table: jnp.ndarray,  # (T, nblk) i32 — corpus block DMA'd at (i, j)
+    query_ids: jnp.ndarray,    # (T·block_q,) i32 exclusion ids (−2 ⇒ none)
+    cand_ids: jnp.ndarray,     # (T, nblk·block_c) i32 aligned candidate ids;
+                               #        −1 ⇒ row not in the tile's union
+    eps2: jnp.ndarray,         # () f32 — traced ε² (runtime operand)
+    *,
+    k: int,
+    block_q: int = 128,
+    block_c: int = 128,
+    metric: str = "l2",
+    interpret: bool = False,
+):
+    """Scalar-prefetch streaming top-K: the kernel pulls its own candidates.
+
+    One ``pallas_call`` over grid (tiles, candidate steps).  The int32
+    ``block_table`` rides as a scalar-prefetch operand
+    (``PrefetchScalarGridSpec``), so the corpus BlockSpec's index map reads
+    ``block_table[i, j]`` and the pipeline DMAs exactly that ``block_c``-row
+    corpus block out of HBM for step (i, j) — no gathered per-tile candidate
+    copy ever exists, the corpus is read in place, and the per-tile working
+    set is one sub-block regardless of the candidate budget.
+
+    Block-aligned DMA over-fetches rows outside the tile's deduped cell
+    ranges; ``cand_ids`` marks those rows −1, which the kernel's existing
+    keep-predicate masks — the scored candidate set is EXACTLY the union
+    ``grid.tile_shared_candidates`` would have gathered, for any metric.
+
+    Returns (dists (T·block_q, k) f32 ascending inf-padded, ids i32
+    −1-padded, found (T·block_q,) i32).
+    """
+    if k > MAX_UNROLLED_K:
+        raise ValueError(
+            f"knn_stream_topk_prefetch unrolls k merge passes; k={k} "
+            f"exceeds MAX_UNROLLED_K={MAX_UNROLLED_K}"
+        )
+    q_n, dim = queries.shape
+    c_n, _ = corpus.shape
+    n_tiles, nblk = block_table.shape
+    assert q_n == n_tiles * block_q, (queries.shape, block_table.shape, block_q)
+    assert c_n % block_c == 0 and c_n >= block_c, (corpus.shape, block_c)
+    assert cand_ids.shape == (n_tiles, nblk * block_c), cand_ids.shape
+
+    kernel = functools.partial(_prefetch_kernel, k=k, metric=metric)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_tiles, nblk),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j, blk: (0, 0)),
+            pl.BlockSpec((block_q, dim), lambda i, j, blk: (i, 0)),
+            # The data-driven DMA: which corpus block step (i, j) streams
+            # is a runtime value, not a grid coordinate.
+            pl.BlockSpec((block_c, dim), lambda i, j, blk: (blk[i, j], 0)),
+            pl.BlockSpec((block_q, 1), lambda i, j, blk: (i, 0)),
+            pl.BlockSpec((1, block_c), lambda i, j, blk: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q, k), lambda i, j, blk: (i, 0)),
+            pl.BlockSpec((block_q, k), lambda i, j, blk: (i, 0)),
+            pl.BlockSpec((block_q, 1), lambda i, j, blk: (i, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, k), jnp.float32),    # running top-K dists
+            pltpu.VMEM((block_q, k), jnp.int32),      # running top-K ids
+            pltpu.VMEM((block_q, 1), jnp.int32),      # running found count
+        ],
+    )
+    outd, outi, outf = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((q_n, k), jnp.float32),
+            jax.ShapeDtypeStruct((q_n, k), jnp.int32),
+            jax.ShapeDtypeStruct((q_n, 1), jnp.int32),
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(
+        block_table.astype(jnp.int32),
+        jnp.reshape(eps2, (1, 1)).astype(jnp.float32),
+        queries, corpus,
+        query_ids.astype(jnp.int32)[:, None],
+        cand_ids.astype(jnp.int32),
+    )
+    return outd, outi, outf[:, 0]
 
 
 @functools.partial(

@@ -8,6 +8,7 @@ so the kernel outputs ARE the final (Q, k) results.
 from __future__ import annotations
 
 import functools
+import logging
 
 import jax
 import jax.numpy as jnp
@@ -15,6 +16,28 @@ import jax.numpy as jnp
 from repro.utils import round_up
 from repro.kernels.knn_stream import kernel as _kernel
 from repro.kernels.knn_stream import ref as _ref
+
+_log = logging.getLogger(__name__)
+
+# Process-wide once-flag for the oversized-k fallback notice.  The ref
+# oracle is a silent asymptotic cliff (materialize-then-sort instead of
+# the streaming kernel), so the reroute is worth one loud line — but
+# only one: the fallback fires per jit trace and a k sweep would
+# otherwise spam a line per shape.
+_oversized_k_warned = False
+
+
+def _warn_oversized_k(k: int) -> None:
+    global _oversized_k_warned
+    if not _oversized_k_warned:
+        _oversized_k_warned = True
+        _log.warning(
+            "knn_stream: k=%d exceeds MAX_UNROLLED_K=%d — routing to the "
+            "materialize-then-sort ref oracle (exact, but the streaming "
+            "kernel's memory ceiling no longer applies; further oversized-k "
+            "traces fall back silently)",
+            k, _kernel.MAX_UNROLLED_K,
+        )
 
 
 def _use_pallas(mode: str) -> bool:
@@ -46,8 +69,11 @@ def knn_stream_topk(
 
     Oversized K falls back to the ref oracle, mirroring
     ``knn_topk.ops`` (the unrolled merge network stops paying for
-    itself past ``MAX_UNROLLED_K``)."""
+    itself past ``MAX_UNROLLED_K``); the first such reroute per process
+    logs a warning so the cliff is visible."""
     if not _use_pallas(mode) or k > _kernel.MAX_UNROLLED_K:
+        if _use_pallas(mode):
+            _warn_oversized_k(k)
         return _ref.knn_stream_topk_ref(
             queries, candidates, query_ids, cand_ids, eps2, k=k, metric=metric
         )
@@ -66,3 +92,39 @@ def knn_stream_topk(
         metric=metric, interpret=(mode == "interpret"),
     )
     return kd[:q_n], ki[:q_n], found[:q_n]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "block_q", "block_c", "mode", "metric")
+)
+def knn_stream_topk_prefetch(
+    queries: jnp.ndarray,      # (T·block_q, D)
+    corpus: jnp.ndarray,       # (C, D), C % block_c == 0
+    block_table: jnp.ndarray,  # (T, nblk) i32 — scalar-prefetch DMA schedule
+    query_ids: jnp.ndarray,    # (T·block_q,) i32 exclusion ids
+    cand_ids: jnp.ndarray,     # (T, nblk·block_c) i32, −1 = masked row
+    eps2: jnp.ndarray,         # () f32
+    *,
+    k: int,
+    block_q: int = 128,
+    block_c: int = 128,
+    mode: str = "auto",
+    metric: str = "l2",
+):
+    """Dispatch for the scalar-prefetch streaming kernel (operands are
+    pre-padded by the dense engine — the block table fixes the shapes).
+
+    ``"ref"`` mode materializes the same block-aligned candidate operand
+    by an explicit gather (the oracle); oversized k raises — callers
+    route oversized k through the gathered path instead, where the
+    budget-shaped operand the oracle needs already exists."""
+    if not _use_pallas(mode):
+        return _ref.knn_stream_topk_prefetch_ref(
+            queries, corpus, block_table, query_ids, cand_ids, eps2,
+            k=k, block_q=block_q, block_c=block_c, metric=metric,
+        )
+    return _kernel.knn_stream_topk_prefetch(
+        queries, corpus, block_table, query_ids, cand_ids, eps2,
+        k=k, block_q=block_q, block_c=block_c, metric=metric,
+        interpret=(mode == "interpret"),
+    )

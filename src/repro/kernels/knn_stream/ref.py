@@ -48,3 +48,36 @@ def knn_stream_topk_ref(
     ki = jnp.where(jnp.isinf(kd), -1, cand_ids[sel])
     found = jnp.sum(keep, axis=1).astype(jnp.int32)
     return kd, ki, found
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_q", "block_c", "metric"))
+def knn_stream_topk_prefetch_ref(
+    queries: jnp.ndarray,      # (T·block_q, D)
+    corpus: jnp.ndarray,       # (C, D), C % block_c == 0
+    block_table: jnp.ndarray,  # (T, nblk) i32
+    query_ids: jnp.ndarray,    # (T·block_q,) i32 exclusion ids
+    cand_ids: jnp.ndarray,     # (T, nblk·block_c) i32, −1 = masked row
+    eps2: jnp.ndarray,         # () f32
+    *,
+    k: int,
+    block_q: int = 128,
+    block_c: int = 128,
+    metric: str = "l2",
+):
+    """Oracle for the scalar-prefetch kernel: materialize each tile's
+    block-aligned candidate operand by an explicit gather — the exact
+    data movement the prefetch kernel's index maps perform via DMA — and
+    run the materialize-then-sort oracle per tile."""
+    n_tiles, nblk = block_table.shape
+    dim = queries.shape[1]
+    q_t = queries.astype(jnp.float32).reshape(n_tiles, block_q, dim)
+    qid_t = query_ids.reshape(n_tiles, block_q)
+
+    def one(args):
+        q, qid, blk, cid = args
+        rows = blk[:, None] * block_c + jnp.arange(block_c, dtype=jnp.int32)
+        cand = corpus[rows.reshape(-1)].astype(jnp.float32)    # (nblk·bc, D)
+        return knn_stream_topk_ref(q, cand, qid, cid, eps2, k=k, metric=metric)
+
+    kd, ki, found = jax.lax.map(one, (q_t, qid_t, block_table, cand_ids))
+    return (kd.reshape(-1, k), ki.reshape(-1, k), found.reshape(-1))

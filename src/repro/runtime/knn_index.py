@@ -666,6 +666,7 @@ class KNNIndex:
                 k=k, budget=cfg.dense_budget, query_block=cfg.query_block,
                 block_c=cfg.block_c, backend=self.backend,
                 exclude_self=exclude_self, metric=self._grid_metric(gen),
+                distance_dtype=cfg.distance_dtype,
             )
             ex = self._engine("dense", dense_lib.dense_join_jit, args, kwargs)
             t0 = time.perf_counter()
@@ -695,6 +696,7 @@ class KNNIndex:
                 query_block=cfg.query_block, sel_factor=cfg.sel_factor,
                 backend=self.backend, exclude_self=exclude_self,
                 metric=self._grid_metric(gen),
+                distance_dtype=cfg.distance_dtype,
             )
             ex = self._engine("sparse", sparse_lib.sparse_knn_jit, args, kwargs)
             raw = ex(*args)     # async dispatch: returns un-blocked arrays

@@ -1,0 +1,218 @@
+"""distance_dtype (ISSUE 10): bf16 distance tiles + fp32 rescoring.
+
+The contract under test — ``distance_dtype="bf16"`` streams distances
+as exact-f32 functions of bf16-cast operands, over-fetches
+``BF16_OVERFETCH`` extra survivors, then rescores them in exact fp32
+and re-applies the exact ε² cutoff.  On the parity grid the returned
+ids must be BIT-IDENTICAL to the fp32 engine (bounded-error acceptance
+from ISSUE 10); explicit ε²-boundary and tie constructions pin the
+edge cases; ref/tiled backends ignore the knob (more precision is
+never wrong); and the knob is part of the engine-cache key so fp32 and
+bf16 executables never alias."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_mixture
+from oracle import oracle_knn
+from test_tiled_backend import _dense_fixture, _ids_match_mod_ties
+from repro.core import HybridConfig
+from repro.core import dense_join as dense_lib
+from repro.core import grid as grid_lib
+from repro.core import sparse_knn as sparse_lib
+from repro.runtime import KNNIndex
+
+
+# ---------------------------------------------------------------------------
+# dense fused engine: bf16 ids ≡ fp32 ids on the parity grid
+# ---------------------------------------------------------------------------
+
+PARITY_GRID = [
+    # (k, budget, block_c, m) — same axes as the fused/tiled suites
+    (1, 1024, 128, 4),
+    (5, 1024, 64, 4),
+    (4, 4096, 128, 2),
+    (3, 2048, 256, 6),
+]
+
+
+@pytest.mark.parametrize("k,budget,block_c,m", PARITY_GRID)
+def test_dense_fused_bf16_ids_bit_identical(k, budget, block_c, m):
+    pts_r, idx, qids, eps = _dense_fixture(m=m)
+    fp = dense_lib.dense_join(
+        idx, pts_r, qids, eps, k=k, budget=budget, block_c=block_c,
+        backend="fused")
+    bf = dense_lib.dense_join(
+        idx, pts_r, qids, eps, k=k, budget=budget, block_c=block_c,
+        backend="fused", distance_dtype="bf16")
+    ok = ~(np.asarray(fp.failed) | np.asarray(bf.failed))
+    assert ok.mean() > 0.5, "bf16 over-fetch mass-failed the dense engine"
+    np.testing.assert_array_equal(
+        np.asarray(bf.ids)[ok], np.asarray(fp.ids)[ok])
+    # rescored distances are exact fp32; the kernel formulation agrees
+    # to normal float tolerance
+    np.testing.assert_allclose(
+        np.asarray(bf.dists)[ok], np.asarray(fp.dists)[ok],
+        rtol=1e-4, atol=1e-5)
+    # integer workload accounting never depends on the distance dtype
+    np.testing.assert_array_equal(
+        np.asarray(bf.total_candidates), np.asarray(fp.total_candidates))
+
+
+def test_dense_bf16_eps_boundary_exact():
+    """ε²-boundary membership is decided by the exact fp32 rescore, not
+    the inflated bf16 keep-threshold: on a lattice whose neighbor
+    distances are EXACTLY ε (all quantities exactly representable in
+    fp32 and in bf16), found counts match the ref oracle bitwise and
+    every returned pair respects d² ≤ ε²."""
+    eps = 0.25
+    n, dim, m = 64, 6, 2
+    pts = np.zeros((n, dim), np.float32)
+    pts[:, 0] = eps * np.arange(n)           # neighbors exactly at ε
+    pts[:, 1] = 1e-3 * np.arange(n)          # break REORDER degeneracy
+    pts_r = grid_lib.reorder_by_variance(jnp.asarray(pts))[0]
+    idx = grid_lib.build_grid(pts_r, jnp.float32(eps), m)
+    qids = jnp.arange(n, dtype=jnp.int32)
+    kw = dict(k=3, budget=512, backend="fused")
+    ref = dense_lib.dense_join(idx, pts_r, qids, jnp.float32(eps),
+                               backend="ref", k=3, budget=512)
+    bf = dense_lib.dense_join(idx, pts_r, qids, jnp.float32(eps),
+                              distance_dtype="bf16", **kw)
+    ok = ~(np.asarray(ref.failed) | np.asarray(bf.failed))
+    np.testing.assert_array_equal(
+        np.asarray(bf.found)[ok], np.asarray(ref.found)[ok])
+    # every kept pair is truly inside the exact ε² ball (float64 check)
+    p64 = np.asarray(pts_r, np.float64)
+    ids = np.asarray(bf.ids)
+    kept = ids >= 0
+    d2 = ((p64[np.arange(n)[:, None]] - p64[np.clip(ids, 0, n - 1)]) ** 2
+          ).sum(-1)
+    assert (d2[kept] <= float(eps) ** 2 + 1e-9).all()
+
+
+def test_dense_bf16_exact_tie_ids():
+    """Exact distance ties (left/right lattice neighbors) may permute
+    between the kernel top-K and the fp32 rescore top-K — ids must agree
+    modulo realized-distance ties, never in distance."""
+    eps = 0.25
+    n, dim = 48, 4
+    pts = np.zeros((n, dim), np.float32)
+    pts[:, 0] = eps * np.arange(n)           # d(i, i±1) tie exactly
+    pts[:, 1] = 1e-3 * np.arange(n)
+    pts_r = grid_lib.reorder_by_variance(jnp.asarray(pts))[0]
+    idx = grid_lib.build_grid(pts_r, jnp.float32(2 * eps), 2)
+    qids = jnp.arange(n, dtype=jnp.int32)
+    kw = dict(k=2, budget=512, backend="fused")
+    fp = dense_lib.dense_join(idx, pts_r, qids, jnp.float32(2 * eps), **kw)
+    bf = dense_lib.dense_join(idx, pts_r, qids, jnp.float32(2 * eps),
+                              distance_dtype="bf16", **kw)
+    ok = ~(np.asarray(fp.failed) | np.asarray(bf.failed))
+    # the fp32 kernel's ‖q‖²+‖c‖²−2q·c formulation carries ~1e-5
+    # cancellation at the far lattice end; the rescore is broadcast-
+    # subtract exact — compare at the suite-standard tolerance
+    np.testing.assert_allclose(
+        np.asarray(bf.dists)[ok], np.asarray(fp.dists)[ok],
+        rtol=1e-4, atol=1e-4)
+    _ids_match_mod_ties(pts_r, np.asarray(bf.ids), np.asarray(fp.ids), ok)
+
+
+@pytest.mark.parametrize("backend", ["ref", "interpret"])
+def test_non_fused_backends_ignore_distance_dtype(backend):
+    """ref/tiled run fp32 regardless — the knob is a documented no-op
+    there (extra precision is never wrong), so results are bitwise
+    identical to the default."""
+    pts_r, idx, qids, eps = _dense_fixture(m=4)
+    a = dense_lib.dense_join(idx, pts_r, qids, eps, k=3, budget=1024,
+                             backend=backend)
+    b = dense_lib.dense_join(idx, pts_r, qids, eps, k=3, budget=1024,
+                             backend=backend, distance_dtype="bf16")
+    for fa, fb in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(fa), np.asarray(fb))
+
+
+# ---------------------------------------------------------------------------
+# sparse engine: bf16 parity + certification on exact values
+# ---------------------------------------------------------------------------
+
+def test_sparse_bf16_parity():
+    pts = make_mixture(200, 150, dim=8, seed=7)
+    pts_r = grid_lib.reorder_by_variance(jnp.asarray(pts))[0]
+    pyr = sparse_lib.build_pyramid(pts_r, jnp.float32(0.2), 4)
+    qids = jnp.arange(len(pts), dtype=jnp.int32)
+    fp = sparse_lib.sparse_knn(
+        pyr, pts_r, qids, k=4, budget=512, backend="fused")
+    bf = sparse_lib.sparse_knn(
+        pyr, pts_r, qids, k=4, budget=512, backend="fused",
+        distance_dtype="bf16")
+    # certification happens AFTER the fp32 rescore, on exact values —
+    # the certificate must not notice the dtype
+    np.testing.assert_array_equal(
+        np.asarray(bf.certified), np.asarray(fp.certified))
+    cert = np.asarray(fp.certified)
+    np.testing.assert_array_equal(
+        np.asarray(bf.ids)[cert], np.asarray(fp.ids)[cert])
+    np.testing.assert_allclose(
+        np.asarray(bf.dists)[cert], np.asarray(fp.dists)[cert],
+        rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# config plumbing: validation, end-to-end exactness, engine-cache keying
+# ---------------------------------------------------------------------------
+
+def test_distance_dtype_validation():
+    with pytest.raises(ValueError, match="distance_dtype"):
+        HybridConfig(k=3, distance_dtype="fp16")
+    pts_r, idx, qids, eps = _dense_fixture(m=4)
+    with pytest.raises(ValueError, match="distance_dtype"):
+        dense_lib.dense_join(idx, pts_r, qids, eps, k=3, budget=1024,
+                             backend="fused", distance_dtype="fp64")
+    pyr = sparse_lib.build_pyramid(pts_r, eps, 3)
+    with pytest.raises(ValueError, match="distance_dtype"):
+        sparse_lib.sparse_knn(pyr, pts_r, qids, k=3, backend="ref",
+                              distance_dtype="int8")
+
+
+def test_index_query_bf16_matches_oracle():
+    """End-to-end: a bf16 index answers foreign queries exactly — the
+    over-fetch + rescore keeps non-failed rows exact and the hybrid
+    failure ladder (conservative under bf16) routes the rest to the
+    fp32 brute lane."""
+    db = make_mixture(420, 180, dim=6, seed=11)
+    r = np.random.default_rng(12)
+    queries = np.concatenate([
+        (0.05 * r.normal(size=(90, 6))).astype(np.float32),
+        r.uniform(3.0, 6.0, (45, 6)).astype(np.float32),
+    ])
+    cfg = HybridConfig(k=5, m=4, gamma=0.3, rho=0.15, n_batches=2,
+                       backend="fused", online_rebalance=False,
+                       distance_dtype="bf16")
+    index = KNNIndex.build(db, cfg)
+    res = index.query(queries)
+    want_d, _ = oracle_knn(db, queries, k=5)
+    np.testing.assert_allclose(np.sort(res.dists, 1), want_d, atol=1e-4)
+    got_d = np.linalg.norm(
+        queries[:, None, :].astype(np.float64) - db[res.ids], axis=-1)
+    np.testing.assert_allclose(np.sort(got_d, 1), want_d, atol=1e-4)
+
+
+def test_distance_dtype_is_an_engine_cache_key():
+    """Two indexes with identical shapes/static args but different
+    distance_dtype must NOT share executables: the bf16 index records
+    its own dense-engine cache miss even though the fp32 index already
+    populated the process-global cache for these shapes."""
+    db = make_mixture(200, 100, dim=6, seed=3)
+    queries = (0.05 * np.random.default_rng(4)
+               .normal(size=(64, 6))).astype(np.float32)
+    cfg = HybridConfig(k=3, m=4, gamma=0.3, rho=0.1, n_batches=1,
+                       backend="fused", online_rebalance=False)
+    a = KNNIndex.build(db, cfg)
+    a.query(queries)
+    assert a.compile_counts.get("dense", 0) >= 1
+    b = KNNIndex.build(db, dataclasses.replace(cfg, distance_dtype="bf16"))
+    b.query(queries)
+    assert b.compile_counts.get("dense", 0) >= 1, (
+        "bf16 query hit the fp32 executable — distance_dtype is missing "
+        "from the engine-cache key")

@@ -62,6 +62,34 @@ def test_stream_kernel_excludes_self_pairs():
     assert not np.any(np.asarray(ki) == np.arange(150)[:, None])
 
 
+def test_prefetch_kernel_matches_oracle():
+    """Scalar-prefetch kernel ≡ the explicit-gather oracle on an
+    arbitrary DMA schedule: random block tables (repeats included) and
+    masked aligned ids must land on identical results — the data-driven
+    corpus BlockSpec is the only thing under test."""
+    r = np.random.default_rng(11)
+    block_q, block_c, n_tiles, nblk, n_cb, k = 64, 128, 3, 4, 6, 5
+    corpus = jnp.asarray(r.normal(size=(n_cb * block_c, 6)), jnp.float32)
+    queries = jnp.asarray(r.normal(size=(n_tiles * block_q, 6)), jnp.float32)
+    blk = jnp.asarray(r.integers(0, n_cb, size=(n_tiles, nblk)), jnp.int32)
+    rows = np.asarray(blk)[:, :, None] * block_c + np.arange(block_c)
+    cand = rows.reshape(n_tiles, -1).astype(np.int32)
+    cand[r.random(cand.shape) < 0.3] = -1                   # masked rows
+    cand = jnp.asarray(cand)
+    qid = jnp.arange(n_tiles * block_q, dtype=jnp.int32)
+    eps2 = jnp.float32(4.0)
+    kd0, ki0, f0 = stream_ops.knn_stream_topk_prefetch(
+        queries, corpus, blk, qid, cand, eps2,
+        k=k, block_q=block_q, block_c=block_c, mode="ref")
+    kd1, ki1, f1 = stream_ops.knn_stream_topk_prefetch(
+        queries, corpus, blk, qid, cand, eps2,
+        k=k, block_q=block_q, block_c=block_c, mode="interpret")
+    np.testing.assert_array_equal(np.asarray(f0), np.asarray(f1))
+    np.testing.assert_allclose(
+        np.asarray(kd0), np.asarray(kd1), rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(ki0), np.asarray(ki1))
+
+
 def test_stream_kernel_oversized_k_falls_back_to_ref():
     """k above MAX_UNROLLED_K: the padded kernel refuses loudly, the ops
     wrapper silently takes the ref oracle (mirrors knn_topk policy)."""
@@ -82,6 +110,66 @@ def test_stream_kernel_oversized_k_falls_back_to_ref():
         q, c, qid, cid, jnp.float32(1e9), k=big_k)
     np.testing.assert_allclose(np.asarray(kd), np.asarray(kd0))
     np.testing.assert_array_equal(np.asarray(f), np.asarray(f0))
+
+
+def test_stream_kernel_max_unrolled_k_boundary():
+    """The k = MAX_UNROLLED_K vs MAX_UNROLLED_K+1 cliff: the last
+    kernel-served k still runs the pallas path, one past it reroutes to
+    the ref oracle — both exactly, and the jaxpr proves which engine
+    served each side."""
+    r = np.random.default_rng(9)
+    q = jnp.asarray(r.normal(size=(40, 4)), jnp.float32)
+    c = jnp.asarray(r.normal(size=(80, 4)), jnp.float32)
+    qid = jnp.arange(40, dtype=jnp.int32)
+    cid = jnp.arange(80, dtype=jnp.int32)
+    eps2 = jnp.float32(1e9)
+    kmax = stream_kernel.MAX_UNROLLED_K
+
+    def jaxpr_for(k):
+        return str(jax.make_jaxpr(
+            lambda a, b: stream_ops.knn_stream_topk(
+                a, b, qid, cid, eps2, k=k, mode="interpret"))(q, c))
+
+    assert "pallas_call" in jaxpr_for(kmax)
+    assert "pallas_call" not in jaxpr_for(kmax + 1)
+    for k in (kmax, kmax + 1):
+        kd, ki, f = stream_ops.knn_stream_topk(
+            q, c, qid, cid, eps2, k=k, mode="interpret")
+        kd0, ki0, f0 = stream_ref.knn_stream_topk_ref(
+            q, c, qid, cid, eps2, k=k)
+        np.testing.assert_allclose(
+            np.asarray(kd), np.asarray(kd0), rtol=1e-5, atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(ki), np.asarray(ki0))
+        np.testing.assert_array_equal(np.asarray(f), np.asarray(f0))
+
+
+def test_oversized_k_fallback_logs_once(monkeypatch, caplog):
+    """The oversized-k reroute to the ref oracle logs exactly one
+    warning per process — visible the first time, silent on every later
+    trace (ISSUE 10 satellite: the cliff used to be silent)."""
+    monkeypatch.setattr(stream_ops, "_oversized_k_warned", False)
+    r = np.random.default_rng(4)
+    qid = jnp.arange(16, dtype=jnp.int32)
+    big_k = stream_kernel.MAX_UNROLLED_K + 1
+    with caplog.at_level("WARNING", logger="repro.kernels.knn_stream.ops"):
+        for n_c in (48, 56):   # two shapes → two traces, one line
+            q = jnp.asarray(r.normal(size=(16, 4)), jnp.float32)
+            c = jnp.asarray(r.normal(size=(n_c, 4)), jnp.float32)
+            stream_ops.knn_stream_topk(
+                q, c, qid, jnp.arange(n_c, dtype=jnp.int32),
+                jnp.float32(1e9), k=big_k, mode="interpret")
+    hits = [rec for rec in caplog.records if "MAX_UNROLLED_K" in rec.message]
+    assert len(hits) == 1, [rec.message for rec in caplog.records]
+    # a mode that never wanted the kernel (explicit ref) stays silent
+    caplog.clear()
+    monkeypatch.setattr(stream_ops, "_oversized_k_warned", False)
+    with caplog.at_level("WARNING", logger="repro.kernels.knn_stream.ops"):
+        q = jnp.asarray(r.normal(size=(16, 4)), jnp.float32)
+        c = jnp.asarray(r.normal(size=(40, 4)), jnp.float32)
+        stream_ops.knn_stream_topk(
+            q, c, qid, jnp.arange(40, dtype=jnp.int32),
+            jnp.float32(1e9), k=big_k, mode="ref")
+    assert not [r2 for r2 in caplog.records if "MAX_UNROLLED_K" in r2.message]
 
 
 # ---------------------------------------------------------------------------
@@ -187,6 +275,36 @@ def test_dense_fused_no_materialized_distance_tile():
         "fused backend materialized a per-query (B, budget, n) diff tensor"
     # the streaming kernel is present and fed by the shared-candidate path
     assert "knn_stream" in fused_jaxpr or "pallas_call" in fused_jaxpr
+
+
+def test_dense_fused_no_gathered_candidate_copy():
+    """ISSUE 10 acceptance: the scalar-prefetch path DMAs corpus blocks
+    straight from HBM inside the kernel — its jaxpr holds NO gathered
+    (budget, dim) / (tiles, budget, dim) f32 candidate copy. The legacy
+    gather engine (still serving oversized k) materializes exactly that
+    operand, giving the positive control for the regex."""
+    pts_r, idx, qids, eps = _dense_fixture(m=4)
+    dim = pts_r.shape[1]
+    qb, budget, block_c = 128, 1024, 128
+    # the padded corpus is 512 rows here, so f32[...,1024,6] can only be
+    # a gathered candidate operand — keep the regex unambiguous
+    assert pts_r.shape[0] <= 512 < budget
+
+    def run(k):
+        def f(pr, q, e):
+            return dense_lib.dense_join(
+                idx, pr, q, e, k=k, budget=budget, query_block=qb,
+                block_c=block_c, backend="fused")
+        return str(jax.make_jaxpr(f)(pts_r, qids, eps))
+
+    prefetch_jaxpr = run(3)
+    legacy_jaxpr = run(stream_kernel.MAX_UNROLLED_K + 1)
+    gathered = re.compile(rf"f32\[(?:\d+,)?{budget},{dim}\]")
+    assert gathered.search(legacy_jaxpr), \
+        "positive control: the legacy fused path must gather candidates"
+    assert not gathered.search(prefetch_jaxpr), \
+        "prefetch fused path materialized a gathered candidate copy"
+    assert "pallas_call" in prefetch_jaxpr
 
 
 # ---------------------------------------------------------------------------
